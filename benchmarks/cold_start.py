@@ -1,0 +1,57 @@
+"""Paper Figs 7-8: cold-start percentage vs memory, split sweep vs baseline.
+
+Uses the vmapped sweep (beyond-paper capability): every (memory x split)
+KiSS configuration in one jit, plus the baseline row.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Policy, metrics_to_result, sweep_baseline, sweep_kiss
+
+from .common import GB, MEMORY_GB, SPLITS, csv_line, paper_trace, timed
+
+
+def run() -> list[str]:
+    tr = paper_trace()
+    mems = [gb * GB for gb in MEMORY_GB]
+    grid, dt_k = timed(sweep_kiss, tr, mems, SPLITS, [Policy.LRU], 1024)
+    base, dt_b = timed(sweep_baseline, tr, mems, [Policy.LRU], 1024)
+    n_runs = len(mems) * len(SPLITS) + len(mems)
+    us = (dt_k + dt_b) * 1e6 / n_runs
+
+    out = []
+    best_split, best_val = None, None
+    i = 0
+    table = {}
+    for gi, gb in enumerate(MEMORY_GB):
+        row = {}
+        for si, frac in enumerate(SPLITS):
+            res = metrics_to_result(grid[gi * len(SPLITS) + si])
+            row[frac] = res.overall.cold_start_pct
+        bres = metrics_to_result(base[gi])
+        table[gb] = (bres.overall.cold_start_pct, row)
+
+    # headline: best reduction for the 80-20 split in the constrained band
+    reductions = []
+    for gb in MEMORY_GB:
+        b, row = table[gb]
+        k = row[0.8]
+        out.append(csv_line(f"fig7_cold_pct_{gb}gb_baseline", us, f"{b:.1f}"))
+        out.append(csv_line(f"fig7_cold_pct_{gb}gb_kiss80_20", us, f"{k:.1f}"))
+        if b > 5.0:
+            reductions.append((1 - k / b) * 100)
+    best = max(reductions) if reductions else 0.0
+    out.append(csv_line("fig8_best_cold_start_reduction_pct", us,
+                        f"{best:.1f} (paper: up to 60)"))
+
+    # split comparison at 4 GB (the paper's Fig 7 discussion point)
+    b4, row4 = table[4]
+    for frac in SPLITS:
+        out.append(csv_line(f"fig7_cold_pct_4gb_split{int(frac*100)}", us,
+                            f"{row4[frac]:.1f}"))
+    best_frac = min(row4, key=row4.get)
+    out.append(csv_line("fig7_best_split_at_4gb", us,
+                        f"{int(best_frac*100)}-{int((1-best_frac)*100)} "
+                        f"(paper: 80-20)"))
+    return out

@@ -1,0 +1,39 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (KissConfig, Policy, simulate_baseline_jax,
+                        simulate_kiss_jax)
+from repro.workloads import edge_trace
+
+GB = 1024.0
+
+# the paper's evaluation sweep (§4.1: results focus on 1-24 GB)
+MEMORY_GB = [2, 3, 4, 6, 8, 10, 12, 16, 24]
+SPLITS = [0.9, 0.8, 0.7, 0.6, 0.5]
+
+
+def paper_trace(seed: int = 0, duration_s: float = 3600.0):
+    return edge_trace(seed=seed, duration_s=duration_s)
+
+
+def timed(fn, *args, **kwargs):
+    t0 = time.perf_counter()
+    out = fn(*args, **kwargs)
+    return out, (time.perf_counter() - t0)
+
+
+def pair(trace, gb: float, policy=Policy.LRU, small_frac: float = 0.8,
+         max_slots: int = 1024):
+    base = simulate_baseline_jax(gb * GB, trace, policy, max_slots)
+    kiss = simulate_kiss_jax(
+        KissConfig(total_mb=gb * GB, small_frac=small_frac, policy=policy,
+                   max_slots=max_slots), trace)
+    return base, kiss
+
+
+def csv_line(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

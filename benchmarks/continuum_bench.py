@@ -1,0 +1,48 @@
+"""Beyond-paper: edge-cloud continuum end-to-end latency.
+
+The paper counts drops; this benchmark prices them — a dropped request
+executes in the cloud at +RTT.  Measured on a 4-node edge cluster (sticky
+per-function routing), KiSS trades a higher cloud-offload fraction for a
+lower end-to-end latency: its drops act as admission control against
+cold-start pile-ups (see EXPERIMENTS.md §Continuum).
+"""
+from __future__ import annotations
+
+from repro.core.continuum import ContinuumConfig, simulate_continuum
+from repro.workloads.chains import ChainConfig, chained_trace
+
+from .common import csv_line, paper_trace, timed
+
+
+def run() -> list[str]:
+    tr = paper_trace(duration_s=1800.0)
+    out = []
+    stats = {}
+    for kiss in (False, True):
+        cfg = ContinuumConfig(n_nodes=4, node_mb=2048.0, kiss=kiss)
+        res, dt = timed(simulate_continuum, cfg, tr)
+        name = "kiss" if kiss else "base"
+        stats[name] = (res, dt)
+        l = res.latency_stats()
+        out.append(csv_line(
+            f"continuum_{name}_4x2gb", dt * 1e6 / len(tr),
+            f"offload={res.offload_pct:.1f}% mean={l['mean_s']:.2f}s "
+            f"p95={l['p95_s']:.2f}s p99={l['p99_s']:.2f}s"))
+    b = stats["base"][0].latency_stats()["mean_s"]
+    k = stats["kiss"][0].latency_stats()["mean_s"]
+    out.append(csv_line("continuum_latency_improvement", 0.0,
+                        f"{(1 - k / b) * 100:.0f}% mean e2e latency reduction"
+                        f" (beyond-paper)"))
+
+    # chained workloads (paper §1.1 motivation)
+    (ctr, _), dt = timed(chained_trace, ChainConfig(duration_s=1800.0))
+    from repro.core import (KissConfig, Policy, simulate_baseline_jax,
+                            simulate_kiss_jax)
+    bb = simulate_baseline_jax(3 * 1024.0, ctr, Policy.LRU, 512)
+    kk = simulate_kiss_jax(KissConfig(total_mb=3 * 1024.0, max_slots=512),
+                           ctr)
+    out.append(csv_line(
+        "chains_cold_pct_3gb", dt * 1e6 / len(ctr),
+        f"base={bb.overall.cold_start_pct:.1f} "
+        f"kiss={kk.overall.cold_start_pct:.1f} (chained invocations)"))
+    return out

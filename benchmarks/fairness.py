@@ -1,0 +1,29 @@
+"""Paper Figs 10-13: per-class cold-start and drop percentages (fairness)."""
+from __future__ import annotations
+
+from .common import MEMORY_GB, csv_line, pair, paper_trace, timed
+
+
+def run() -> list[str]:
+    tr = paper_trace()
+    out = []
+    for gb in (2, 4, 8, 16):
+        (base, kiss), dt = timed(pair, tr, gb)
+        us = dt * 1e6 / 2
+        out.append(csv_line(
+            f"fig10_small_cold_pct_{gb}gb", us,
+            f"base={base.small.cold_start_pct:.1f} "
+            f"kiss={kiss.small.cold_start_pct:.1f}"))
+        out.append(csv_line(
+            f"fig11_large_cold_pct_{gb}gb", us,
+            f"base={base.large.cold_start_pct:.1f} "
+            f"kiss={kiss.large.cold_start_pct:.1f}"))
+        out.append(csv_line(
+            f"fig12_small_drop_pct_{gb}gb", us,
+            f"base={base.small.drop_pct:.1f} "
+            f"kiss={kiss.small.drop_pct:.1f}"))
+        out.append(csv_line(
+            f"fig13_large_drop_pct_{gb}gb", us,
+            f"base={base.large.drop_pct:.1f} "
+            f"kiss={kiss.large.drop_pct:.1f}"))
+    return out

@@ -1,0 +1,81 @@
+"""Render the paper's key figures as PNGs under results/figures/.
+
+  PYTHONPATH=src python -m benchmarks.figures
+"""
+from __future__ import annotations
+
+import os
+
+import matplotlib
+matplotlib.use("Agg")
+import matplotlib.pyplot as plt
+import numpy as np
+
+from repro.core import (KissConfig, Policy, metrics_to_result,
+                        simulate_baseline_jax, sweep_kiss)
+from repro.core.adaptive import AdaptiveConfig, simulate_kiss_adaptive
+
+from .common import GB, MEMORY_GB, SPLITS, paper_trace
+
+OUT = "results/figures"
+
+
+def main():
+    os.makedirs(OUT, exist_ok=True)
+    tr = paper_trace()
+    mems = [gb * GB for gb in MEMORY_GB]
+    grid = sweep_kiss(tr, mems, SPLITS, [Policy.LRU], 1024)
+    base, kiss80, ada = [], {f: [] for f in SPLITS}, []
+    base_drop, kiss_drop, ada_drop = [], [], []
+    for mi, gb in enumerate(MEMORY_GB):
+        b = simulate_baseline_jax(gb * GB, tr, Policy.LRU, 1024)
+        base.append(b.overall.cold_start_pct)
+        base_drop.append(b.overall.drop_pct)
+        for si, f in enumerate(SPLITS):
+            r = metrics_to_result(grid[mi * len(SPLITS) + si])
+            kiss80[f].append(r.overall.cold_start_pct)
+            if f == 0.8:
+                kiss_drop.append(r.overall.drop_pct)
+        a, _ = simulate_kiss_adaptive(
+            AdaptiveConfig(base=KissConfig(total_mb=gb * GB,
+                                           max_slots=1024),
+                           epoch_events=512), tr)
+        ada.append(a.overall.cold_start_pct)
+        ada_drop.append(a.overall.drop_pct)
+
+    # Fig 7: cold start across split configurations
+    plt.figure(figsize=(7, 4.5))
+    for f in SPLITS:
+        plt.plot(MEMORY_GB, kiss80[f],
+                 marker="o", label=f"KiSS {int(f*100)}-{int(100-f*100)}")
+    plt.plot(MEMORY_GB, base, "k--s", label="baseline (unified)")
+    plt.xlabel("memory pool (GB)"); plt.ylabel("cold start %")
+    plt.title("Fig 7 — cold-start % across configurations")
+    plt.legend(); plt.grid(alpha=.3); plt.tight_layout()
+    plt.savefig(f"{OUT}/fig7_cold_start_splits.png", dpi=120)
+
+    # Fig 8: 80-20 vs baseline
+    plt.figure(figsize=(7, 4.5))
+    plt.plot(MEMORY_GB, base, "k--s", label="baseline")
+    plt.plot(MEMORY_GB, kiss80[0.8], "r-o", label="KiSS 80-20")
+    plt.plot(MEMORY_GB, ada, "b-^", label="KiSS adaptive (ours)")
+    plt.xlabel("memory pool (GB)"); plt.ylabel("cold start %")
+    plt.title("Fig 8 — KiSS 80-20 vs baseline (+ adaptive)")
+    plt.legend(); plt.grid(alpha=.3); plt.tight_layout()
+    plt.savefig(f"{OUT}/fig8_cold_start_8020.png", dpi=120)
+
+    # Fig 9: drops
+    plt.figure(figsize=(7, 4.5))
+    plt.plot(MEMORY_GB, base_drop, "k--s", label="baseline")
+    plt.plot(MEMORY_GB, kiss_drop, "r-o", label="KiSS 80-20")
+    plt.plot(MEMORY_GB, ada_drop, "b-^", label="KiSS adaptive (ours)")
+    plt.xlabel("memory pool (GB)"); plt.ylabel("drop %")
+    plt.title("Fig 9 — drop % across memory configurations")
+    plt.legend(); plt.grid(alpha=.3); plt.tight_layout()
+    plt.savefig(f"{OUT}/fig9_drops.png", dpi=120)
+
+    print(f"wrote {OUT}/fig7..9*.png")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Paper Figs 14-16: KiSS's gain must hold across LRU / GreedyDual / FREQ.
+
+Uses the vmapped sweep to run all (memory x policy) configs concurrently —
+the whole three-figure grid is two device programs.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Policy, metrics_to_result, sweep_baseline, sweep_kiss
+
+from .common import GB, csv_line, paper_trace, timed
+
+MEMS_GB = [4, 6, 8, 10, 16]
+POLICIES = [Policy.LRU, Policy.GREEDY_DUAL, Policy.FREQ]
+
+
+def run() -> list[str]:
+    tr = paper_trace()
+    mems = [gb * GB for gb in MEMS_GB]
+    grid, dt_k = timed(sweep_kiss, tr, mems, [0.8], POLICIES, 1024)
+    base, dt_b = timed(sweep_baseline, tr, mems, POLICIES, 1024)
+    us = (dt_k + dt_b) * 1e6 / (len(mems) * len(POLICIES) * 2)
+
+    out = []
+    spread_max = 0.0
+    for gi, gb in enumerate(MEMS_GB):
+        vals = {}
+        for pi, pol in enumerate(POLICIES):
+            k = metrics_to_result(grid[gi * len(POLICIES) + pi])
+            b = metrics_to_result(base[gi * len(POLICIES) + pi])
+            vals[pol.name] = (b.overall.cold_start_pct,
+                              k.overall.cold_start_pct,
+                              k.small.cold_start_pct,
+                              k.large.cold_start_pct)
+        row = " ".join(f"{n}:{v[0]:.1f}->{v[1]:.1f}"
+                       for n, v in vals.items())
+        out.append(csv_line(f"fig15_overall_cold_{gb}gb", us, row))
+        out.append(csv_line(
+            f"fig14_small_cold_{gb}gb", us,
+            " ".join(f"{n}:{v[2]:.1f}" for n, v in vals.items())))
+        out.append(csv_line(
+            f"fig16_large_cold_{gb}gb", us,
+            " ".join(f"{n}:{v[3]:.1f}" for n, v in vals.items())))
+        kiss_vals = [v[1] for v in vals.values()]
+        spread_max = max(spread_max, max(kiss_vals) - min(kiss_vals))
+    out.append(csv_line("fig14_16_policy_spread_max_pp", us,
+                        f"{spread_max:.1f} (paper: negligible differences)"))
+    return out

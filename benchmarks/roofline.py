@@ -1,0 +1,96 @@
+"""Roofline analysis per (architecture x input shape) on the single-pod
+mesh, derived from the dry-run's compiled artifacts (results/dryrun_single.json).
+
+Three terms (seconds), per the mandate:
+
+  compute    = HLO_FLOPs   / (chips * 197e12  bf16 FLOP/s)
+  memory     = HLO_bytes   / (chips * 819e9   B/s HBM)
+  collective = coll_bytes  / (chips * 50e9    B/s ICI link)
+
+HLO totals use the layer-corrected numbers (total_flops etc. — XLA's
+cost_analysis counts while-loop bodies once; see launch/dryrun.py).  The
+dry-run reports PER-DEVICE HLO (post-SPMD), so chips divides only the
+hardware constants, not the totals again.
+
+MODEL_FLOPS = 6*N*T (train) or 2*N*T (inference), N = active params.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+from .common import csv_line
+
+RESULTS = os.environ.get("REPRO_DRYRUN_JSON", "results/dryrun_single.json")
+
+SHAPE_TOKENS = {
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 1 * 128,
+    "long_500k": 1 * 1,
+}
+
+
+def model_flops(rec: dict) -> float:
+    n = rec.get("active_params") or rec.get("params", 0)
+    t = SHAPE_TOKENS[rec["shape"]]
+    mult = 6 if rec["shape"] == "train_4k" else 2
+    return mult * n * t
+
+
+def terms(rec: dict) -> dict | None:
+    # per-device HLO numbers (post-SPMD partitioning)
+    flops = rec.get("total_flops", rec.get("flops"))
+    byts = rec.get("total_bytes_accessed", rec.get("bytes_accessed"))
+    coll = rec.get("total_collective_bytes")
+    if coll is None:
+        coll = rec.get("collectives", {}).get("total_bytes")
+    if flops is None or byts is None or coll is None:
+        return None
+    compute = flops / PEAK_FLOPS_BF16
+    memory = byts / HBM_BW
+    collective = coll / ICI_BW
+    dominant = max(("compute", compute), ("memory", memory),
+                   ("collective", collective), key=lambda kv: kv[1])
+    mf = model_flops(rec)
+    chips = rec.get("chips", 256)
+    useful = mf / (flops * chips) if flops else 0.0
+    return {"compute_s": compute, "memory_s": memory,
+            "collective_s": collective, "dominant": dominant[0],
+            "model_flops": mf, "useful_ratio": useful}
+
+
+def load(path: str = RESULTS) -> list[dict]:
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def run() -> list[str]:
+    recs = [r for r in load() if r.get("mesh") == "16x16"
+            and "error" not in r]
+    out = []
+    if not recs:
+        return [csv_line("roofline_missing", 0.0,
+                         "run launch/dryrun.py --all --roofline first")]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        t = terms(r)
+        if t is None:
+            continue
+        out.append(csv_line(
+            f"roofline_{r['arch']}_{r['shape']}",
+            t[t['dominant'] + '_s'] * 1e6,
+            f"compute={t['compute_s']:.2e}s memory={t['memory_s']:.2e}s "
+            f"collective={t['collective_s']:.2e}s dom={t['dominant']} "
+            f"useful={t['useful_ratio']:.2f}"))
+    doms = {}
+    for r in recs:
+        t = terms(r)
+        if t:
+            doms[t["dominant"]] = doms.get(t["dominant"], 0) + 1
+    out.append(csv_line("roofline_dominant_histogram", 0.0,
+                        " ".join(f"{k}:{v}" for k, v in doms.items())))
+    return out

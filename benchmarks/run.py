@@ -1,0 +1,49 @@
+"""Benchmark driver — one module per paper figure/table plus beyond-paper
+benchmarks.  Prints ``name,us_per_call,derived`` CSV lines.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run fig7 fig9  # filter by prefix
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (cold_start, continuum_bench, drops, fairness,
+                   policy_independence, roofline, serving_bench, stress,
+                   sweep_speed, workload_analysis)
+
+    suites = [
+        ("workload_analysis(Figs2-5)", workload_analysis.run),
+        ("cold_start(Figs7-8)", cold_start.run),
+        ("drops(Fig9)", drops.run),
+        ("fairness(Figs10-13)", fairness.run),
+        ("policy_independence(Figs14-16)", policy_independence.run),
+        ("stress(sec6.5)", stress.run),
+        ("serving_integration", serving_bench.run),
+        ("sweep_speed(beyond-paper)", sweep_speed.run),
+        ("continuum+chains(beyond-paper)", continuum_bench.run),
+        ("roofline(dry-run)", roofline.run),
+    ]
+    filters = sys.argv[1:]
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, fn in suites:
+        if filters and not any(f in name for f in filters):
+            continue
+        print(f"# --- {name} ---", flush=True)
+        try:
+            for line in fn():
+                print(line, flush=True)
+        except Exception as e:
+            failed += 1
+            print(f"{name},0,ERROR:{e}")
+            traceback.print_exc()
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

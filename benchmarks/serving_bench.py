@@ -1,0 +1,37 @@
+"""Serving-integration benchmark: KiSS vs unified pool arbitrating REAL
+model containers (reduced configs, measured cold start = init + compile)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.types import Policy
+from repro.launch.serve import default_registry, run as serve_run, \
+    synthesize_requests
+from repro.serving import KissServer, UnifiedServer
+
+from .common import csv_line
+
+
+def run() -> list[str]:
+    registry = default_registry(6)
+    reqs = synthesize_requests(registry, 30, seed=0)
+    ckw = dict(max_batch=2, max_len=64)
+    kiss = KissServer(registry, total_mb=40.0, small_frac=0.8,
+                      threshold_mb=9.0, policy=Policy.LRU,
+                      container_kwargs=ckw)
+    stats_k = serve_run(kiss, registry, list(reqs))
+    base = UnifiedServer(registry, total_mb=40.0, threshold_mb=9.0,
+                         policy=Policy.LRU, container_kwargs=ckw)
+    stats_b = serve_run(base, registry, list(reqs))
+    us = stats_k["wall_s"] * 1e6 / max(stats_k["total"], 1)
+    return [
+        csv_line("serving_cold_pct", us,
+                 f"base={stats_b['cold_start_pct']:.1f} "
+                 f"kiss={stats_k['cold_start_pct']:.1f}"),
+        csv_line("serving_warm_vs_cold_ms", us,
+                 f"warm={stats_k['mean_warm_ms']:.0f} "
+                 f"cold={stats_k['mean_cold_ms']:.0f}"),
+        csv_line("serving_drop_pct", us,
+                 f"base={stats_b['drop_pct']:.1f} "
+                 f"kiss={stats_k['drop_pct']:.1f}"),
+    ]

@@ -1,0 +1,44 @@
+"""Paper §6.5 stress test: a 2-hour high-rate trace on a 10 GB pool.
+
+The paper runs 4-5 M invocations; default here is a 1/10-rate variant to
+keep CI latency sane (REPRO_STRESS_FULL=1 runs the full-rate trace).  The
+validated claim is the hit-rate multiplier under saturation (paper: 0.38%
+-> 2.85%, a ~7.5x), plus sustained throughput.
+"""
+from __future__ import annotations
+
+import os
+
+from repro.core import KissConfig, Policy, simulate_baseline_jax, \
+    simulate_kiss_jax
+from repro.workloads import stress_trace
+
+from .common import GB, csv_line, timed
+
+
+def run() -> list[str]:
+    full = os.environ.get("REPRO_STRESS_FULL", "0") == "1"
+    rps = 600.0 if full else 60.0
+    # pool scales with the rate so the saturation regime matches the
+    # paper's (10 GB at the full 600 rps -> 1 GB at the CI 60 rps).
+    pool = 10 * GB * (rps / 600.0)
+    tr = stress_trace(seed=0, duration_s=2 * 3600.0, rps=rps)
+    n = len(tr)
+    base, dt_b = timed(simulate_baseline_jax, pool, tr, Policy.LRU, 1024)
+    kiss, dt_k = timed(
+        simulate_kiss_jax,
+        KissConfig(total_mb=pool, max_slots=1024), tr)
+    us = (dt_b + dt_k) * 1e6 / (2 * n)  # per-event cost
+    b, k = base.overall, kiss.overall
+    mult = (k.hit_rate / b.hit_rate) if b.hit_rate > 0 else float("inf")
+    return [
+        csv_line("stress_events", us, f"{n} (paper: 4-5M full-rate)"),
+        csv_line("stress_hit_rate_pct", us,
+                 f"base={b.hit_rate:.2f} kiss={k.hit_rate:.2f} "
+                 f"mult={mult:.1f}x (paper: 0.38->2.85 = 7.5x)"),
+        csv_line("stress_serviceable", us,
+                 f"base={b.serviceable} kiss={k.serviceable} "
+                 f"(paper: 160k vs 150k)"),
+        csv_line("stress_sim_throughput_events_per_s", us,
+                 f"{n / max(dt_k, 1e-9):.0f}"),
+    ]

@@ -1,0 +1,58 @@
+"""Beyond-paper: vmapped configuration sweep vs sequential evaluation.
+
+The paper evaluates each (memory, split, policy) configuration as a
+separate simulator run.  Our JAX formulation vmaps the whole grid into one
+device program; this benchmark measures the speedup on the paper's Fig 7
+grid (9 memories x 5 splits).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import KissConfig, Policy, simulate_kiss_jax, sweep_kiss
+
+from .common import GB, MEMORY_GB, SPLITS, csv_line, paper_trace
+
+
+def run() -> list[str]:
+    tr = paper_trace(duration_s=1800.0)
+    mems = [gb * GB for gb in MEMORY_GB]
+
+    t0 = time.perf_counter()
+    sweep_kiss(tr, mems, SPLITS, [Policy.LRU], 512)
+    t_warm = time.perf_counter() - t0  # includes compile
+    t0 = time.perf_counter()
+    sweep_kiss(tr, mems, SPLITS, [Policy.LRU], 512)
+    t_vmap = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    for tm in mems:
+        for fr in SPLITS:
+            simulate_kiss_jax(KissConfig(total_mb=tm, small_frac=fr,
+                                         max_slots=512), tr)
+    t_seq = time.perf_counter() - t0
+
+    # the paper's methodology: a sequential python DES per config —
+    # time 2 configs of the oracle and extrapolate
+    from repro.core import simulate_kiss
+    t0 = time.perf_counter()
+    for tm in mems[:1]:
+        for fr in SPLITS[:2]:
+            simulate_kiss(KissConfig(total_mb=tm, small_frac=fr,
+                                     max_slots=512), tr)
+    t_oracle = (time.perf_counter() - t0) / 2 * len(mems) * len(SPLITS)
+
+    n = len(mems) * len(SPLITS)
+    return [
+        csv_line("sweep_vmap_grid_s", t_vmap * 1e6 / n,
+                 f"{t_vmap:.2f}s total ({n} configs, one jit)"),
+        csv_line("sweep_jit_sequential_s", t_seq * 1e6 / n,
+                 f"{t_seq:.2f}s total"),
+        csv_line("sweep_python_oracle_est_s", t_oracle * 1e6 / n,
+                 f"{t_oracle:.1f}s (paper-style sequential DES, extrap.)"),
+        csv_line("sweep_speedup_vs_oracle", t_vmap * 1e6 / n,
+                 f"{t_oracle / max(t_vmap, 1e-9):.1f}x on 1 CPU core "
+                 f"(beyond-paper: the win is batched execution on "
+                 f"accelerators; per-config the python DES is competitive "
+                 f"at this trace size)"),
+    ]

@@ -1,0 +1,53 @@
+"""Paper Figs 2-5: workload analysis of the (synthetic) Azure-like trace."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.analyzer import (analyze, classify, invocation_ratio,
+                                 percentile_distribution,
+                                 sliding_window_iats)
+from repro.workloads import synthesize_apps
+
+from .common import csv_line, paper_trace, timed
+
+
+def fig2_memory_footprint() -> list[str]:
+    apps, dt = timed(synthesize_apps, 500, 0)
+    fm = apps.function_memory()
+    p, v = percentile_distribution(fm, [50, 90, 98, 99])
+    small = fm[classify(fm) == 0]
+    return [csv_line("fig2_function_memory_p98_small_mb", dt * 1e6,
+                     f"{np.percentile(small, 98):.0f} (paper: <225)"),
+            csv_line("fig2_function_memory_max_mb", dt * 1e6,
+                     f"{fm.max():.0f} (paper: ~500)")]
+
+
+def fig3_invocation_ratio() -> list[str]:
+    tr = paper_trace()
+    r, dt = timed(invocation_ratio, tr)
+    return [csv_line("fig3_small_to_large_invocation_ratio", dt * 1e6,
+                     f"{r['ratio']:.2f} (paper: 4-6.5x)")]
+
+
+def fig4_iats() -> list[str]:
+    tr = paper_trace()
+    iats, dt = timed(sliding_window_iats, tr, 3600.0, 1800.0)
+    s = float(np.mean(iats["small"])) if len(iats["small"]) else float("nan")
+    l = float(np.mean(iats["large"])) if len(iats["large"]) else float("nan")
+    return [csv_line("fig4_mean_iat_small_s", dt * 1e6, f"{s:.1f}"),
+            csv_line("fig4_mean_iat_large_s", dt * 1e6,
+                     f"{l:.1f} (paper: similar across classes)")]
+
+
+def fig5_cold_start_latency() -> list[str]:
+    tr = paper_trace()
+    prof, dt = timed(analyze, tr)
+    return [csv_line("fig5_cold_latency_p85_small_s", dt * 1e6,
+                     f"{prof.small_cold_p85:.1f} (paper: ~15)"),
+            csv_line("fig5_cold_latency_p85_large_s", dt * 1e6,
+                     f"{prof.large_cold_p85:.1f} (paper: up to ~100)")]
+
+
+def run() -> list[str]:
+    return (fig2_memory_footprint() + fig3_invocation_ratio()
+            + fig4_iats() + fig5_cold_start_latency())

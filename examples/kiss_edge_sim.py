@@ -1,0 +1,58 @@
+"""Full paper-style evaluation sweep + the beyond-paper adaptive partitioner.
+
+Reproduces the Fig 7/8/9 sweeps (memory 2-24 GB x splits x baseline) using
+the vmapped simulator, then shows adaptive partitioning recovering the
+static split's mid-band drop regression (paper §7.3 future work).
+
+  PYTHONPATH=src python examples/kiss_edge_sim.py
+"""
+import numpy as np
+
+from repro.core import (KissConfig, Policy, metrics_to_result,
+                        simulate_baseline_jax, sweep_kiss)
+from repro.core.adaptive import AdaptiveConfig, simulate_kiss_adaptive
+from repro.workloads import edge_trace
+
+GB = 1024.0
+MEMS = [2, 3, 4, 6, 8, 10, 12, 16]
+SPLITS = [0.9, 0.8, 0.7, 0.5]
+
+
+def main():
+    trace = edge_trace(seed=0, duration_s=3600)
+    print(f"{len(trace)} invocations; sweeping "
+          f"{len(MEMS) * len(SPLITS)} KiSS configs in ONE vmapped jit...")
+    grid = sweep_kiss(trace, [m * GB for m in MEMS], SPLITS, [Policy.LRU],
+                      max_slots=1024)
+
+    hdr = "mem   baseline | " + " | ".join(
+        f"{int(f*100)}-{int(100-f*100)}" for f in SPLITS) + " | adaptive"
+    print("\ncold-start %          " + hdr)
+    for mi, m in enumerate(MEMS):
+        base = simulate_baseline_jax(m * GB, trace, Policy.LRU, 1024)
+        ada, _ = simulate_kiss_adaptive(
+            AdaptiveConfig(base=KissConfig(total_mb=m * GB, max_slots=1024),
+                           epoch_events=512), trace)
+        cells = []
+        for si in range(len(SPLITS)):
+            r = metrics_to_result(grid[mi * len(SPLITS) + si])
+            cells.append(f"{r.overall.cold_start_pct:5.1f}")
+        print(f"{m:3d}GB  {base.overall.cold_start_pct:7.1f} | "
+              + " | ".join(cells)
+              + f" | {ada.overall.cold_start_pct:7.1f}")
+
+    print("\ndrop %")
+    for mi, m in enumerate(MEMS):
+        base = simulate_baseline_jax(m * GB, trace, Policy.LRU, 1024)
+        ada, fr = simulate_kiss_adaptive(
+            AdaptiveConfig(base=KissConfig(total_mb=m * GB, max_slots=1024),
+                           epoch_events=512), trace)
+        r80 = metrics_to_result(grid[mi * len(SPLITS) + 1])
+        print(f"{m:3d}GB  base={base.overall.drop_pct:5.1f}  "
+              f"kiss80-20={r80.overall.drop_pct:5.1f}  "
+              f"adaptive={ada.overall.drop_pct:5.1f} "
+              f"(final split {fr[-1]:.2f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Checkpointing: flat-key npz save/restore of arbitrary pytrees."""
+from .ckpt import save_checkpoint, restore_checkpoint, latest_step
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]

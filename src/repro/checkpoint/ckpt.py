@@ -1,0 +1,64 @@
+"""Pytree checkpointing to .npz (no orbax offline).
+
+Arrays are gathered to host (fully addressable on the CPU test rig; on a
+real multi-host mesh this is where a per-host shard dump would slot in —
+the flat-key format is shard-friendly because every leaf is independent).
+Tree structure is stored as flattened key paths, restored with exact dtype
+and structure validation against a template pytree.
+"""
+from __future__ import annotations
+
+import os
+import re
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save_checkpoint(directory: str, step: int, tree) -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    tmp = path + ".tmp.npz"  # ends in .npz so np.savez won't rename it
+    np.savez(tmp, **_flatten(tree))
+    os.replace(tmp, path)
+    return path
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: int, template):
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    with np.load(path) as data:
+        leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+        out = []
+        for path_elts, leaf in leaves_paths:
+            key = "/".join(_path_str(p) for p in path_elts)
+            arr = data[key]
+            if arr.shape != leaf.shape:
+                raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+            out.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)

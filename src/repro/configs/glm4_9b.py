@@ -1,0 +1,16 @@
+"""glm4-9b [dense] — RoPE, GQA kv=2 [hf:THUDM/glm-4-9b]."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="glm4-9b",
+    arch_type="dense",
+    n_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=2,
+    d_ff=13696,
+    vocab_size=151552,
+    head_dim=128,
+    rope_theta=1e4,
+    source="hf:THUDM/glm-4-9b",
+)

@@ -1,0 +1,25 @@
+"""KiSS core: the paper's contribution.
+
+* ``types``          — trace/config/metric datatypes
+* ``pool_ref``       — sequential oracle warm pool
+* ``simulator_ref``  — sequential oracle simulator
+* ``pool_jax``       — fixed-slot JAX warm pool (one-event transition)
+* ``simulator_jax``  — lax.scan simulator + vmapped config sweeps
+* ``analyzer``       — workload analyzer (paper §2.5, Fig 6)
+* ``adaptive``       — beyond-paper adaptive partitioning (paper §7.3)
+"""
+from .types import (LARGE, SMALL, ClassMetrics, KissConfig, Policy,
+                    PoolConfig, SimResult, Trace)
+from .simulator_ref import simulate_baseline, simulate_kiss
+from .simulator_jax import (metrics_to_result, simulate_baseline_jax,
+                            simulate_kiss_jax, sweep_baseline, sweep_kiss)
+from .analyzer import WorkloadProfile, analyze, classify
+from .continuum import ContinuumConfig, ContinuumResult, simulate_continuum
+
+__all__ = [
+    "LARGE", "SMALL", "ClassMetrics", "KissConfig", "Policy", "PoolConfig",
+    "SimResult", "Trace", "simulate_baseline", "simulate_kiss",
+    "simulate_baseline_jax", "simulate_kiss_jax", "sweep_baseline",
+    "sweep_kiss", "metrics_to_result", "WorkloadProfile", "analyze",
+    "classify",
+]

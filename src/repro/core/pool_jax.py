@@ -1,0 +1,160 @@
+"""JAX warm pool: fixed-slot state + one-event transition function.
+
+This is the paper's warm pool re-expressed as a pure function over arrays so
+that an entire trace is a single ``jax.lax.scan`` and whole *families* of
+configurations (split ratios x policies x pool sizes) sweep in one ``vmap``
+(see ``simulator_jax.py``).  Semantics are bit-compatible with the sequential
+oracle in ``pool_ref.py`` (property-tested):
+
+* greedy eviction in (priority, launch-seq) order == sort + prefix-sum over
+  freed bytes, evicting the minimal prefix that covers the deficit;
+* busy containers are never evicted;
+* GreedyDual clock inflates to the max evicted priority.
+
+The policy is carried *in the state* (``policy`` int32 scalar) rather than as
+a static Python value, so a single jitted simulator can be vmapped across
+LRU/GD/FREQ as data.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .types import Policy, PoolConfig
+
+_INF = jnp.float32(jnp.inf)
+
+
+class PoolState(NamedTuple):
+    # per-slot arrays (S = max_slots)
+    func_id: jax.Array    # i32[S], -1 = empty
+    size: jax.Array       # f32[S] MB
+    last_use: jax.Array   # f32[S]
+    freq: jax.Array       # f32[S]
+    gd_pri: jax.Array     # f32[S]
+    busy_until: jax.Array # f32[S]
+    seq: jax.Array        # f32[S] launch sequence (tie-break)
+    valid: jax.Array      # bool[S]
+    # scalars
+    capacity: jax.Array   # f32
+    free: jax.Array       # f32
+    clock: jax.Array      # f32 GreedyDual inflation clock
+    next_seq: jax.Array   # f32
+    policy: jax.Array     # i32 (Policy enum value)
+
+
+class Event(NamedTuple):
+    t: jax.Array
+    func_id: jax.Array
+    size: jax.Array
+    cls: jax.Array
+    warm: jax.Array
+    cold: jax.Array
+
+
+# outcome codes
+HIT, MISS, DROP = 0, 1, 2
+
+
+def init_pool(cfg: PoolConfig) -> PoolState:
+    s = cfg.max_slots
+    return PoolState(
+        func_id=jnp.full((s,), -1, jnp.int32),
+        size=jnp.zeros((s,), jnp.float32),
+        last_use=jnp.zeros((s,), jnp.float32),
+        freq=jnp.zeros((s,), jnp.float32),
+        gd_pri=jnp.zeros((s,), jnp.float32),
+        busy_until=jnp.zeros((s,), jnp.float32),
+        seq=jnp.zeros((s,), jnp.float32),
+        valid=jnp.zeros((s,), bool),
+        capacity=jnp.float32(cfg.capacity_mb),
+        free=jnp.float32(cfg.capacity_mb),
+        clock=jnp.float32(0.0),
+        next_seq=jnp.float32(1.0),
+        policy=jnp.int32(int(cfg.policy)),
+    )
+
+
+def _priority(p: PoolState) -> jax.Array:
+    """Eviction priority per slot (lower = evicted first)."""
+    return jnp.where(p.policy == int(Policy.LRU), p.last_use,
+                     jnp.where(p.policy == int(Policy.FREQ), p.freq,
+                               p.gd_pri))
+
+
+def _gd(clock, freq, cold_cost, size):
+    return clock + freq * cold_cost / jnp.maximum(size, 1e-6)
+
+
+def pool_step(p: PoolState, ev: Event) -> tuple[PoolState, jax.Array]:
+    """Process one invocation.  Returns (new_state, outcome code)."""
+    idle = p.valid & (p.busy_until <= ev.t)
+    match = idle & (p.func_id == ev.func_id)
+    any_hit = jnp.any(match)
+    cold_cost = ev.cold - ev.warm
+
+    # ---- HIT branch: touch the matching idle container with lowest seq ----
+    hit_slot = jnp.argmin(jnp.where(match, p.seq, _INF))
+    new_freq = p.freq[hit_slot] + 1.0
+    hit_state = p._replace(
+        last_use=p.last_use.at[hit_slot].set(ev.t),
+        freq=p.freq.at[hit_slot].set(new_freq),
+        gd_pri=p.gd_pri.at[hit_slot].set(
+            _gd(p.clock, new_freq, cold_cost, p.size[hit_slot])),
+        busy_until=p.busy_until.at[hit_slot].set(ev.t + ev.warm),
+    )
+
+    # ---- MISS branch: evict minimal (priority, seq)-prefix, then insert ----
+    deficit = ev.size - p.free
+    pri = jnp.where(idle, _priority(p), _INF)       # only idle are evictable
+    # order slots by (priority, seq): stable argsort of priority over a
+    # seq-sorted permutation.
+    by_seq = jnp.argsort(p.seq, stable=True)
+    order = by_seq[jnp.argsort(pri[by_seq], stable=True)]
+    sz_ord = jnp.where(idle[order], p.size[order], 0.0)
+    freed_before = jnp.cumsum(sz_ord) - sz_ord
+    evict_ord = idle[order] & (freed_before < deficit - 1e-9)
+    evict = jnp.zeros_like(p.valid).at[order].set(evict_ord)
+    freed = jnp.sum(jnp.where(evict, p.size, 0.0))
+    total_evictable = jnp.sum(jnp.where(idle, p.size, 0.0))
+
+    valid_after = p.valid & ~evict
+    empty_exists = jnp.any(~valid_after)
+    can_place = ((ev.size <= p.capacity + 1e-9)
+                 & (total_evictable >= deficit - 1e-9)
+                 & empty_exists)
+
+    ins = jnp.argmax(~valid_after)                  # first empty slot
+    is_gd = p.policy == int(Policy.GREEDY_DUAL)
+    new_clock = jnp.where(
+        is_gd,
+        jnp.maximum(p.clock, jnp.max(jnp.where(evict, p.gd_pri, -_INF))),
+        p.clock)
+    new_clock = jnp.where(jnp.any(evict) & is_gd, new_clock, p.clock)
+    miss_state = p._replace(
+        func_id=p.func_id.at[ins].set(ev.func_id),
+        size=p.size.at[ins].set(ev.size),
+        last_use=p.last_use.at[ins].set(ev.t),
+        freq=p.freq.at[ins].set(1.0),
+        gd_pri=p.gd_pri.at[ins].set(_gd(new_clock, 1.0, cold_cost, ev.size)),
+        busy_until=p.busy_until.at[ins].set(ev.t + ev.cold),
+        seq=p.seq.at[ins].set(p.next_seq),
+        valid=valid_after.at[ins].set(True),
+        free=p.free + freed - ev.size,
+        clock=new_clock,
+        next_seq=p.next_seq + 1.0,
+    )
+
+    # ---- select ----
+    outcome = jnp.where(any_hit, HIT, jnp.where(can_place, MISS, DROP))
+
+    def pick(h, m, d):
+        return jax.tree_util.tree_map(
+            lambda a, b, c: jnp.where(
+                outcome == HIT, a, jnp.where(outcome == MISS, b, c)),
+            h, m, d)
+
+    new_state = pick(hit_state, miss_state, p)
+    return new_state, outcome

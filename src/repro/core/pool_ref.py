@@ -1,0 +1,134 @@
+"""Pure-Python reference warm pool (the sequential oracle).
+
+This mirrors the modified-FaaSCache simulator the paper uses: a dynamic set
+of containers with greedy sequential eviction in replacement-policy order.
+The JAX pool (``pool_jax.py``) is property-tested to produce identical
+metrics on identical traces.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+
+import numpy as np
+
+from .types import ClassMetrics, Policy, PoolConfig
+
+_ids = itertools.count()
+
+
+def _f32(x) -> float:
+    """Round to float32 — mirrors the JAX pool's arithmetic step-by-step so
+    the oracle and the vectorized simulator are bit-compatible."""
+    return float(np.float32(x))
+
+
+@dataclasses.dataclass
+class Container:
+    func_id: int
+    size_mb: float
+    last_use: float
+    freq: float              # hit count on this container (1 at launch)
+    gd_priority: float       # GreedyDual priority at last touch
+    busy_until: float
+    uid: int = dataclasses.field(default_factory=lambda: next(_ids))
+
+
+class WarmPool:
+    """One warm pool with a replacement policy.
+
+    Eviction order (ascending priority = evicted first):
+      * LRU:          last_use
+      * FREQ:         freq
+      * GREEDY_DUAL:  gd_priority = clock + freq * cold_cost / size
+    Busy containers (``busy_until > now``) are never evicted.
+    """
+
+    def __init__(self, cfg: PoolConfig):
+        self.cfg = cfg
+        self.containers: list[Container] = []
+        self.free_mb = float(cfg.capacity_mb)
+        self.clock = 0.0  # GreedyDual inflation clock
+        # set by access(): containers evicted by the last event — lets the
+        # serving runtime destroy the corresponding real model instances.
+        self.last_victims: list[Container] = []
+
+    # -- policy priority --------------------------------------------------
+    def _priority(self, c: Container) -> float:
+        if self.cfg.policy == Policy.LRU:
+            return c.last_use
+        if self.cfg.policy == Policy.FREQ:
+            return c.freq
+        return c.gd_priority
+
+    def _gd(self, freq: float, cold_cost: float, size: float) -> float:
+        # f32-stepwise: clock + (freq * cost) / max(size, 1e-6)
+        m = _f32(_f32(freq) * _f32(cold_cost))
+        d = _f32(m / _f32(max(size, 1e-6)))
+        return _f32(_f32(self.clock) + d)
+
+    # -- event step --------------------------------------------------------
+    def access(self, t: float, func_id: int, size_mb: float,
+               warm_dur: float, cold_dur: float,
+               metrics: ClassMetrics) -> str:
+        """Process one invocation; returns 'hit' | 'miss' | 'drop'."""
+        self.last_victims = []
+        # 1) look for an idle container of this function (deterministic:
+        #    lowest uid, matching the JAX argmax-over-slot-order choice).
+        idle = [c for c in self.containers
+                if c.func_id == func_id and c.busy_until <= t]
+        cold_cost = _f32(_f32(cold_dur) - _f32(warm_dur))
+        if idle:
+            c = min(idle, key=lambda c: c.uid)
+            c.last_use = t
+            c.freq += 1.0
+            c.gd_priority = self._gd(c.freq, cold_cost, c.size_mb)
+            c.busy_until = _f32(_f32(t) + _f32(warm_dur))
+            metrics.hits += 1
+            metrics.exec_time = _f32(_f32(metrics.exec_time) + _f32(warm_dur))
+            return "hit"
+
+        # 2) cold start: must place a new container of size_mb.
+        if size_mb > self.cfg.capacity_mb + 1e-9:
+            metrics.drops += 1
+            return "drop"
+        deficit = size_mb - self.free_mb
+        if deficit > 1e-9:
+            evictable = sorted(
+                (c for c in self.containers if c.busy_until <= t),
+                key=lambda c: (self._priority(c), c.uid))
+            freed, victims = 0.0, []
+            for c in evictable:
+                if freed >= deficit - 1e-9:
+                    break
+                victims.append(c)
+                freed += c.size_mb
+            if freed < deficit - 1e-9:
+                metrics.drops += 1
+                return "drop"
+            for c in victims:
+                self.containers.remove(c)
+                self.free_mb += c.size_mb
+                if self.cfg.policy == Policy.GREEDY_DUAL:
+                    self.clock = max(self.clock, c.gd_priority)
+            self.last_victims = victims
+        new = Container(func_id=func_id, size_mb=size_mb, last_use=t,
+                        freq=1.0,
+                        gd_priority=self._gd(1.0, cold_cost, size_mb),
+                        busy_until=_f32(_f32(t) + _f32(cold_dur)))
+        self.containers.append(new)
+        self.free_mb -= size_mb
+        metrics.misses += 1
+        metrics.exec_time = _f32(_f32(metrics.exec_time) + _f32(cold_dur))
+        return "miss"
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def used_mb(self) -> float:
+        return self.cfg.capacity_mb - self.free_mb
+
+    def occupancy_ok(self) -> bool:
+        used = sum(c.size_mb for c in self.containers)
+        return math.isclose(used, self.used_mb, rel_tol=1e-6, abs_tol=1e-6) \
+            and used <= self.cfg.capacity_mb + 1e-6

@@ -1,0 +1,151 @@
+"""JAX discrete-event simulator: the whole trace is one ``lax.scan``.
+
+Three entry points:
+
+* ``simulate_baseline_jax`` — unified pool (paper baseline).
+* ``simulate_kiss_jax``     — KiSS two-pool policy.
+* ``sweep_kiss``            — BEYOND-PAPER: a single jit that vmaps the
+  simulator over a grid of (split fraction, policy, total memory) configs,
+  evaluating every configuration of the paper's Figs 7-16 concurrently.
+
+Metrics are accumulated per size class as an f32[2, 4] array with columns
+(hits, misses, drops, exec_time) and converted back to ``SimResult``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .pool_jax import Event, PoolState, init_pool, pool_step
+from .types import (ClassMetrics, KissConfig, PoolConfig, Policy, SimResult,
+                    Trace)
+
+
+def _trace_to_events(trace: Trace) -> Event:
+    return Event(
+        t=jnp.asarray(trace.t, jnp.float32),
+        func_id=jnp.asarray(trace.func_id, jnp.int32),
+        size=jnp.asarray(trace.size_mb, jnp.float32),
+        cls=jnp.asarray(trace.cls, jnp.int32),
+        warm=jnp.asarray(trace.warm_dur, jnp.float32),
+        cold=jnp.asarray(trace.cold_dur, jnp.float32),
+    )
+
+
+def _metrics_update(metrics: jax.Array, ev: Event, outcome: jax.Array):
+    exec_t = jnp.where(outcome == 0, ev.warm,
+                       jnp.where(outcome == 1, ev.cold, 0.0))
+    metrics = metrics.at[ev.cls, outcome].add(1.0)
+    return metrics.at[ev.cls, 3].add(exec_t)
+
+
+def _to_result(metrics: np.ndarray) -> SimResult:
+    def cm(row):
+        return ClassMetrics(hits=int(row[0]), misses=int(row[1]),
+                            drops=int(row[2]), exec_time=float(row[3]))
+    return SimResult(small=cm(metrics[0]), large=cm(metrics[1]))
+
+
+# --------------------------------------------------------------------------
+# baseline: one unified pool
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=())
+def _run_baseline(pool: PoolState, events: Event) -> jax.Array:
+    def step(carry, ev):
+        pool, metrics = carry
+        pool, outcome = pool_step(pool, ev)
+        return (pool, _metrics_update(metrics, ev, outcome)), None
+
+    init = (pool, jnp.zeros((2, 4), jnp.float32))
+    (pool, metrics), _ = jax.lax.scan(step, init, events)
+    return metrics
+
+
+def simulate_baseline_jax(total_mb: float, trace: Trace,
+                          policy: Policy = Policy.LRU,
+                          max_slots: int = 1024) -> SimResult:
+    pool = init_pool(PoolConfig(total_mb, policy, max_slots))
+    metrics = _run_baseline(pool, _trace_to_events(trace))
+    return _to_result(np.asarray(metrics))
+
+
+# --------------------------------------------------------------------------
+# KiSS: two pools, routed by size class
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=())
+def _run_kiss(small: PoolState, large: PoolState, events: Event) -> jax.Array:
+    def step(carry, ev):
+        small, large, metrics = carry
+
+        def small_branch(ops):
+            s, l = ops
+            s, out = pool_step(s, ev)
+            return s, l, out
+
+        def large_branch(ops):
+            s, l = ops
+            l, out = pool_step(l, ev)
+            return s, l, out
+
+        small, large, outcome = jax.lax.cond(
+            ev.cls == 0, small_branch, large_branch, (small, large))
+        return (small, large, _metrics_update(metrics, ev, outcome)), None
+
+    init = (small, large, jnp.zeros((2, 4), jnp.float32))
+    (small, large, metrics), _ = jax.lax.scan(step, init, events)
+    return metrics
+
+
+def simulate_kiss_jax(cfg: KissConfig, trace: Trace) -> SimResult:
+    small = init_pool(cfg.small_pool)
+    large = init_pool(cfg.large_pool)
+    metrics = _run_kiss(small, large, _trace_to_events(trace))
+    return _to_result(np.asarray(metrics))
+
+
+# --------------------------------------------------------------------------
+# beyond-paper: vmapped configuration sweep
+# --------------------------------------------------------------------------
+
+def sweep_kiss(trace: Trace, total_mbs, small_fracs, policies,
+               max_slots: int = 1024) -> np.ndarray:
+    """Evaluate every (total_mb, small_frac, policy) KiSS configuration of a
+    cartesian grid in ONE vmapped jit.  Returns f32[G, 2, 4] metrics where
+    G = len(total_mbs) * len(small_fracs) * len(policies) (row-major grid
+    order) — the paper's whole figure grid in a single device program.
+    """
+    grid = [(tm, fr, po) for tm in total_mbs for fr in small_fracs
+            for po in policies]
+    smalls, larges = [], []
+    for tm, fr, po in grid:
+        cfg = KissConfig(total_mb=tm, small_frac=fr, policy=Policy(po),
+                         max_slots=max_slots)
+        smalls.append(init_pool(cfg.small_pool))
+        larges.append(init_pool(cfg.large_pool))
+    stack = lambda pools: jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *pools)
+    small_b, large_b = stack(smalls), stack(larges)
+    events = _trace_to_events(trace)
+    run = jax.jit(jax.vmap(_run_kiss.__wrapped__, in_axes=(0, 0, None)))
+    return np.asarray(run(small_b, large_b, events))
+
+
+def sweep_baseline(trace: Trace, total_mbs, policies,
+                   max_slots: int = 1024) -> np.ndarray:
+    """Baseline analogue of ``sweep_kiss``: f32[G, 2, 4] over the
+    (total_mb, policy) grid."""
+    pools = [init_pool(PoolConfig(tm, Policy(po), max_slots))
+             for tm in total_mbs for po in policies]
+    pool_b = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *pools)
+    events = _trace_to_events(trace)
+    run = jax.jit(jax.vmap(_run_baseline.__wrapped__, in_axes=(0, None)))
+    return np.asarray(run(pool_b, events))
+
+
+def metrics_to_result(metrics_row: np.ndarray) -> SimResult:
+    return _to_result(np.asarray(metrics_row))

@@ -1,0 +1,37 @@
+"""Pure-Python reference discrete-event simulator (sequential oracle).
+
+``simulate_baseline``  — one unified warm pool (the paper's baseline).
+``simulate_kiss``      — the KiSS policy: two pools split small/large.
+"""
+from __future__ import annotations
+
+from .pool_ref import WarmPool
+from .types import (LARGE, SMALL, ClassMetrics, KissConfig, PoolConfig,
+                    SimResult, Trace)
+
+
+def _run(pools, route, trace: Trace) -> SimResult:
+    metrics = [ClassMetrics(), ClassMetrics()]  # [small, large]
+    n = len(trace)
+    for i in range(n):
+        cls = int(trace.cls[i])
+        pool = pools[route(cls)]
+        pool.access(float(trace.t[i]), int(trace.func_id[i]),
+                    float(trace.size_mb[i]), float(trace.warm_dur[i]),
+                    float(trace.cold_dur[i]), metrics[cls])
+    return SimResult(small=metrics[SMALL], large=metrics[LARGE])
+
+
+def simulate_baseline(total_mb: float, trace: Trace, policy=None,
+                      max_slots: int = 1024) -> SimResult:
+    from .types import Policy
+    cfg = PoolConfig(total_mb, policy if policy is not None else Policy.LRU,
+                     max_slots)
+    pool = WarmPool(cfg)
+    return _run([pool], lambda cls: 0, trace)
+
+
+def simulate_kiss(cfg: KissConfig, trace: Trace) -> SimResult:
+    small = WarmPool(cfg.small_pool)
+    large = WarmPool(cfg.large_pool)
+    return _run([small, large], lambda cls: cls, trace)

@@ -1,0 +1,156 @@
+"""Core datatypes for the KiSS warm-pool simulator.
+
+The simulator models a FaaS warm pool (FaaSCache-style semantics, per the
+paper's §4.1/§5.2):
+
+* An *event* is one function invocation: ``(t, func_id, size_mb, cls,
+  warm_dur, cold_dur)``.
+* A *container* is a warm instance of a function resident in the pool.  A
+  container executing an invocation is *busy* until ``busy_until`` and cannot
+  be evicted.
+* HIT: an idle container for ``func_id`` exists -> run warm.
+* MISS (cold start): no idle container -> launch a new one, evicting idle
+  containers per the replacement policy until it fits.
+* DROP: the container cannot be placed even after evicting every idle
+  container (the remainder are busy), or it can never fit in the pool at all.
+
+Size class 0 = small, 1 = large.  KiSS routes by class to one of two pools;
+the baseline uses a single unified pool.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import NamedTuple
+
+import numpy as np
+
+
+class Policy(enum.IntEnum):
+    """Warm-pool replacement policy (paper §4.5)."""
+
+    LRU = 0
+    GREEDY_DUAL = 1  # FaaSCache-style: priority = clock + freq * cost / size
+    FREQ = 2
+
+
+SMALL = 0
+LARGE = 1
+
+
+class Trace(NamedTuple):
+    """Struct-of-arrays invocation trace, sorted by time."""
+
+    t: np.ndarray          # f32[N] event time (seconds)
+    func_id: np.ndarray    # i32[N] function identity
+    size_mb: np.ndarray    # f32[N] container memory footprint (MB)
+    cls: np.ndarray        # i32[N] size class (0 small, 1 large)
+    warm_dur: np.ndarray   # f32[N] execution time on a warm container
+    cold_dur: np.ndarray   # f32[N] execution time incl. cold-start init
+
+    def __len__(self) -> int:
+        return int(self.t.shape[0])
+
+    def sorted_by_time(self) -> "Trace":
+        order = np.argsort(self.t, kind="stable")
+        return Trace(*(a[order] for a in self))
+
+    def select(self, mask: np.ndarray) -> "Trace":
+        return Trace(*(a[mask] for a in self))
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolConfig:
+    """One warm pool."""
+
+    capacity_mb: float
+    policy: Policy = Policy.LRU
+    max_slots: int = 1024  # fixed slot count for the JAX pool
+
+
+@dataclasses.dataclass(frozen=True)
+class KissConfig:
+    """The paper's policy: two pools split by a static ratio (default 80-20)
+    with a container-size threshold classifier (default 225 MB, §2.5.1)."""
+
+    total_mb: float
+    small_frac: float = 0.8
+    threshold_mb: float = 225.0
+    policy: Policy = Policy.LRU
+    # Optional per-pool policy override (policy independence experiments).
+    small_policy: Policy | None = None
+    large_policy: Policy | None = None
+    max_slots: int = 1024
+
+    @property
+    def small_pool(self) -> PoolConfig:
+        return PoolConfig(self.total_mb * self.small_frac,
+                          self.small_policy or self.policy, self.max_slots)
+
+    @property
+    def large_pool(self) -> PoolConfig:
+        return PoolConfig(self.total_mb * (1.0 - self.small_frac),
+                          self.large_policy or self.policy, self.max_slots)
+
+
+@dataclasses.dataclass
+class ClassMetrics:
+    """Paper §5.2 metrics, per size class."""
+
+    hits: int = 0
+    misses: int = 0        # cold starts
+    drops: int = 0
+    exec_time: float = 0.0
+
+    @property
+    def total_accesses(self) -> int:
+        return self.hits + self.misses + self.drops
+
+    @property
+    def serviceable(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def cold_start_pct(self) -> float:
+        n = self.total_accesses
+        return 100.0 * self.misses / n if n else 0.0
+
+    @property
+    def drop_pct(self) -> float:
+        n = self.total_accesses
+        return 100.0 * self.drops / n if n else 0.0
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.total_accesses
+        return 100.0 * self.hits / n if n else 0.0
+
+    def __add__(self, other: "ClassMetrics") -> "ClassMetrics":
+        return ClassMetrics(self.hits + other.hits,
+                            self.misses + other.misses,
+                            self.drops + other.drops,
+                            self.exec_time + other.exec_time)
+
+
+@dataclasses.dataclass
+class SimResult:
+    small: ClassMetrics
+    large: ClassMetrics
+
+    @property
+    def overall(self) -> ClassMetrics:
+        return self.small + self.large
+
+    def summary(self) -> dict:
+        o = self.overall
+        return {
+            "cold_start_pct": o.cold_start_pct,
+            "drop_pct": o.drop_pct,
+            "hit_rate": o.hit_rate,
+            "small_cold_start_pct": self.small.cold_start_pct,
+            "large_cold_start_pct": self.large.cold_start_pct,
+            "small_drop_pct": self.small.drop_pct,
+            "large_drop_pct": self.large.drop_pct,
+            "serviceable": o.serviceable,
+            "total": o.total_accesses,
+        }

@@ -1,0 +1,4 @@
+"""Data pipeline: synthetic LM corpus + packed batch iterator."""
+from .pipeline import DataConfig, synthetic_corpus, batch_iterator, make_batch
+
+__all__ = ["DataConfig", "synthetic_corpus", "batch_iterator", "make_batch"]

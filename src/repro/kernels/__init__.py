@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the serving hot spots + pure-jnp oracles.
+
+The KiSS paper itself has no kernel-level contribution (it is a memory
+management policy); these kernels serve the *framework's* perf-critical
+compute paths per the reproduction mandate:
+
+* ``flash_attention`` — prefill/train attention (causal + sliding window, GQA)
+* ``decode_attention`` — one-token decode vs (ring) KV cache
+* ``ssm_scan``        — Mamba2 SSD chunked scan (zamba2)
+* ``wkv6``            — RWKV6 recurrence (rwkv6-7b)
+
+``ops`` is the public dispatch layer (TPU -> Pallas, else oracle);
+``ref`` holds the oracles (semantics of record).
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,106 @@
+"""Single-token GQA decode attention vs a (ring-buffer) KV cache, as a
+Pallas TPU kernel.
+
+One query token per sequence attends over a cache of S slots.  Grid =
+(B, KV, S/BS): the kv-length axis is the sequential (innermost) grid axis,
+so the online-softmax accumulators for the G query heads of each kv head
+live in VMEM scratch.  Ring-buffer semantics come in via ``slot_pos``
+(absolute position stored per slot; -1 = empty) rather than assuming slot
+order — the same kernel serves full caches (decode_32k) and sliding-window
+rings (long_500k on full-attention archs).
+
+VMEM per step (BS=512, D=128, G<=48):
+  k,v blocks 2*512*128*2B = 256 KB; acc G*128*4B <= 25 KB.  MXU: the
+score matmul is [G, D] x [D, BS] — G is small, so decode is memory-bound
+(roofline: HBM-streams the cache), which is exactly what the §Roofline
+analysis shows for decode shapes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, sp_ref, cur_ref, o_ref,
+            m_ref, l_ref, acc_ref, *,
+            scale: float, window: int | None, bs: int, n_blocks: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale     # [G, D]
+    k = k_ref[0, :, 0].astype(jnp.float32)          # [BS, D]
+    v = v_ref[0, :, 0].astype(jnp.float32)          # [BS, D]
+    s = q @ k.T                                     # [G, BS]
+
+    sp = sp_ref[0]                                  # [BS] slot positions
+    cur = cur_ref[0]                                # scalar current pos
+    valid = (sp >= 0) & (sp <= cur)
+    if window is not None:
+        valid &= sp > cur - window
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, s.max(axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+    m_ref[...] = m_cur
+
+    @pl.when(ik == n_blocks - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "scale", "interpret",
+                                             "block_s"))
+def decode_attention_pallas(q, k_cache, v_cache, slot_pos, cur_pos, *,
+                            window=None, scale=None, interpret=False,
+                            block_s=512):
+    """q: [B, H, D]; k_cache/v_cache: [B, S, KV, D]; slot_pos: i32[B, S];
+    cur_pos: i32[B] or scalar -> [B, H, D]."""
+    b, h, d = q.shape
+    s, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    scale = d ** -0.5 if scale is None else scale
+    bs = min(block_s, s)
+    assert s % bs == 0, (s, bs)
+    n_blocks = s // bs
+
+    qr = q.reshape(b, kv, g, d)
+    cur = jnp.broadcast_to(jnp.asarray(cur_pos, jnp.int32), (b,))
+
+    grid = (b, kv, n_blocks)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, window=window, bs=bs,
+                          n_blocks=n_blocks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b_, h_, ik: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, bs, 1, d), lambda b_, h_, ik: (b_, ik, h_, 0)),
+            pl.BlockSpec((1, bs, 1, d), lambda b_, h_, ik: (b_, ik, h_, 0)),
+            pl.BlockSpec((1, bs), lambda b_, h_, ik: (b_, ik)),
+            pl.BlockSpec((1,), lambda b_, h_, ik: (b_,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda b_, h_, ik: (b_, h_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, k_cache, v_cache, slot_pos, cur)
+    return out.reshape(b, h, d)

@@ -1,0 +1,110 @@
+"""Flash attention (prefill/train) as a Pallas TPU kernel.
+
+Tiling: grid = (B, H, Sq/BQ, Skv/BKV); the last grid axis is sequential on
+TPU, so the online-softmax accumulators (m, l, acc) live in VMEM scratch and
+carry across kv blocks.  GQA is handled in the BlockSpec index maps (query
+head h reads kv head h // G) — kv is never materialised at H heads.
+
+VMEM budget per step (BQ=BKV=128, D<=128, f32 scratch):
+  q (128*D*2B) + k,v (2*128*D*2B) + acc (128*D*4B) + m,l (2*128*4B)
+  ~= 0.2 MB  << 16 MB VMEM.  MXU alignment: BQ/BKV are multiples of 128;
+D = head_dim (128 for most assigned archs; 112 for kimi-k2 pads the lane
+dim — noted in EXPERIMENTS §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window: int | None,
+            q_offset: int, bq: int, bkv: int, n_kv_blocks: int):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale           # [BQ, D]
+    k = k_ref[0, 0].astype(jnp.float32)                   # [BKV, D]
+    v = v_ref[0, 0].astype(jnp.float32)                   # [BKV, D]
+    s = q @ k.T                                           # [BQ, BKV]
+
+    iq = pl.program_id(2)
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0) \
+        + q_offset
+    kpos = ik * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    mask = jnp.ones((bq, bkv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, s.max(axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+    m_ref[...] = m_cur
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
+                                             "q_offset", "interpret",
+                                             "block_q", "block_kv"))
+def flash_attention_pallas(q, k, v, *, causal=True, window=None, scale=None,
+                           q_offset=0, interpret=False,
+                           block_q=128, block_kv=128):
+    """q: [B, Sq, H, D]; k, v: [B, Skv, KV, D] -> [B, Sq, H, D]."""
+    b, sq, h, d = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = d ** -0.5 if scale is None else scale
+    bq = min(block_q, sq)
+    bkv = min(block_kv, skv)
+    assert sq % bq == 0 and skv % bkv == 0, (sq, bq, skv, bkv)
+    n_kv_blocks = skv // bkv
+
+    qt = q.transpose(0, 2, 1, 3)   # [B, H, Sq, D]
+    kt = k.transpose(0, 2, 1, 3)   # [B, KV, Skv, D]
+    vt = v.transpose(0, 2, 1, 3)
+
+    grid = (b, h, sq // bq, n_kv_blocks)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal,
+                          window=window, q_offset=q_offset, bq=bq, bkv=bkv,
+                          n_kv_blocks=n_kv_blocks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+            pl.BlockSpec((1, 1, bkv, d),
+                         lambda b_, h_, iq, ik, g=g: (b_, h_ // g, ik, 0)),
+            pl.BlockSpec((1, 1, bkv, d),
+                         lambda b_, h_, iq, ik, g=g: (b_, h_ // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),      # m (running max)
+            pltpu.VMEM((bq,), jnp.float32),      # l (running denominator)
+            pltpu.VMEM((bq, d), jnp.float32),    # acc (weighted values)
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

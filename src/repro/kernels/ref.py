@@ -1,0 +1,188 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the semantics of record: each Pallas kernel is validated against
+these in interpret mode across shape/dtype sweeps.  They are also the
+execution path on non-TPU backends (CPU tests, host-device dry-runs), so
+they are written to be memory-sane at production shapes (query-chunked
+attention instead of materialising S x S score tensors).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# flash_attention (prefill / train): q [B,S,H,D], k/v [B,Skv,KV,D]
+# ---------------------------------------------------------------------------
+
+def _gqa_scores(q, k):
+    """q [B,Sq,KV,G,D] x k [B,Skv,KV,D] -> [B,KV,G,Sq,Skv] (f32)."""
+    return jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True,
+                    window: int | None = None,
+                    scale: float | None = None,
+                    q_offset: int = 0,
+                    chunk: int = 1024) -> jax.Array:
+    """Masked multi-head attention with GQA; query-chunked.
+
+    q: [B, Sq, H, D]; k, v: [B, Skv, KV, D]; H = KV * G.
+    ``causal`` masks with query position = q_offset + index.
+    ``window`` additionally restricts to the last ``window`` keys.
+    Returns [B, Sq, H, D] in q.dtype.
+    """
+    b, sq, h, d = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = d ** -0.5 if scale is None else scale
+    qr = q.reshape(b, sq, kv, g, d)
+    kpos = jnp.arange(skv)
+
+    def block(qc, qpos):
+        s = _gqa_scores(qc * scale, k)          # [B,KV,G,C,Skv]
+        mask = jnp.ones((qc.shape[1], skv), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v)
+        return o.reshape(b, qc.shape[1], h, d)
+
+    if sq <= chunk:
+        return block(qr, jnp.arange(sq) + q_offset).astype(q.dtype)
+
+    while sq % chunk:  # largest divisor of sq that is <= requested chunk
+        chunk -= 1
+    qb = qr.reshape(b, sq // chunk, chunk, kv, g, d)
+    pos = (jnp.arange(sq) + q_offset).reshape(sq // chunk, chunk)
+    out = jax.lax.map(lambda args: block(*args),
+                      (qb.swapaxes(0, 1), pos))
+    return out.swapaxes(0, 1).reshape(b, sq, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode_attention: one new token vs a (possibly ring-buffer) KV cache
+# ---------------------------------------------------------------------------
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     slot_pos: jax.Array, cur_pos: jax.Array, *,
+                     window: int | None = None,
+                     scale: float | None = None) -> jax.Array:
+    """q: [B, H, D]; k_cache/v_cache: [B, S, KV, D];
+    slot_pos: i32[B, S] absolute position stored in each slot (-1 empty);
+    cur_pos: i32[B] or scalar, the position of the current query token.
+    Returns [B, H, D]."""
+    b, h, d = q.shape
+    s, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    scale = d ** -0.5 if scale is None else scale
+    qr = (q * scale).reshape(b, kv, g, d)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qr, k_cache,
+                        preferred_element_type=jnp.float32)
+    cur = jnp.broadcast_to(jnp.asarray(cur_pos), (b,))[:, None]
+    valid = (slot_pos >= 0) & (slot_pos <= cur)
+    if window is not None:
+        valid &= slot_pos > cur - window
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(b, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# ssm_scan: Mamba2-style selective state space (SSD), sequential-scan oracle
+# ---------------------------------------------------------------------------
+
+def ssm_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+             c: jax.Array, *, h0: jax.Array | None = None
+             ) -> tuple[jax.Array, jax.Array]:
+    """Selective SSM recurrence (Mamba2 SSD form, one head group):
+
+      h_t = exp(a_h * dt_t) * h_{t-1} + dt_t * B_t x_t^T
+      y_t = C_t h_t
+
+    Shapes: x [B,S,H,P], dt [B,S,H], a [H] (negative decay rates),
+    b,c [B,S,H,N].  Returns (y [B,S,H,P], h_final [B,H,N,P]).
+    """
+    bsz, s, hh, p = x.shape
+    n = b.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((bsz, hh, n, p), jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp  # [B,H,P],[B,H],[B,H,N],[B,H,N]
+        decay = jnp.exp(a[None] * dtt)[..., None, None]      # [B,H,1,1]
+        dx = (dtt[..., None] * xt)                           # [B,H,P]
+        h = decay * h + bt[..., None] * dx[..., None, :]     # [B,H,N,P]
+        y = jnp.einsum("bhn,bhnp->bhp", ct, h)
+        return h, y
+
+    xs = (x.swapaxes(0, 1).astype(jnp.float32),
+          dt.swapaxes(0, 1).astype(jnp.float32),
+          b.swapaxes(0, 1).astype(jnp.float32),
+          c.swapaxes(0, 1).astype(jnp.float32))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1).astype(x.dtype), h
+
+
+def ssm_decode_step(x, dt, a, b, c, h):
+    """Single-token SSM update.  x [B,H,P], dt [B,H], b,c [B,H,N],
+    h [B,H,N,P] -> (y [B,H,P], h')."""
+    decay = jnp.exp(a[None] * dt)[..., None, None]
+    h = decay * h.astype(jnp.float32) + (
+        b[..., None] * (dt[..., None] * x)[..., None, :]).astype(jnp.float32)
+    y = jnp.einsum("bhn,bhnp->bhp", c.astype(jnp.float32), h)
+    return y.astype(x.dtype), h
+
+
+# ---------------------------------------------------------------------------
+# wkv6: RWKV6 "Finch" recurrence with data-dependent decay
+# ---------------------------------------------------------------------------
+
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+         u: jax.Array, *, state: jax.Array | None = None
+         ) -> tuple[jax.Array, jax.Array]:
+    """RWKV6 recurrence (arXiv:2404.05892):
+
+      S_t = diag(exp(-exp(w_t))) S_{t-1} + k_t^T v_t
+      y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+    Shapes: r,k,v,w [B,S,H,D]; u [H,D].  State [B,H,D,D] (k-dim x v-dim).
+    Returns (y [B,S,H,D], final state).
+    """
+    bsz, s, h, d = r.shape
+    if state is None:
+        state = jnp.zeros((bsz, h, d, d), jnp.float32)
+
+    def step(st, inp):
+        rt, kt, vt, wt = inp  # each [B,H,D]
+        decay = jnp.exp(-jnp.exp(wt.astype(jnp.float32)))    # [B,H,D]
+        kv = kt[..., :, None] * vt[..., None, :]             # [B,H,D,D]
+        y = jnp.einsum("bhd,bhde->bhe", rt,
+                       st + u[None, :, :, None] * kv)
+        st = decay[..., None] * st + kv
+        return st, y
+
+    xs = tuple(t.swapaxes(0, 1).astype(jnp.float32) for t in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state, xs)
+    return ys.swapaxes(0, 1).astype(r.dtype), state
+
+
+def wkv6_decode_step(r, k, v, w, u, state):
+    """Single-token WKV update. r,k,v,w [B,H,D]; state [B,H,D,D]."""
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+    decay = jnp.exp(-jnp.exp(wf))
+    kv = kf[..., :, None] * vf[..., None, :]
+    y = jnp.einsum("bhd,bhde->bhe", rf, state + u[None, :, :, None] * kv)
+    state = decay[..., None] * state + kv
+    return y.astype(r.dtype), state

@@ -1,0 +1,96 @@
+"""RWKV6 WKV recurrence as a time-blocked Pallas TPU kernel.
+
+Per (batch, head) the sequence is processed in chunks of T steps with the
+[D, D] state (k-dim x v-dim) carried across chunks in VMEM scratch.  The
+inner chunk runs the recurrence sequentially with vector ops: unlike the
+Mamba2 SSD case the per-*channel* data-dependent decay makes the parallel
+form require exp(+cumsum) ratios that overflow in f32, so the stable
+formulation is the sequential one (the official CUDA kernel makes the same
+choice).  The chunking still amortises HBM traffic: r/k/v/w stream in
+T-step tiles while the state stays resident in VMEM.
+
+VMEM per step (T=64, D=64): 4*T*D*4B = 64 KB inputs + 16 KB state.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sout_ref,
+            s_ref, *, t: int, n_chunks: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        s_ref[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, 0].astype(jnp.float32)   # [T, D]
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    w = w_ref[0, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)      # [D]
+    decay = jnp.exp(-jnp.exp(w))          # [T, D]
+
+    def step(tau, carry):
+        s, y = carry
+        rt = jax.lax.dynamic_slice_in_dim(r, tau, 1, 0)[0]    # [D]
+        kt = jax.lax.dynamic_slice_in_dim(k, tau, 1, 0)[0]
+        vt = jax.lax.dynamic_slice_in_dim(v, tau, 1, 0)[0]
+        dt = jax.lax.dynamic_slice_in_dim(decay, tau, 1, 0)[0]
+        kv = kt[:, None] * vt[None, :]                         # [D, D]
+        yt = (rt[:, None] * (s + u[:, None] * kv)).sum(0)      # [D]
+        s = dt[:, None] * s + kv
+        y = jax.lax.dynamic_update_slice_in_dim(y, yt[None], tau, 0)
+        return s, y
+
+    s, y = jax.lax.fori_loop(0, t, step,
+                             (s_ref[...], jnp.zeros((t, r.shape[1]),
+                                                    jnp.float32)))
+    s_ref[...] = s
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(ic == n_chunks - 1)
+    def _finish():
+        sout_ref[0, 0] = s_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "chunk"))
+def wkv6_pallas(r, k, v, w, u, *, state=None, interpret=False, chunk=64):
+    """r,k,v,w: [B,S,H,D]; u: [H,D] -> (y [B,S,H,D], state [B,H,D,D] f32)."""
+    bsz, s, h, d = r.shape
+    t = min(chunk, s)
+    assert s % t == 0, (s, t)
+    n_chunks = s // t
+    if state is None:
+        state = jnp.zeros((bsz, h, d, d), jnp.float32)
+
+    tr = lambda x: x.transpose(0, 2, 1, 3)    # [B,H,S,D]
+    grid = (bsz, h, n_chunks)
+    y, sout = pl.pallas_call(
+        functools.partial(_kernel, t=t, n_chunks=n_chunks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, t, d), lambda b_, h_, ic: (b_, h_, ic, 0)),
+            pl.BlockSpec((1, 1, t, d), lambda b_, h_, ic: (b_, h_, ic, 0)),
+            pl.BlockSpec((1, 1, t, d), lambda b_, h_, ic: (b_, h_, ic, 0)),
+            pl.BlockSpec((1, 1, t, d), lambda b_, h_, ic: (b_, h_, ic, 0)),
+            pl.BlockSpec((1, d), lambda b_, h_, ic: (h_, 0)),
+            pl.BlockSpec((1, 1, d, d), lambda b_, h_, ic: (b_, h_, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, t, d), lambda b_, h_, ic: (b_, h_, ic, 0)),
+            pl.BlockSpec((1, 1, d, d), lambda b_, h_, ic: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, h, s, d), r.dtype),
+            jax.ShapeDtypeStruct((bsz, h, d, d), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((d, d), jnp.float32)],
+        interpret=interpret,
+    )(tr(r), tr(k), tr(v), tr(w), u, state)
+    return tr(y), sout

@@ -1,0 +1,11 @@
+"""Launchers: mesh construction, input specs, sharded steps, dry-run,
+training and serving drivers.
+
+NOTE: do not import ``dryrun`` from here — it sets XLA_FLAGS at import time
+and must only be imported as ``python -m repro.launch.dryrun``.
+"""
+from .mesh import (CHIPS_MULTI_POD, CHIPS_SINGLE_POD, HBM_BW, ICI_BW,
+                   PEAK_FLOPS_BF16, make_host_mesh, make_production_mesh)
+
+__all__ = ["make_production_mesh", "make_host_mesh", "PEAK_FLOPS_BF16",
+           "HBM_BW", "ICI_BW", "CHIPS_SINGLE_POD", "CHIPS_MULTI_POD"]

@@ -1,0 +1,233 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks the device count on first
+# init).  Only the dry-run sees 512 placeholder devices.
+
+_DOC = """Multi-pod dry-run: lower + compile every (architecture x input
+shape) on the production meshes and extract the roofline terms.
+
+For each combination this:
+  1. builds the 16x16 (and optionally 2x16x16) mesh,
+  2. constructs the sharded step (train_step / prefill / decode) with
+     ShapeDtypeStruct inputs — no allocation,
+  3. ``.lower().compile()`` — a sharding mismatch, compile-time OOM or
+     unsupported collective here is a bug in the framework,
+  4. records memory_analysis / cost_analysis / per-collective bytes parsed
+     from the post-SPMD HLO into a JSON report consumed by
+     benchmarks/roofline.py and EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch glm4-9b --shape train_4k --mesh both
+  python -m repro.launch.dryrun --all --mesh single --out results/dryrun.json
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(ty: str) -> int:
+    m = re.match(r"(\w+?)\[([\d,]*)\]", ty)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in post-SPMD HLO."""
+    stats: dict[str, dict] = {c: {"count": 0, "bytes": 0}
+                              for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", line)
+        if not m:
+            continue
+        ty, op = m.groups()
+        base = re.sub(r"\.\d+$", "", op)
+        # match e.g. all-reduce, all-gather-start, all-reduce-scatter? no —
+        # exact collective names (plus async -start variants)
+        for c in _COLLECTIVES:
+            if base == c or base == c + "-start" or base == c + "-done":
+                if base.endswith("-done"):
+                    break  # avoid double counting async pairs
+                for shape_tok in re.findall(r"\w+\[[\d,]*\]", ty):
+                    stats[c]["count"] += 0
+                    stats[c]["bytes"] += _shape_bytes(shape_tok)
+                stats[c]["count"] += 1
+                break
+    stats["total_bytes"] = sum(v["bytes"] for k, v in stats.items()
+                               if isinstance(v, dict))
+    return stats
+
+
+def _compile_and_measure(cfg, shape, mesh, optimize: bool = False) -> dict:
+    from .steps import make_step_for
+
+    t0 = time.perf_counter()
+    with mesh:
+        fn, example_args = make_step_for(cfg, mesh, shape,
+                                         optimize=optimize)
+        lowered = fn.lower(*example_args)
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        t2 = time.perf_counter()
+        rec = {"lower_s": round(t1 - t0, 2), "compile_s": round(t2 - t1, 2)}
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        if mem is not None:
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes"):
+                rec[k] = int(getattr(mem, k, 0) or 0)
+        if cost:
+            rec["flops"] = float(cost.get("flops", 0.0))
+            rec["bytes_accessed"] = float(cost.get("bytes accessed", 0.0))
+        rec["collectives"] = collective_stats(compiled.as_text())
+    return rec
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, *,
+            roofline: bool = False, optimize: bool = False) -> dict:
+    """Compile the full config; with ``roofline=True`` additionally compile
+    L=0 and L=2 variants to recover true per-layer totals (XLA
+    cost_analysis counts a while-loop body ONCE, ignoring trip count — see
+    EXPERIMENTS.md §Dry-run 'methodology'):
+
+        total(X) = X(L=0) + n_layers * (X(L=2) - X(L=0))
+
+    Hybrid (zamba2) unrolls its layers in python, so its raw totals are
+    already exact and no correction pass is run.
+    """
+    import dataclasses as dc
+
+    from ..configs import get_config
+    from ..models.config import INPUT_SHAPES
+    from .mesh import make_production_mesh
+    from .specs import describe
+
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec: dict = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": 512 if multi_pod else 256,
+        "notes": describe(cfg, shape),
+        "n_layers": cfg.n_layers,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "optimized": optimize,
+    }
+    rec.update(_compile_and_measure(cfg, shape, mesh, optimize))
+
+    exact = cfg.arch_type == "hybrid"
+    rec["totals_exact"] = exact
+    if roofline and not exact:
+        def variant(n):
+            c = dc.replace(cfg, n_layers=n)
+            if cfg.is_encoder_decoder:
+                c = dc.replace(c, n_encoder_layers=n)
+            return c
+
+        r0 = _compile_and_measure(variant(0), shape, mesh, optimize)
+        r2 = _compile_and_measure(variant(2), shape, mesh, optimize)
+        L = cfg.n_layers
+        for k in ("flops", "bytes_accessed"):
+            if k in r0 and k in r2:
+                rec[f"total_{k}"] = r0[k] + L * (r2[k] - r0[k])
+        c0 = r0["collectives"]["total_bytes"]
+        c2 = r2["collectives"]["total_bytes"]
+        rec["total_collective_bytes"] = c0 + L * (c2 - c0)
+        rec["layer_body"] = {
+            "flops": r2.get("flops", 0) - r0.get("flops", 0),
+            "bytes": r2.get("bytes_accessed", 0) - r0.get("bytes_accessed", 0),
+            "collective_bytes": c2 - c0,
+        }
+    elif exact:
+        rec["total_flops"] = rec.get("flops")
+        rec["total_bytes_accessed"] = rec.get("bytes_accessed")
+        rec["total_collective_bytes"] = rec["collectives"]["total_bytes"]
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--roofline", action="store_true",
+                    help="also compile L=0/L=2 variants for true totals")
+    ap.add_argument("--opt", action="store_true",
+                    help="enable §Perf activation sharding constraints")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    from ..configs import ARCH_IDS
+    from ..models.config import INPUT_SHAPES
+
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    records = []
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                tag = f"{arch} x {shape} x {'2x16x16' if multi else '16x16'}"
+                try:
+                    rec = run_one(arch, shape, multi,
+                                  roofline=args.roofline,
+                                  optimize=args.opt)
+                    coll = rec["collectives"]["total_bytes"]
+                    print(f"[ok] {tag}: compile={rec['compile_s']}s "
+                          f"flops={rec.get('flops', 0):.3e} "
+                          f"coll_bytes={coll:.3e}", flush=True)
+                    records.append(rec)
+                except Exception as e:
+                    failures += 1
+                    print(f"[FAIL] {tag}: {e}", flush=True)
+                    traceback.print_exc()
+                    records.append({"arch": arch, "shape": shape,
+                                    "mesh": "2x16x16" if multi else "16x16",
+                                    "error": str(e)})
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        existing = []
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                existing = json.load(f)
+        # replace records with the same key
+        key = lambda r: (r["arch"], r["shape"], r["mesh"])
+        merged = {key(r): r for r in existing}
+        merged.update({key(r): r for r in records})
+        with open(args.out, "w") as f:
+            json.dump(list(merged.values()), f, indent=1)
+        print(f"wrote {args.out} ({len(merged)} records)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,145 @@
+"""Step functions (train / prefill / decode) + their sharded jit wrappers.
+
+``make_sharded_step`` binds a ModelConfig + mesh + input shape into a
+``jax.jit`` with full in/out shardings — this is what both the dry-run
+(lower/compile on the production mesh) and the real drivers use.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models import decode_step as model_decode
+from ..models import loss_fn, partitioning, prefill as model_prefill
+from ..models.config import InputShape, ModelConfig
+from ..models.sharding import (batch_specs, cache_specs, data_axes,
+                               opt_state_specs, param_specs)
+from ..optim import Optimizer, get_optimizer
+from . import specs as S
+
+
+# ---------------------------------------------------------------------------
+# raw steps
+# ---------------------------------------------------------------------------
+
+def train_step(cfg: ModelConfig, optimizer: Optimizer, params, opt_state,
+               batch, *, remat: bool = True):
+    grad_fn = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, batch, remat=remat), has_aux=True)
+    (total, metrics), grads = grad_fn(params)
+    new_params, new_opt = optimizer.update(params, grads, opt_state)
+    return new_params, new_opt, metrics
+
+
+def prefill_step(cfg: ModelConfig, params, batch, *, cache_len: int,
+                 window: int | None):
+    return model_prefill(cfg, params, batch, cache_len=cache_len,
+                         window=window)
+
+
+def decode_step(cfg: ModelConfig, params, batch, caches, *,
+                window: int | None):
+    return model_decode(cfg, params, batch, caches, window=window)
+
+
+def default_optimizer(cfg: ModelConfig) -> Optimizer:
+    """Adafactor for the trillion-param MoE (factored second moments are
+    the only state that fits — EXPERIMENTS.md §Dry-run), AdamW elsewhere."""
+    if cfg.param_count() > 100e9:
+        return get_optimizer("adafactor", lr=1e-3)
+    return get_optimizer("adamw", lr=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# sharded wrappers
+# ---------------------------------------------------------------------------
+
+def _shard(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def make_sharded_train_step(cfg: ModelConfig, mesh, shape: InputShape,
+                            optimizer: Optimizer | None = None, *,
+                            remat: bool = True):
+    """Returns (jit_fn, example_args) where example_args are
+    ShapeDtypeStructs suitable for .lower()."""
+    optimizer = optimizer or default_optimizer(cfg)
+    pshapes = S.params_shapes_for(cfg)
+    pspecs = param_specs(cfg, pshapes, mesh, "train")
+    oshapes = jax.eval_shape(optimizer.init, pshapes)
+    ospecs = opt_state_specs(pspecs, oshapes, pshapes, mesh)
+    bshapes = S.batch_specs_for(cfg, shape)
+    bspecs = batch_specs(cfg, bshapes, mesh)
+
+    fn = jax.jit(
+        functools.partial(train_step, cfg, optimizer, remat=remat),
+        in_shardings=(_shard(mesh, pspecs), _shard(mesh, ospecs),
+                      _shard(mesh, bspecs)),
+        out_shardings=(_shard(mesh, pspecs), _shard(mesh, ospecs), None),
+        donate_argnums=(0, 1),
+    )
+    return fn, (pshapes, oshapes, bshapes)
+
+
+def make_sharded_prefill(cfg: ModelConfig, mesh, shape: InputShape):
+    window = S.decode_window(cfg, shape) if shape.name == "long_500k" \
+        else cfg.sliding_window
+    pshapes = S.params_shapes_for(cfg)
+    pspecs = param_specs(cfg, pshapes, mesh, "serve")
+    bshapes = S.batch_specs_for(cfg, shape)
+    bspecs = batch_specs(cfg, bshapes, mesh)
+
+    fn = jax.jit(
+        functools.partial(prefill_step, cfg, cache_len=shape.seq_len,
+                          window=window),
+        in_shardings=(_shard(mesh, pspecs), _shard(mesh, bspecs)),
+        out_shardings=None,
+    )
+    return fn, (pshapes, bshapes)
+
+
+def make_sharded_decode(cfg: ModelConfig, mesh, shape: InputShape, *,
+                        seq_shard_cache: bool = False):
+    window = S.decode_window(cfg, shape)
+    pshapes = S.params_shapes_for(cfg)
+    pspecs = param_specs(cfg, pshapes, mesh, "serve")
+    bshapes = S.batch_specs_for(cfg, shape)
+    bspecs = batch_specs(cfg, bshapes, mesh)
+    cshapes = S.cache_specs_for(cfg, shape)
+    cspecs = cache_specs(cfg, cshapes, mesh, seq_shard=seq_shard_cache)
+
+    fn = jax.jit(
+        functools.partial(decode_step, cfg, window=window),
+        in_shardings=(_shard(mesh, pspecs), _shard(mesh, bspecs),
+                      _shard(mesh, cspecs)),
+        out_shardings=(None, _shard(mesh, cspecs)),
+        donate_argnums=(2,),
+    )
+    return fn, (pshapes, bshapes, cshapes)
+
+
+def make_step_for(cfg: ModelConfig, mesh, shape: InputShape, *,
+                  optimize: bool = False):
+    """Dispatch on the input shape kind -> (jit fn, example ShapeDtype args).
+
+    ``optimize=True`` enables the §Perf activation sharding constraints
+    (baseline dry-runs keep them off)."""
+    if optimize:
+        partitioning.enable(data_axes(mesh), "model")
+    else:
+        partitioning.disable()
+    if shape.kind == "train":
+        fn, (p, o, b) = make_sharded_train_step(cfg, mesh, shape)
+        return fn, (p, o, b)
+    if shape.kind == "prefill":
+        fn, (p, b) = make_sharded_prefill(cfg, mesh, shape)
+        return fn, (p, b)
+    fn, (p, b, c) = make_sharded_decode(cfg, mesh, shape,
+                                        seq_shard_cache=optimize)
+    return fn, (p, b, c)

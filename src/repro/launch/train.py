@@ -1,0 +1,101 @@
+"""Training driver.
+
+On the CPU test rig this trains a ~100M-param model for a few hundred steps
+(examples/train_small.py calls into here); on a real TPU mesh the same code
+path scales to the assigned architectures via --arch (the sharded step from
+launch/steps.py is identical — only the mesh changes).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch starcoder2-3b \
+      --reduced --steps 200 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import save_checkpoint
+from ..configs import get_config
+from ..data import DataConfig, batch_iterator
+from ..models import init_params
+from ..models.config import InputShape, ModelConfig
+from ..optim import get_optimizer
+from .mesh import make_host_mesh
+from .steps import make_sharded_train_step
+
+
+def train_100m_config(vocab: int = 8192) -> ModelConfig:
+    """~100M params: 12L, d=768 — the end-to-end example model."""
+    return ModelConfig(
+        name="repro-100m", arch_type="dense", n_layers=12, d_model=768,
+        n_heads=12, n_kv_heads=4, d_ff=2048, vocab_size=vocab, head_dim=64,
+        dtype="float32",
+    )
+
+
+def run(cfg: ModelConfig, *, steps: int, global_batch: int, seq_len: int,
+        lr: float = 3e-4, log_every: int = 10, ckpt_dir: str | None = None,
+        seed: int = 0, remat: bool = False) -> list[dict]:
+    mesh = make_host_mesh()
+    shape = InputShape("train", seq_len, global_batch, "train")
+    optimizer = get_optimizer("adamw", lr=lr)
+    step_fn, _ = make_sharded_train_step(cfg, mesh, shape, optimizer,
+                                         remat=remat)
+
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    opt_state = optimizer.init(params)
+    data = batch_iterator(
+        DataConfig(cfg.vocab_size, seq_len, global_batch, seed=seed),
+        steps, corpus_tokens=global_batch * (seq_len + 1) * 64)
+
+    history = []
+    t0 = time.perf_counter()
+    with mesh:
+        for i, np_batch in enumerate(data):
+            batch = {k: jnp.asarray(v) for k, v in np_batch.items()}
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            if i % log_every == 0 or i == steps - 1:
+                loss = float(metrics["loss"])
+                dt = time.perf_counter() - t0
+                rec = {"step": i, "loss": loss, "elapsed_s": round(dt, 1)}
+                history.append(rec)
+                print(f"step {i:5d}  loss {loss:.4f}  ({dt:.1f}s)",
+                      flush=True)
+    if ckpt_dir:
+        save_checkpoint(ckpt_dir, steps, params)
+    return history
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="100m",
+                    help="'100m' or an assigned arch id")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args(argv)
+
+    if args.arch == "100m":
+        cfg = train_100m_config()
+    else:
+        cfg = get_config(args.arch)
+        if args.reduced:
+            cfg = cfg.reduced()
+    hist = run(cfg, steps=args.steps, global_batch=args.batch,
+               seq_len=args.seq, lr=args.lr, ckpt_dir=args.ckpt_dir)
+    first, last = hist[0]["loss"], hist[-1]["loss"]
+    print(f"loss {first:.4f} -> {last:.4f} "
+          f"({'improved' if last < first else 'NO IMPROVEMENT'})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,8 @@
+"""Model substrate: configs, layers, attention, MoE, SSM, RWKV, whisper."""
+from .config import INPUT_SHAPES, InputShape, ModelConfig
+from .model import (decode_step, forward_train, init_caches, init_params,
+                    loss_fn, prefill)
+
+__all__ = ["INPUT_SHAPES", "InputShape", "ModelConfig", "decode_step",
+           "forward_train", "init_caches", "init_params", "loss_fn",
+           "prefill"]

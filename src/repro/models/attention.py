@@ -1,0 +1,178 @@
+"""GQA attention with KV cache (full or sliding-window ring buffer), RoPE /
+M-RoPE, and optional cross-attention (whisper decoder)."""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from .config import ModelConfig
+from .layers import dense, dense_init
+from .rope import apply_rope, rope_angles
+
+
+class KVCache(NamedTuple):
+    """Decode-time KV cache.  For windowed attention the buffer is a ring of
+    ``window`` slots (slot = pos % window); otherwise slot = pos.
+
+    k, v: [B, S_c, KV, D]; slot_pos: i32[B, S_c] absolute position held in
+    each slot (-1 = empty).
+    """
+
+    k: jax.Array
+    v: jax.Array
+    slot_pos: jax.Array
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> KVCache:
+    s = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    kv, d = cfg.n_kv_heads, cfg.resolved_head_dim
+    return KVCache(
+        k=jnp.zeros((batch, s, kv, d), dtype),
+        v=jnp.zeros((batch, s, kv, d), dtype),
+        slot_pos=jnp.full((batch, s), -1, jnp.int32),
+    )
+
+
+def attn_init(key, cfg: ModelConfig, cross: bool = False) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, h * hd, cfg.dtype, bias=cfg.qkv_bias),
+        "wk": dense_init(ks[1], d, kv * hd, cfg.dtype, bias=cfg.qkv_bias),
+        "wv": dense_init(ks[2], d, kv * hd, cfg.dtype, bias=cfg.qkv_bias),
+        "wo": dense_init(ks[3], h * hd, d, cfg.dtype),
+    }
+
+
+def _split_heads(x, n, d):
+    return x.reshape(*x.shape[:-1], n, d)
+
+
+def attention_prefill(cfg: ModelConfig, p: dict, x: jax.Array,
+                      positions: jax.Array, *,
+                      make_cache: bool = False,
+                      cache_len: int = 0,
+                      window_override: Optional[int] = None,
+                      causal: bool = True,
+                      seq_positions: Optional[jax.Array] = None,
+                      ) -> tuple[jax.Array, Optional[KVCache]]:
+    """Full-sequence causal attention (train / prefill).
+
+    x: [B, S, D_model]; positions: i32[B, S] (or [B, S, 3] for M-RoPE).
+    ``seq_positions`` i32[B, S]: absolute *sequence* indices used for cache
+    slots/masking — distinct from rope ``positions`` because M-RoPE temporal
+    ids collide across vision patches.  Defaults to ``positions`` when 1-D,
+    else to 0..S-1.
+    When ``make_cache`` the resulting KV cache (ring-buffered if windowed)
+    sized ``cache_len`` (>= S) is returned for subsequent decode.
+    """
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    window = window_override if window_override is not None else cfg.sliding_window
+
+    q = _split_heads(dense(p["wq"], x), h, hd)
+    k = _split_heads(dense(p["wk"], x), kv, hd)
+    v = _split_heads(dense(p["wv"], x), kv, hd)
+    if cfg.rope_theta:  # rope_theta == 0 => learned positions (whisper)
+        ang = rope_angles(positions, hd, cfg.rope_theta, cfg.mrope_sections)
+        q, k = apply_rope(q, ang), apply_rope(k, ang)
+
+    o = ops.flash_attention(q, k, v, causal=causal, window=window)
+    y = dense(p["wo"], o.reshape(b, s, h * hd))
+
+    cache = None
+    if make_cache:
+        cache = init_cache(cfg, b, max(cache_len, s), dtype=k.dtype)
+        sc = cache.k.shape[1]
+        if seq_positions is not None:
+            pos1d = seq_positions
+        elif positions.ndim == 2:
+            pos1d = positions
+        else:
+            pos1d = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                     (b, s))
+        if window and s > sc:
+            # keep only the last `sc` tokens in the ring
+            k_tail, v_tail = k[:, -sc:], v[:, -sc:]
+            pos_tail = pos1d[:, -sc:]
+        else:
+            k_tail, v_tail, pos_tail = k, v, pos1d
+        slots = (pos_tail % sc) if window else pos_tail
+        bi = jnp.arange(b)[:, None]
+        cache = KVCache(
+            k=cache.k.at[bi, slots].set(k_tail),
+            v=cache.v.at[bi, slots].set(v_tail),
+            slot_pos=cache.slot_pos.at[bi, slots].set(pos_tail),
+        )
+    return y, cache
+
+
+def attention_decode(cfg: ModelConfig, p: dict, x: jax.Array,
+                     positions: jax.Array, cache: KVCache, *,
+                     window_override: Optional[int] = None,
+                     seq_positions: Optional[jax.Array] = None,
+                     ) -> tuple[jax.Array, KVCache]:
+    """One-token decode step.
+
+    x: [B, 1, D_model]; positions: i32[B, 1] (or [B, 1, 3]); returns
+    ([B, 1, D_model], updated cache)."""
+    b = x.shape[0]
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    window = window_override if window_override is not None else cfg.sliding_window
+
+    q = _split_heads(dense(p["wq"], x), h, hd)[:, 0]      # [B,H,D]
+    k = _split_heads(dense(p["wk"], x), kv, hd)[:, 0]     # [B,KV,D]
+    v = _split_heads(dense(p["wv"], x), kv, hd)[:, 0]
+    if cfg.rope_theta:
+        ang = rope_angles(positions, hd, cfg.rope_theta, cfg.mrope_sections)
+        q = apply_rope(q[:, None], ang)[:, 0]
+        k = apply_rope(k[:, None], ang)[:, 0]
+
+    if seq_positions is not None:
+        pos1d = seq_positions[:, 0]
+    else:
+        assert positions.ndim == 2, \
+            "M-RoPE decode needs explicit seq_positions (temporal ids collide)"
+        pos1d = positions[:, 0]
+    sc = cache.k.shape[1]
+    slot = (pos1d % sc) if window else pos1d
+    bi = jnp.arange(b)
+    cache = KVCache(
+        k=cache.k.at[bi, slot].set(k.astype(cache.k.dtype)),
+        v=cache.v.at[bi, slot].set(v.astype(cache.v.dtype)),
+        slot_pos=cache.slot_pos.at[bi, slot].set(pos1d),
+    )
+    o = ops.decode_attention(q, cache.k, cache.v, cache.slot_pos, pos1d,
+                             window=window)
+    y = dense(p["wo"], o.reshape(b, 1, h * hd))
+    return y, cache
+
+
+# ---------------------------------------------------------------------------
+# cross attention (whisper decoder -> encoder states)
+# ---------------------------------------------------------------------------
+
+def cross_attn_init(key, cfg: ModelConfig) -> dict:
+    return attn_init(key, cfg)
+
+
+def cross_attention(cfg: ModelConfig, p: dict, x: jax.Array,
+                    enc_k: jax.Array, enc_v: jax.Array) -> jax.Array:
+    """x: [B, S, D]; enc_k/enc_v: [B, S_enc, H, hd] (precomputed)."""
+    b, s, _ = x.shape
+    h, hd = cfg.n_heads, cfg.resolved_head_dim
+    q = _split_heads(dense(p["wq"], x), h, hd)
+    o = ops.flash_attention(q, enc_k, enc_v, causal=False)
+    return dense(p["wo"], o.reshape(b, s, h * hd))
+
+
+def encode_cross_kv(cfg: ModelConfig, p: dict, enc_out: jax.Array):
+    h, hd = cfg.n_heads, cfg.resolved_head_dim
+    k = _split_heads(dense(p["wk"], enc_out), h, hd)
+    v = _split_heads(dense(p["wv"], enc_out), h, hd)
+    return k, v

@@ -1,0 +1,39 @@
+"""Modality frontends — STUBS per the mandate.
+
+The audio conv feature extractor (whisper) and the vision tower + projector
+(qwen2-vl) are not implemented; ``input_specs`` (launch/specs.py) provides
+precomputed frame/patch embeddings of the correct shape.  These helpers
+generate *concrete* stand-in embeddings for smoke tests and examples.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def stub_audio_frames(key, cfg: ModelConfig, batch: int,
+                      dtype=jnp.float32) -> jax.Array:
+    """What whisper's two conv layers would emit: [B, S_enc, D]."""
+    return jax.random.normal(key, (batch, cfg.encoder_seq, cfg.d_model),
+                             dtype) * 0.02
+
+
+def stub_vision_patches(key, cfg: ModelConfig, batch: int, n_patches: int,
+                        seq_len: int, dtype=jnp.float32):
+    """What the ViT + projector would emit: patch embeddings [B, P, D] and
+    the positions in the token sequence where they are spliced, plus 3-D
+    M-RoPE position ids [B, S, 3] with a 2-D grid over the patch span."""
+    emb = jax.random.normal(key, (batch, n_patches, cfg.d_model), dtype) * 0.02
+    patch_positions = jnp.broadcast_to(
+        jnp.arange(n_patches, dtype=jnp.int32)[None], (batch, n_patches))
+    side = max(int(n_patches ** 0.5), 1)
+    t = jnp.arange(seq_len, dtype=jnp.int32)
+    # patches share one temporal index; text resumes after the patch span
+    tt = jnp.where(t < n_patches, 0, t - n_patches + 1)
+    hh = jnp.where(t < n_patches, t // side, tt)
+    ww = jnp.where(t < n_patches, t % side, tt)
+    pos = jnp.stack([tt, hh, ww], axis=-1)
+    positions = jnp.broadcast_to(pos[None], (batch, seq_len, 3))
+    return emb, patch_positions, positions

@@ -1,0 +1,80 @@
+"""Primitive layers (functional: init_* returns a params dict, apply is a
+pure function).  No flax offline — params are plain nested dicts of
+jax.Arrays, which keeps pjit sharding specs trivial to mirror."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+def dense_init(key, d_in: int, d_out: int, dtype="float32",
+               bias: bool = False, scale: float | None = None) -> dict:
+    scale = scale if scale is not None else d_in ** -0.5
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32)
+               * scale).astype(_dtype(dtype))}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), _dtype(dtype))
+    return p
+
+
+def dense(p: dict, x: jax.Array) -> jax.Array:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def embedding_init(key, vocab: int, d: int, dtype="float32") -> dict:
+    return {"emb": (jax.random.normal(key, (vocab, d), jnp.float32)
+                    * d ** -0.5).astype(_dtype(dtype))}
+
+
+def embed(p: dict, ids: jax.Array, dtype=jnp.float32) -> jax.Array:
+    return jnp.take(p["emb"], ids, axis=0).astype(dtype)
+
+
+def norm_init(d: int, norm_type: str = "rmsnorm", dtype="float32") -> dict:
+    p = {"g": jnp.ones((d,), _dtype(dtype))}
+    if norm_type == "layernorm":
+        p["b"] = jnp.zeros((d,), _dtype(dtype))
+    return p
+
+
+def norm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if "b" in p:  # layernorm
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["g"].astype(jnp.float32) + p["b"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = (xf ** 2).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["g"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+def mlp_init(key, d: int, d_ff: int, act: str = "silu",
+             dtype="float32") -> dict:
+    ks = jax.random.split(key, 3)
+    if act == "silu":  # gated (SwiGLU family)
+        return {"gate": dense_init(ks[0], d, d_ff, dtype),
+                "up": dense_init(ks[1], d, d_ff, dtype),
+                "down": dense_init(ks[2], d_ff, d, dtype)}
+    return {"up": dense_init(ks[0], d, d_ff, dtype),
+            "down": dense_init(ks[1], d_ff, d, dtype)}
+
+
+def mlp(p: dict, x: jax.Array, act: str = "silu") -> jax.Array:
+    f = act_fn(act)
+    if "gate" in p:
+        return dense(p["down"], f(dense(p["gate"], x)) * dense(p["up"], x))
+    return dense(p["down"], f(dense(p["up"], x)))

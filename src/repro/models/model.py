@@ -1,0 +1,71 @@
+"""Unified model facade: one API across decoder-only families and the
+whisper encoder-decoder.
+
+``batch`` dict keys by arch family (see launch/specs.py):
+  text/moe/ssm/hybrid: tokens [B,S], positions [B,S], labels (train)
+  vlm:   + patch_embeds [B,P,D], patch_positions [B,P], positions [B,S,3]
+  audio: frame_embeds [B,S_enc,D], tokens [B,S] (decoder), labels (train)
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer, whisper
+from .config import ModelConfig
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    if cfg.is_encoder_decoder:
+        return whisper.init_params(cfg, key)
+    return transformer.init_params(cfg, key)
+
+
+def forward_train(cfg: ModelConfig, params, batch, *, remat: bool = True):
+    """-> (logits [B,S,V] fp32, Aux)."""
+    if cfg.is_encoder_decoder:
+        logits = whisper.decode_train(cfg, params, batch["frame_embeds"],
+                                      batch["tokens"])
+        return logits, transformer.Aux(jnp.float32(0), jnp.float32(0))
+    return transformer.forward_train(cfg, params, batch, remat=remat)
+
+
+def prefill(cfg: ModelConfig, params, batch, *, cache_len: int,
+            window: int | None = None):
+    if cfg.is_encoder_decoder:
+        return whisper.prefill(cfg, params, batch["frame_embeds"],
+                               batch["tokens"], cache_len=cache_len,
+                               window=window)
+    return transformer.prefill(cfg, params, batch, cache_len=cache_len,
+                               window=window)
+
+
+def decode_step(cfg: ModelConfig, params, batch, caches, *,
+                window: int | None = None):
+    if cfg.is_encoder_decoder:
+        return whisper.decode_step(cfg, params, batch["tokens"],
+                                   batch["positions"], caches, window=window)
+    return transformer.decode(cfg, params, batch, caches, window=window)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16, window: int | None = None):
+    if cfg.is_encoder_decoder:
+        return whisper.init_whisper_caches(cfg, batch, max_len, dtype,
+                                           window=window)
+    return transformer.init_caches(cfg, batch, max_len, dtype, window=window)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, *, remat: bool = True):
+    """Cross-entropy LM loss (+ MoE aux)."""
+    logits, aux = forward_train(cfg, params, batch, remat=remat)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    total = loss + cfg.router_aux_coef * aux.moe_aux
+    return total, {"loss": loss, "moe_aux": aux.moe_aux,
+                   "router_entropy": aux.router_entropy}

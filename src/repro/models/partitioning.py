@@ -1,0 +1,101 @@
+"""Activation sharding constraints (§Perf optimization #1).
+
+The BASELINE sharding (param specs only) lets GSPMD resolve the
+FSDP-vs-batch axis conflict by *unsharding the global batch* and
+all-reducing full-batch partial products — the dry-run roofline showed
+~40 GB/device logits all-reduces and ~11 GB/device MLP all-reduces on
+glm4-9b train_4k (EXPERIMENTS.md §Perf, iteration 1).
+
+The fix (MaxText-style) pins activations to (batch -> data axes, feature ->
+model axis where contracted against a TP-sharded weight) via
+``with_sharding_constraint`` at layer boundaries, which forces GSPMD into
+weight-gathering FSDP instead of batch-unsharding.
+
+Constraints are OPT-IN (``enable()``) because the smoke tests trace the
+same model functions without any mesh context.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_STATE: dict = {"on": False, "data": ("data",), "model": "model",
+                "remat_policy": None}
+
+
+def enable(data_axes=("data",), model_axis="model",
+           remat_policy: str | None = "dots_with_no_batch_dims_saveable"):
+    """Turn on activation constraints and (optionally) a selective remat
+    policy — §Perf iteration 2: save projection/MLP matmul outputs instead
+    of recomputing them in the backward pass (attention score dots have
+    batch dims and stay rematerialised, bounding memory)."""
+    _STATE.update(on=True, data=tuple(data_axes), model=model_axis,
+                  remat_policy=remat_policy)
+
+
+def disable():
+    _STATE.update(on=False, remat_policy=None)
+
+
+def remat_policy():
+    name = _STATE.get("remat_policy")
+    if not name:
+        return None
+    return getattr(jax.checkpoint_policies, name)
+
+
+def is_enabled() -> bool:
+    return _STATE["on"]
+
+
+def _constrain(x, spec: P):
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def hidden(x):
+    """[B, S, d_model] (or [B, S, ...]) -> batch over data, rest replicated."""
+    if not _STATE["on"]:
+        return x
+    return _constrain(x, P(_STATE["data"], *([None] * (x.ndim - 1))))
+
+
+def ffn(x):
+    """[B, S, d_ff] -> batch over data, hidden over model (TP-interior)."""
+    if not _STATE["on"]:
+        return x
+    return _constrain(
+        x, P(_STATE["data"], *([None] * (x.ndim - 2)), _STATE["model"]))
+
+
+def heads(x):
+    """[B, S, H, hd] -> batch over data, heads over model."""
+    if not _STATE["on"]:
+        return x
+    if x.ndim == 4:
+        return _constrain(x, P(_STATE["data"], None, _STATE["model"], None))
+    return x
+
+
+def moe_dispatch(x):
+    """[G, E, C, D] expert dispatch buffer -> groups over data, experts
+    over model (this is what makes GSPMD lower the dispatch einsum into the
+    expert-parallel all-to-all instead of batch-unsharded all-reduces)."""
+    if not _STATE["on"]:
+        return x
+    return _constrain(x, P(_STATE["data"], _STATE["model"],
+                           *([None] * (x.ndim - 2))))
+
+
+def moe_tokens(x):
+    """[G, S_g, D] grouped tokens -> groups over data."""
+    if not _STATE["on"]:
+        return x
+    return _constrain(x, P(_STATE["data"], *([None] * (x.ndim - 1))))
+
+
+def logits(x):
+    """[B, S, V] -> batch over data, vocab over model."""
+    if not _STATE["on"]:
+        return x
+    return _constrain(
+        x, P(_STATE["data"], *([None] * (x.ndim - 2)), _STATE["model"]))

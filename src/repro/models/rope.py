@@ -1,0 +1,60 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+M-RoPE (arXiv:2409.12191): the head_dim/2 rotary frequency bands are split
+into three contiguous sections (temporal, height, width); each section
+rotates by the corresponding component of a 3-D position id.  Text tokens
+carry (t, t, t) so M-RoPE degenerates to 1-D RoPE for them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """f32[head_dim//2] inverse frequencies."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def rope_angles(positions: jax.Array, head_dim: int,
+                theta: float = 1e4,
+                mrope_sections: tuple[int, int, int] | None = None
+                ) -> jax.Array:
+    """Angles f32[..., head_dim//2].
+
+    ``positions``: i32[...] for 1-D RoPE, or i32[..., 3] (t, h, w) when
+    ``mrope_sections`` is given.
+    """
+    inv = rope_freqs(head_dim, theta)
+    if mrope_sections is None:
+        return positions.astype(jnp.float32)[..., None] * inv
+    assert positions.shape[-1] == 3
+    sec = jnp.asarray(
+        sum(([i] * s for i, s in enumerate(mrope_sections)), []),
+        jnp.int32)  # i32[half] -> which of (t,h,w) drives each band
+    assert sec.shape[0] == head_dim // 2, "mrope sections must sum to half dim"
+    pos_per_band = jnp.take(positions, sec, axis=-1)  # [..., half]
+    return pos_per_band.astype(jnp.float32) * inv
+
+
+def apply_rope(x: jax.Array, angles: jax.Array) -> jax.Array:
+    """Rotate pairs (x[..., :half], x[..., half:]).
+
+    x: [..., n_heads, head_dim]; angles: [...,(broadcast), head_dim//2].
+    """
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = jnp.cos(angles).astype(x.dtype)[..., None, :]
+    s = jnp.sin(angles).astype(x.dtype)[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def text_positions(batch: int, seq: int, offset=0) -> jax.Array:
+    return jnp.arange(seq, dtype=jnp.int32)[None, :] + offset
+
+
+def mrope_text_positions(batch: int, seq: int, offset=0) -> jax.Array:
+    """Text-only M-RoPE positions: (t, t, t)."""
+    p = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset
+    return jnp.broadcast_to(p[..., None], (batch, seq, 3))

@@ -1,0 +1,265 @@
+"""Sharding rules: PartitionSpec trees for params, optimizer state, batches
+and caches, per (mesh, mode).
+
+Conventions (see DESIGN.md §6):
+
+* TRAIN — FSDP + TP: 2-D weights shard (in_dim -> data axes, out_dim ->
+  "model") with transposes for output projections; experts shard over
+  "model"; batch shards over the data axes.
+* SERVE — TP only for weights (replicated over data so each data-parallel
+  replica group serves its own requests); request batch + caches shard over
+  data; KV heads (or head_dim when kv_heads is too small) shard over
+  "model".
+
+Rules are applied by *leaf path name*, so they track the param trees built
+in models/ without a parallel registry.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .config import ModelConfig
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis_size(mesh) -> int:
+    return mesh.shape["model"]
+
+
+def _key_path(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _divides(n: int, d: int) -> bool:
+    return d > 0 and n % d == 0
+
+
+def param_spec_for(key: str, shape: tuple[int, ...], *, mode: str,
+                   da: tuple[str, ...], msize: int,
+                   stacked: bool) -> P:
+    """Partition spec for one param leaf.  ``stacked``: leading layer dim."""
+    fs = da if mode == "train" else None   # FSDP axes (train only)
+    core = shape[1:] if stacked else shape
+    nd = len(core)
+
+    def wrap(*spec):
+        spec = list(spec) + [None] * (nd - len(spec))
+        if stacked:
+            spec = [None] + spec
+        return P(*spec)
+
+    leaf = key.split("/")[-1]
+    parent = key.split("/")[-2] if "/" in key else ""
+
+    # ---- MoE expert tensors [E, din, dout] (raw arrays: leaf name is the
+    # projection name itself) ----
+    if leaf in ("gate", "up", "down") and nd == 3:
+        return wrap("model", fs, None)
+    if parent == "router":
+        return wrap(fs, None)
+
+    # ---- biases / norms / small vectors ----
+    if leaf in ("g", "b") and nd == 1:
+        return wrap(None)
+    if leaf in ("a_log", "d_skip", "dt_bias") and nd == 1:
+        return wrap("model" if _divides(core[0], msize) else None)
+    if leaf == "u":  # rwkv [H, hd]
+        return wrap("model" if _divides(core[0], msize) else None, None)
+    if leaf in ("mu", "mu_c", "decay_base"):
+        return wrap(*([None] * nd))
+    if leaf == "conv_w":  # [W, conv_dim]
+        return wrap(None, "model" if _divides(core[1], msize) else None)
+    if leaf == "conv_b":
+        return wrap("model" if _divides(core[0], msize) else None)
+    if leaf == "emb":  # [V, D]
+        return wrap(fs, "model")
+    if leaf == "pos_embed" or parent == "pos_embed" or key.endswith("pos_embed"):
+        return wrap(None, None)
+
+    # ---- 2-D projections ----
+    if nd == 2:
+        din, dout = core
+        # output projections contract the sharded ("model") dim
+        out_proj = parent in ("wo", "down", "cv", "out_proj")
+        if leaf == "w" and out_proj:
+            return wrap("model" if _divides(din, msize) else None, fs)
+        if leaf == "w":
+            return wrap(fs, "model" if _divides(dout, msize) else None)
+    if nd == 1 and leaf == "b":
+        return wrap(None)
+    return wrap(*([None] * nd))
+
+
+def param_specs(cfg: ModelConfig, params_shapes, mesh, mode: str):
+    """PartitionSpec pytree matching ``params_shapes`` (an eval_shape of
+    init_params)."""
+    da = data_axes(mesh)
+    msize = model_axis_size(mesh)
+
+    def assign(path, leaf):
+        key = _key_path(path)
+        # stacked layer params carry a leading n_layers dim
+        stacked = bool(re.search(r"(^|/)(layers|enc_layers|dec_layers)/", key)) \
+            and cfg.arch_type != "hybrid"
+        spec = param_spec_for(key, leaf.shape, mode=mode, da=da,
+                              msize=msize, stacked=stacked)
+        return _sanitize(spec, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(assign, params_shapes)
+
+
+def _sanitize(spec: P, shape, mesh) -> P:
+    """pjit requires every sharded dim to divide evenly; drop axes that
+    don't (replicate that dim instead)."""
+    out = []
+    spec_t = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
+    for dim, axes in zip(shape, spec_t):
+        if axes is None:
+            out.append(None)
+            continue
+        ax_tuple = (axes,) if isinstance(axes, str) else tuple(axes)
+        total = int(np.prod([mesh.shape[a] for a in ax_tuple]))
+        out.append(axes if dim % total == 0 else None)
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, batch_shapes, mesh, *,
+                shard_batch: bool = True):
+    """Shard the leading (global batch) dim over the data axes."""
+    da = data_axes(mesh)
+    b_axes = da if shard_batch else None
+
+    def assign(path, leaf):
+        nd = len(leaf.shape)
+        return _sanitize(P(b_axes, *([None] * (nd - 1))), leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(assign, batch_shapes)
+
+
+def cache_specs(cfg: ModelConfig, cache_shapes, mesh, *,
+                shard_batch: bool = True, seq_shard: bool = False):
+    """KV caches [L?, B, S, KV, hd] / SSM / RWKV states: batch -> data,
+    heads -> model when divisible.
+
+    ``seq_shard`` (§Perf decode optimization): when kv_heads doesn't divide
+    the model axis, shard the cache *sequence* dim over "model" instead of
+    head_dim — decode attention then partitions ring-attention style (local
+    scores + tiny softmax-stat all-reduces) instead of contracting a
+    sharded head_dim (full-score partial-sum all-reduces)."""
+    da = data_axes(mesh)
+    msize = model_axis_size(mesh)
+    b_axes = da if shard_batch else None
+
+    def assign(path, leaf):
+        key = _key_path(path)
+        shape = leaf.shape
+        nd = len(shape)
+        leaf_name = key.split("/")[-1]
+        # stacked caches have leading L dim: detect via cfg
+        has_l = (cfg.arch_type != "hybrid"
+                 and not cfg.is_encoder_decoder) or key.startswith(
+                     ("self_caches", "cross_k", "cross_v"))
+        if cfg.is_encoder_decoder:
+            has_l = True
+        off = 1 if has_l else 0
+
+        def sp(*core):
+            spec = [None] * off + list(core)
+            spec += [None] * (nd - len(spec))
+            return P(*spec)
+
+        if leaf_name in ("k", "v") or key.endswith(("cross_k", "cross_v")):
+            # [L?, B, S, KV, hd]
+            s_len, kv, hd = shape[off + 1], shape[off + 2], shape[off + 3]
+            if _divides(kv, msize):
+                return sp(b_axes, None, "model", None)
+            if seq_shard and _divides(s_len, msize):
+                return sp(b_axes, "model", None, None)
+            if _divides(hd, msize):
+                return sp(b_axes, None, None, "model")
+            return sp(b_axes, None, None, None)
+        if leaf_name == "slot_pos":
+            s_len = shape[off + 1]
+            kv = None
+            if seq_shard and _divides(s_len, msize):
+                return sp(b_axes, "model")
+            return sp(b_axes, None)
+        if leaf_name == "conv":   # [B, W-1, conv_dim]
+            c = shape[off + 2]
+            return sp(b_axes, None, "model" if _divides(c, msize) else None)
+        if leaf_name == "h":      # [B, H, N, P]
+            h = shape[off + 1]
+            return sp(b_axes, "model" if _divides(h, msize) else None)
+        if leaf_name == "state":  # rwkv [B, H, hd, hd]
+            h = shape[off + 1]
+            return sp(b_axes, "model" if _divides(h, msize) else None)
+        if leaf_name in ("last_x_tm", "last_x_cm"):  # [B, D]
+            d = shape[off + 1]
+            return sp(b_axes, "model" if _divides(d, msize) else None)
+        return sp(b_axes)
+
+    def assign_s(path, leaf):
+        return _sanitize(assign(path, leaf), leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(assign_s, cache_shapes)
+
+
+def opt_state_specs(pspecs, opt_state_shapes, params_shapes, mesh):
+    """Optimizer-state specs derived from param specs: AdamW m/v mirror the
+    param spec; Adafactor vr drops the last dim, vc keeps (…, last)."""
+
+    def assign_like(spec: P, pshape, sshape):
+        spec_t = tuple(spec) + (None,) * (len(pshape) - len(tuple(spec)))
+        if sshape == pshape:
+            return P(*spec_t)
+        if sshape == pshape[:-1]:           # adafactor vr
+            return P(*spec_t[:-1])
+        if len(pshape) >= 2 and sshape == (*pshape[:-2], pshape[-1]):  # vc
+            return P(*spec_t[:-2], spec_t[-1])
+        if sshape == (0,) or len(sshape) == 0:
+            return P()
+        return P(*([None] * len(sshape)))
+
+    import jax.tree_util as jtu
+    pleaves = {_key_path(p): (s, l.shape)
+               for (p, l), (q, s) in zip(
+                   jtu.tree_flatten_with_path(params_shapes)[0],
+                   jtu.tree_flatten_with_path(pspecs)[0])}
+
+    def assign(path, leaf):
+        key = _key_path(path)
+        # strip the optimizer-state prefix (m/v/vr/vc) to find the param key
+        for prefix in ("m/", "v/", "vr/", "vc/"):
+            if key.startswith(prefix):
+                pkey = key[len(prefix):]
+                if pkey in pleaves:
+                    spec, pshape = pleaves[pkey]
+                    return _sanitize(assign_like(spec, pshape, leaf.shape),
+                                     leaf.shape, mesh)
+        if key == "step":
+            return P()
+        return P(*([None] * len(leaf.shape)))
+
+    return jax.tree_util.tree_map_with_path(assign, opt_state_shapes)

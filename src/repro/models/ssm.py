@@ -1,0 +1,136 @@
+"""Mamba2 block (arXiv:2405.21060 SSD form), used by zamba2 hybrid layers.
+
+Structure per block: in_proj -> (z | x | B | C | dt), short causal conv over
+(x|B|C), selective SSM recurrence (kernels.ops.ssm_scan), SiLU(z) gating,
+out_proj.  The recurrent state [H, N, P] is the decode-time "KV cache"
+equivalent: O(1) per token, which is what makes ``long_500k`` native for
+this family.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from .config import ModelConfig
+from .layers import _dtype, dense, dense_init
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array   # [B, W-1, conv_dim] last conv inputs
+    h: jax.Array      # [B, H, N, P] recurrent state (f32)
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    conv_dim = d_inner + 2 * cfg.ssm_state * n_heads
+    return d_inner, n_heads, conv_dim
+
+
+def ssm_init(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di, nh, conv_dim = _dims(cfg)
+    n = cfg.ssm_state
+    ks = jax.random.split(key, 4)
+    dt = _dtype(cfg.dtype)
+    return {
+        # z | x | B(nh*n) | C(nh*n) | dt(nh)
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * nh * n + nh, cfg.dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv_width, conv_dim),
+                                     jnp.float32) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "out_proj": dense_init(ks[2], di, d, cfg.dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 history: jax.Array | None = None) -> jax.Array:
+    """Depthwise causal conv1d.  x [B,S,C]; w [W,C]; history [B,W-1,C]."""
+    width = w.shape[0]
+    if history is None:
+        history = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([history, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None]
+              for i in range(width))
+    return jax.nn.silu(out + b[None, None])
+
+
+def _project(cfg: ModelConfig, p: dict, x: jax.Array):
+    di, nh, _ = _dims(cfg)
+    n = cfg.ssm_state
+    zxbcdt = dense(p["in_proj"], x)
+    z, xin, bc, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + 2 * nh * n], axis=-1)
+    return z, xin, bc, dt
+
+
+def ssm_prefill(cfg: ModelConfig, p: dict, x: jax.Array, *,
+                make_cache: bool = False
+                ) -> tuple[jax.Array, SSMCache | None]:
+    """x: [B, S, D] -> ([B, S, D], cache)."""
+    bsz, s, _ = x.shape
+    di, nh, conv_dim = _dims(cfg)
+    n, hp = cfg.ssm_state, cfg.ssm_head_dim
+    z, xin, bc, dt = _project(cfg, p, x)
+    conv_in = jnp.concatenate([xin, bc], axis=-1)
+    conv_out = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+    xs, b, c = jnp.split(conv_out, [di, di + nh * n], axis=-1)
+    xs = xs.reshape(bsz, s, nh, hp)
+    b = b.reshape(bsz, s, nh, n)
+    c = c.reshape(bsz, s, nh, n)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    y, h = ops.ssm_scan(xs, dtv, a, b, c)
+    y = y + xs * p["d_skip"][None, None, :, None].astype(y.dtype)
+    y = (y.reshape(bsz, s, di) * jax.nn.silu(z.astype(jnp.float32))
+         .astype(y.dtype))
+    out = dense(p["out_proj"], y)
+    cache = None
+    if make_cache:
+        w = cfg.ssm_conv_width
+        hist = conv_in[:, -(w - 1):]
+        pad = (w - 1) - hist.shape[1]
+        if pad > 0:
+            hist = jnp.pad(hist, ((0, 0), (pad, 0), (0, 0)))
+        cache = SSMCache(conv=hist, h=h)
+    return out, cache
+
+
+def ssm_decode(cfg: ModelConfig, p: dict, x: jax.Array,
+               cache: SSMCache) -> tuple[jax.Array, SSMCache]:
+    """x: [B, 1, D] -> ([B, 1, D], cache')."""
+    bsz = x.shape[0]
+    di, nh, conv_dim = _dims(cfg)
+    n, hp = cfg.ssm_state, cfg.ssm_head_dim
+    z, xin, bc, dt = _project(cfg, p, x)
+    conv_in = jnp.concatenate([xin, bc], axis=-1)       # [B,1,conv_dim]
+    conv_out = _causal_conv(conv_in, p["conv_w"], p["conv_b"],
+                            history=cache.conv.astype(conv_in.dtype))
+    new_hist = jnp.concatenate([cache.conv.astype(conv_in.dtype), conv_in],
+                               axis=1)[:, 1:]
+    xs, b, c = jnp.split(conv_out[:, 0], [di, di + nh * n], axis=-1)
+    xs = xs.reshape(bsz, nh, hp)
+    b = b.reshape(bsz, nh, n)
+    c = c.reshape(bsz, nh, n)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    y, h = ops.ssm_decode_step(xs, dtv, a, b, c, cache.h)
+    y = y + xs * p["d_skip"][None, :, None].astype(y.dtype)
+    y = (y.reshape(bsz, 1, di)
+         * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype))
+    return dense(p["out_proj"], y), SSMCache(conv=new_hist, h=h)
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> SSMCache:
+    di, nh, conv_dim = _dims(cfg)
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), dtype),
+        h=jnp.zeros((batch, nh, cfg.ssm_state, cfg.ssm_head_dim),
+                    jnp.float32),
+    )

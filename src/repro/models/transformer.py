@@ -1,0 +1,294 @@
+"""Decoder-only transformer assembly covering the dense / MoE / VLM /
+hybrid / SSM families behind one interface:
+
+* ``init_params(cfg, key)``
+* ``forward_train(cfg, params, batch)``          -> (logits, aux)
+* ``prefill(cfg, params, batch, cache_len)``     -> (logits, caches)
+* ``decode(cfg, params, batch, caches)``         -> (logits, caches)
+
+Homogeneous stacks (dense/moe/ssm) are *scanned over layers* with stacked
+params (MaxText-style) so that deep configs (88L granite) lower as one
+compact HLO while-loop; the zamba2 hybrid unrolls its 38 mamba blocks around
+a single SHARED attention block (the Zamba design point) in a python loop.
+
+``batch`` keys: ``tokens`` i32[B,S] and/or ``embeds`` f32[B,S,D];
+``positions`` i32[B,S] (or [B,S,3] for M-RoPE); VLM additionally
+``patch_embeds`` [B,P,D] + ``patch_positions`` i32[B,P]; train adds
+``labels`` i32[B,S].
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import partitioning
+from .attention import (KVCache, attention_decode, attention_prefill,
+                        attn_init, init_cache)
+from .config import ModelConfig
+from .layers import _dtype, dense, dense_init, embed, embedding_init, mlp, \
+    mlp_init, norm, norm_init
+from .moe import moe_apply, moe_init
+from .rwkv import (RWKVCache, channel_mix, init_rwkv_cache, rwkv_init,
+                   time_mix)
+from .ssm import SSMCache, init_ssm_cache, ssm_decode, ssm_init, ssm_prefill
+
+
+class Aux(NamedTuple):
+    moe_aux: jax.Array
+    router_entropy: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _attn_layer_init(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": norm_init(cfg.d_model, cfg.norm_type, "float32"),
+         "attn": attn_init(k1, cfg),
+         "ln2": norm_init(cfg.d_model, cfg.norm_type, "float32")}
+    if cfg.is_moe:
+        p["moe"] = moe_init(k2, cfg)
+    else:
+        p["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.act, cfg.dtype)
+    return p
+
+
+def _mamba_layer_init(key, cfg: ModelConfig) -> dict:
+    return {"ln1": norm_init(cfg.d_model, cfg.norm_type, "float32"),
+            "ssm": ssm_init(key, cfg)}
+
+
+def _rwkv_layer_init(key, cfg: ModelConfig) -> dict:
+    return {"ln1": norm_init(cfg.d_model, cfg.norm_type, "float32"),
+            "ln2": norm_init(cfg.d_model, cfg.norm_type, "float32"),
+            "rwkv": rwkv_init(key, cfg)}
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    ke, kl, kh, ks = jax.random.split(key, 4)
+    params: dict[str, Any] = {
+        "embed": embedding_init(ke, cfg.vocab_size, cfg.d_model, cfg.dtype),
+        "final_norm": norm_init(cfg.d_model, cfg.norm_type, "float32"),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(kh, cfg.d_model, cfg.vocab_size,
+                                       cfg.dtype)
+    kinds = cfg.layer_kinds()
+    if cfg.arch_type == "hybrid":
+        keys = jax.random.split(kl, cfg.n_layers)
+        # attention positions use the SHARED block (the Zamba design
+        # point); their per-layer slot is empty.
+        params["layers"] = [_mamba_layer_init(keys[i], cfg)
+                            if kind == "mamba" else None
+                            for i, kind in enumerate(kinds)]
+        params["shared_attn"] = _attn_layer_init(ks, cfg)
+    else:
+        kind = "rwkv" if cfg.arch_type == "ssm" else "attn"
+        init_one = {"attn": _attn_layer_init,
+                    "rwkv": _rwkv_layer_init}[kind]
+        keys = jax.random.split(kl, max(cfg.n_layers, 1))
+        stacked = jax.vmap(functools.partial(init_one, cfg=cfg))(keys)
+        if cfg.n_layers == 0:  # roofline L=0 variant: empty stack
+            stacked = jax.tree_util.tree_map(lambda a: a[:0], stacked)
+        params["layers"] = stacked
+    return params
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _attn_block(cfg, lp, x, positions, *, mode, cache=None,
+                cache_len=0, window=None, seq_positions=None):
+    h, new_cache = (
+        attention_prefill(cfg, lp["attn"], norm(lp["ln1"], x, cfg.norm_eps),
+                          positions, make_cache=(mode == "prefill"),
+                          cache_len=cache_len, window_override=window,
+                          seq_positions=seq_positions)
+        if mode != "decode" else
+        attention_decode(cfg, lp["attn"], norm(lp["ln1"], x, cfg.norm_eps),
+                         positions, cache, window_override=window,
+                         seq_positions=seq_positions))
+    x = partitioning.hidden(x + h)
+    z = norm(lp["ln2"], x, cfg.norm_eps)
+    if cfg.is_moe:
+        out = moe_apply(cfg, lp["moe"], z)
+        x = x + out.y
+        aux = Aux(out.aux_loss, out.router_entropy)
+    else:
+        x = x + mlp(lp["mlp"], z, cfg.act)
+        aux = Aux(jnp.float32(0), jnp.float32(0))
+    return partitioning.hidden(x), new_cache, aux
+
+
+def _mamba_block(cfg, lp, x, *, mode, cache=None):
+    z = norm(lp["ln1"], x, cfg.norm_eps)
+    if mode == "decode":
+        h, new_cache = ssm_decode(cfg, lp["ssm"], z, cache)
+    else:
+        h, new_cache = ssm_prefill(cfg, lp["ssm"], z,
+                                   make_cache=(mode == "prefill"))
+    return partitioning.hidden(x + h), new_cache
+
+
+def _rwkv_block(cfg, lp, x, *, cache: RWKVCache | None):
+    ltm = cache.last_x_tm if cache else None
+    lcm = cache.last_x_cm if cache else None
+    st = cache.state if cache else None
+    h, new_ltm, new_state = time_mix(cfg, lp["rwkv"],
+                                     norm(lp["ln1"], x, cfg.norm_eps),
+                                     ltm, st)
+    x = partitioning.hidden(x + h)
+    h, new_lcm = channel_mix(cfg, lp["rwkv"],
+                             norm(lp["ln2"], x, cfg.norm_eps), lcm)
+    x = partitioning.hidden(x + h)
+    new_cache = RWKVCache(new_ltm, new_lcm, new_state)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(cfg: ModelConfig, params, batch) -> jax.Array:
+    compute = _dtype(cfg.dtype)
+    if "embeds" in batch and batch["embeds"] is not None:
+        x = batch["embeds"].astype(compute)
+    else:
+        x = embed(params["embed"], batch["tokens"], compute)
+    if batch.get("patch_embeds") is not None:
+        bi = jnp.arange(x.shape[0])[:, None]
+        x = x.at[bi, batch["patch_positions"]].set(
+            batch["patch_embeds"].astype(compute))
+    return partitioning.hidden(x)
+
+
+def _head(cfg: ModelConfig, params, x) -> jax.Array:
+    x = norm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        w = params["embed"]["emb"].astype(x.dtype)
+        return partitioning.logits((x @ w.T).astype(jnp.float32))
+    return partitioning.logits(dense(params["lm_head"], x)
+                               .astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# stack runners
+# ---------------------------------------------------------------------------
+
+def _run_stack(cfg: ModelConfig, params, x, positions, *, mode,
+               caches=None, cache_len=0, window=None, remat=False,
+               seq_positions=None):
+    """Run the layer stack.  Returns (x, caches, aux)."""
+    kinds = cfg.layer_kinds()
+
+    if cfg.arch_type == "hybrid":
+        new_caches = []
+        shared_cache_idx = 0
+        aux = Aux(jnp.float32(0), jnp.float32(0))
+        for i, kind in enumerate(kinds):
+            lp = params["layers"][i]
+            if kind == "mamba":
+                c = caches[i] if caches else None
+                x, c2 = _mamba_block(cfg, lp, x, mode=mode, cache=c)
+                new_caches.append(c2)
+            else:  # shared attention block
+                c = caches[i] if caches else None
+                x, c2, a = _attn_block(cfg, params["shared_attn"], x,
+                                       positions, mode=mode, cache=c,
+                                       cache_len=cache_len, window=window,
+                                       seq_positions=seq_positions)
+                new_caches.append(c2)
+                aux = Aux(aux.moe_aux + a.moe_aux,
+                          aux.router_entropy + a.router_entropy)
+        return x, (new_caches if mode != "train" else None), aux
+
+    # homogeneous stacks: scan over stacked layer params
+    kind = "rwkv" if cfg.arch_type == "ssm" else "attn"
+
+    if kind == "attn":
+        def layer(x, args):
+            lp, c = args
+            x, c2, a = _attn_block(cfg, lp, x, positions, mode=mode,
+                                   cache=c, cache_len=cache_len,
+                                   window=window,
+                                   seq_positions=seq_positions)
+            return x, (c2, a)
+    else:  # rwkv
+        def layer(x, args):
+            lp, c = args
+            x, c2 = _rwkv_block(cfg, lp, x, cache=c)
+            return x, (c2, Aux(jnp.float32(0), jnp.float32(0)))
+
+    if remat:
+        pol = partitioning.remat_policy()
+        layer = (jax.checkpoint(layer, policy=pol) if pol
+                 else jax.checkpoint(layer))
+
+    xs = (params["layers"], caches)
+    x, (new_caches, auxs) = jax.lax.scan(layer, x, xs,
+                                         length=cfg.n_layers)
+    aux = Aux(auxs.moe_aux.sum(), auxs.router_entropy.mean())
+    if mode == "train":
+        new_caches = None
+    return x, new_caches, aux
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def forward_train(cfg: ModelConfig, params, batch, *, remat: bool = True):
+    x = _embed_inputs(cfg, params, batch)
+    x, _, aux = _run_stack(cfg, params, x, batch.get("positions"),
+                           mode="train", remat=remat)
+    return _head(cfg, params, x), aux
+
+
+def prefill(cfg: ModelConfig, params, batch, *, cache_len: int = 0,
+            window: int | None = None):
+    x = _embed_inputs(cfg, params, batch)
+    x, caches, aux = _run_stack(cfg, params, x, batch.get("positions"),
+                                mode="prefill", cache_len=cache_len,
+                                window=window,
+                                seq_positions=batch.get("seq_positions"))
+    return _head(cfg, params, x[:, -1:]), caches
+
+
+def decode(cfg: ModelConfig, params, batch, caches, *,
+           window: int | None = None):
+    x = _embed_inputs(cfg, params, batch)
+    x, caches, aux = _run_stack(cfg, params, x, batch.get("positions"),
+                                mode="decode", caches=caches, window=window,
+                                seq_positions=batch.get("seq_positions"))
+    return _head(cfg, params, x), caches
+
+
+# ---------------------------------------------------------------------------
+# cache init for decode-only entry (dry-run decode shapes)
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16, window: int | None = None):
+    """Blank caches as if ``max_len`` tokens were already prefetched.
+    ``window`` (e.g. 4096 for long_500k on full-attention archs) caps the
+    attention cache to a ring buffer of that many slots."""
+    kinds = cfg.layer_kinds()
+    eff_len = min(max_len, window) if window else max_len
+    if cfg.arch_type == "hybrid":
+        out = []
+        for kind in kinds:
+            out.append(init_cache(cfg, batch, eff_len, dtype)
+                       if kind == "attn"
+                       else init_ssm_cache(cfg, batch, dtype))
+        return out
+    if cfg.arch_type != "ssm":
+        one = init_cache(cfg, batch, eff_len, dtype)
+    else:
+        one = init_rwkv_cache(cfg, batch, dtype)
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_layers, *a.shape)), one)

@@ -1,0 +1,193 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+Per the mandate the mel-spectrogram + conv feature extractor is a STUB:
+``input_specs`` provides precomputed frame embeddings [B, S_enc, D] (what
+the two conv layers would emit).  This module implements everything after
+that: sinusoidal encoder positions, bidirectional encoder, causal decoder
+with learned positions and per-layer cross-attention.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (KVCache, attention_decode, attention_prefill,
+                        attn_init, cross_attention, encode_cross_kv,
+                        init_cache)
+from .config import ModelConfig
+from .layers import (_dtype, dense, dense_init, embed, embedding_init, mlp,
+                     mlp_init, norm, norm_init)
+
+
+class WhisperCache(NamedTuple):
+    self_caches: Any     # stacked KVCache [L, ...]
+    cross_k: jax.Array   # [L, B, S_enc, H, hd]
+    cross_v: jax.Array
+
+
+def _sinusoid(seq: int, d: int) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    i = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (2 * i / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _enc_layer_init(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {"ln1": norm_init(cfg.d_model, "layernorm", "float32"),
+            "attn": attn_init(k1, cfg),
+            "ln2": norm_init(cfg.d_model, "layernorm", "float32"),
+            "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, "gelu", cfg.dtype)}
+
+
+def _dec_layer_init(key, cfg: ModelConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": norm_init(cfg.d_model, "layernorm", "float32"),
+            "attn": attn_init(k1, cfg),
+            "ln_x": norm_init(cfg.d_model, "layernorm", "float32"),
+            "xattn": attn_init(k2, cfg),
+            "ln2": norm_init(cfg.d_model, "layernorm", "float32"),
+            "mlp": mlp_init(k3, cfg.d_model, cfg.d_ff, "gelu", cfg.dtype)}
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    ke, kd, kt, kp = jax.random.split(key, 4)
+    d = cfg.d_model
+    max_tgt = cfg.max_target_positions or 448
+    enc_keys = jax.random.split(ke, cfg.n_encoder_layers)
+    dec_keys = jax.random.split(kd, cfg.n_layers)
+    import functools
+    return {
+        "tok_embed": embedding_init(kt, cfg.vocab_size, d, cfg.dtype),
+        "pos_embed": (jax.random.normal(kp, (max_tgt, d), jnp.float32)
+                      * 0.01).astype(_dtype(cfg.dtype)),
+        "enc_layers": jax.vmap(
+            functools.partial(_enc_layer_init, cfg=cfg))(enc_keys),
+        "enc_norm": norm_init(d, "layernorm", "float32"),
+        "dec_layers": jax.vmap(
+            functools.partial(_dec_layer_init, cfg=cfg))(dec_keys),
+        "dec_norm": norm_init(d, "layernorm", "float32"),
+    }
+
+
+def encode(cfg: ModelConfig, params, frame_embeds: jax.Array) -> jax.Array:
+    """frame_embeds: [B, S_enc, D] (stub conv output) -> encoder states."""
+    x = frame_embeds.astype(_dtype(cfg.dtype))
+    x = x + _sinusoid(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+
+    def layer(x, lp):
+        h, _ = attention_prefill(cfg, lp["attn"],
+                                 norm(lp["ln1"], x, cfg.norm_eps),
+                                 jnp.arange(x.shape[1], dtype=jnp.int32)[None],
+                                 causal=False)
+        x = x + h
+        x = x + mlp(lp["mlp"], norm(lp["ln2"], x, cfg.norm_eps), "gelu")
+        return x, None
+
+    x, _ = jax.lax.scan(layer, x, params["enc_layers"])
+    return norm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _dec_positions(tokens: jax.Array, offset: int = 0) -> jax.Array:
+    b, s = tokens.shape
+    return jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None] + offset,
+                            (b, s))
+
+
+def _dec_embed(cfg, params, tokens, positions):
+    x = embed(params["tok_embed"], tokens, _dtype(cfg.dtype))
+    max_tgt = params["pos_embed"].shape[0]
+    pos = params["pos_embed"].astype(x.dtype)[positions % max_tgt]
+    return x + pos
+
+
+def decode_train(cfg: ModelConfig, params, frame_embeds, tokens):
+    """Teacher-forced decoder pass -> logits [B, S, V] (fp32)."""
+    enc = encode(cfg, params, frame_embeds)
+    positions = _dec_positions(tokens)
+    x = _dec_embed(cfg, params, tokens, positions)
+
+    def layer(x, lp):
+        h, _ = attention_prefill(cfg, lp["attn"],
+                                 norm(lp["ln1"], x, cfg.norm_eps), positions)
+        x = x + h
+        ek, ev = encode_cross_kv(cfg, lp["xattn"], enc)
+        x = x + cross_attention(cfg, lp["xattn"],
+                                norm(lp["ln_x"], x, cfg.norm_eps), ek, ev)
+        x = x + mlp(lp["mlp"], norm(lp["ln2"], x, cfg.norm_eps), "gelu")
+        return x, None
+
+    x, _ = jax.lax.scan(layer, x, params["dec_layers"])
+    x = norm(params["dec_norm"], x, cfg.norm_eps)
+    w = params["tok_embed"]["emb"].astype(x.dtype)
+    return (x @ w.T).astype(jnp.float32)
+
+
+def prefill(cfg: ModelConfig, params, frame_embeds, tokens, *,
+            cache_len: int, window: int | None = None):
+    """Encode audio + prefill the decoder -> (last logits, WhisperCache)."""
+    enc = encode(cfg, params, frame_embeds)
+    positions = _dec_positions(tokens)
+    x = _dec_embed(cfg, params, tokens, positions)
+
+    def layer(x, lp):
+        h, c = attention_prefill(cfg, lp["attn"],
+                                 norm(lp["ln1"], x, cfg.norm_eps), positions,
+                                 make_cache=True, cache_len=cache_len,
+                                 window_override=window)
+        x = x + h
+        ek, ev = encode_cross_kv(cfg, lp["xattn"], enc)
+        x = x + cross_attention(cfg, lp["xattn"],
+                                norm(lp["ln_x"], x, cfg.norm_eps), ek, ev)
+        x = x + mlp(lp["mlp"], norm(lp["ln2"], x, cfg.norm_eps), "gelu")
+        return x, (c, ek, ev)
+
+    x, (caches, cks, cvs) = jax.lax.scan(layer, x, params["dec_layers"])
+    x = norm(params["dec_norm"], x[:, -1:], cfg.norm_eps)
+    w = params["tok_embed"]["emb"].astype(x.dtype)
+    logits = (x @ w.T).astype(jnp.float32)
+    return logits, WhisperCache(caches, cks, cvs)
+
+
+def decode_step(cfg: ModelConfig, params, tokens, positions,
+                cache: WhisperCache, *, window: int | None = None):
+    """tokens: [B, 1] -> (logits [B,1,V], cache')."""
+    x = _dec_embed(cfg, params, tokens, positions)
+
+    def layer(x, args):
+        lp, c, ek, ev = args
+        h, c2 = attention_decode(cfg, lp["attn"],
+                                 norm(lp["ln1"], x, cfg.norm_eps),
+                                 positions, c, window_override=window)
+        x = x + h
+        x = x + cross_attention(cfg, lp["xattn"],
+                                norm(lp["ln_x"], x, cfg.norm_eps), ek, ev)
+        x = x + mlp(lp["mlp"], norm(lp["ln2"], x, cfg.norm_eps), "gelu")
+        return x, c2
+
+    x, new_caches = jax.lax.scan(
+        layer, x, (params["dec_layers"], cache.self_caches,
+                   cache.cross_k, cache.cross_v))
+    x = norm(params["dec_norm"], x, cfg.norm_eps)
+    w = params["tok_embed"]["emb"].astype(x.dtype)
+    logits = (x @ w.T).astype(jnp.float32)
+    return logits, WhisperCache(new_caches, cache.cross_k, cache.cross_v)
+
+
+def init_whisper_caches(cfg: ModelConfig, batch: int, max_len: int,
+                        dtype=jnp.bfloat16,
+                        window: int | None = None) -> WhisperCache:
+    eff = min(max_len, window) if window else max_len
+    one = init_cache(cfg, batch, eff, dtype)
+    l = cfg.n_layers
+    stack = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (l, *a.shape)), one)
+    h, hd = cfg.n_heads, cfg.resolved_head_dim
+    se = cfg.encoder_seq
+    return WhisperCache(
+        self_caches=stack,
+        cross_k=jnp.zeros((l, batch, se, h, hd), dtype),
+        cross_v=jnp.zeros((l, batch, se, h, hd), dtype),
+    )

@@ -1,0 +1,7 @@
+"""Optimizers (pure-JAX pytrees; optax is not available offline)."""
+from .adamw import adamw_init, adamw_update
+from .adafactor import adafactor_init, adafactor_update
+from .api import Optimizer, get_optimizer
+
+__all__ = ["adamw_init", "adamw_update", "adafactor_init",
+           "adafactor_update", "Optimizer", "get_optimizer"]

@@ -1,0 +1,75 @@
+"""Adafactor (Shazeer & Stern 2018) with factored second moments.
+
+This is the memory-feasible optimizer for the trillion-parameter kimi-k2
+config: the second moment of a [d_in, d_out] matrix is stored as a row
+vector + column vector (O(d_in + d_out) instead of O(d_in * d_out)), and no
+first moment is kept.  See EXPERIMENTS.md §Dry-run for the kimi-k2 memory
+arithmetic that motivates this.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    vr: dict   # row second moments (or full v for <2D leaves)
+    vc: dict   # col second moments (zeros placeholder for <2D leaves)
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor_init(params) -> AdafactorState:
+    def vr(p):
+        if _factored(p):
+            return jnp.zeros(p.shape[:-1], jnp.float32)
+        return jnp.zeros(p.shape, jnp.float32)
+
+    def vc(p):
+        if _factored(p):
+            return jnp.zeros((*p.shape[:-2], p.shape[-1]), jnp.float32)
+        return jnp.zeros((0,), jnp.float32)
+
+    return AdafactorState(
+        step=jnp.zeros((), jnp.int32),
+        vr=jax.tree_util.tree_map(vr, params),
+        vc=jax.tree_util.tree_map(vc, params),
+    )
+
+
+def adafactor_update(params, grads, state: AdafactorState, *,
+                     lr: float | jax.Array = 1e-3, decay: float = 0.8,
+                     eps: float = 1e-30, clip_threshold: float = 1.0,
+                     weight_decay: float = 0.0):
+    step = state.step + 1
+    beta = 1.0 - step.astype(jnp.float32) ** -decay
+
+    def upd(p, g, vr, vc):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if _factored(p):
+            vr = beta * vr + (1 - beta) * g2.mean(axis=-1)
+            vc = beta * vc + (1 - beta) * g2.mean(axis=-2)
+            denom = (vr / jnp.maximum(
+                vr.mean(axis=-1, keepdims=True), eps))[..., None] \
+                * vc[..., None, :]
+            u = g * jax.lax.rsqrt(jnp.maximum(denom, eps))
+        else:
+            vr = beta * vr + (1 - beta) * g2
+            u = g * jax.lax.rsqrt(jnp.maximum(vr, eps))
+        # update clipping by RMS
+        rms = jnp.sqrt(jnp.mean(u * u) + eps)
+        u = u / jnp.maximum(1.0, rms / clip_threshold)
+        new_p = (p.astype(jnp.float32) - lr * u
+                 - lr * weight_decay * p.astype(jnp.float32)).astype(p.dtype)
+        return new_p, vr, vc
+
+    out = jax.tree_util.tree_map(upd, params, grads, state.vr, state.vc)
+    pick = lambda i: jax.tree_util.tree_map(
+        lambda t: t[i], out, is_leaf=lambda x: isinstance(x, tuple))
+    return pick(0), AdafactorState(step=step, vr=pick(1), vc=pick(2))

@@ -1,0 +1,7 @@
+"""Edge serving runtime: KiSS-managed model container pools."""
+from .container import ModelContainer, pytree_mb
+from .server import KissServer, ServeResult, UnifiedServer
+from .batcher import Batcher, Request
+
+__all__ = ["ModelContainer", "pytree_mb", "KissServer", "UnifiedServer",
+           "ServeResult", "Batcher", "Request"]

@@ -1,0 +1,91 @@
+"""Model container: a resident model instance = weights + jitted step fns +
+a KV/state cache arena.  This is the serving-side realisation of the
+paper's "container": its memory footprint decides its KiSS size class and
+its instantiation cost IS the cold start."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import (decode_step, init_caches, init_params, prefill)
+from ..models.config import ModelConfig
+
+
+def pytree_mb(tree) -> float:
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(tree)) / 1e6
+
+
+class ModelContainer:
+    """A warm, executable instance of one model."""
+
+    def __init__(self, cfg: ModelConfig, *, seed: int = 0,
+                 max_batch: int = 4, max_len: int = 256):
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.max_len = max_len
+        t0 = time.perf_counter()
+        self.params = init_params(cfg, jax.random.PRNGKey(seed))
+        self._prefill = jax.jit(
+            lambda p, b: prefill(cfg, p, b, cache_len=max_len))
+        self._decode = jax.jit(
+            lambda p, b, c: decode_step(cfg, p, b, c))
+        # warm the compile caches (this is the measured cold-start cost)
+        self._compile(max_batch)
+        self.cold_start_s = time.perf_counter() - t0
+        self.size_mb = pytree_mb(self.params) + self._cache_mb(max_batch)
+
+    def _cache_mb(self, b: int) -> float:
+        return pytree_mb(init_caches(self.cfg, b, self.max_len,
+                                     dtype=jnp.float32))
+
+    def _dummy_batch(self, b: int, s: int) -> dict:
+        batch = {
+            "tokens": jnp.zeros((b, s), jnp.int32),
+            "positions": jnp.broadcast_to(
+                jnp.arange(s, dtype=jnp.int32)[None], (b, s)),
+            "seq_positions": jnp.broadcast_to(
+                jnp.arange(s, dtype=jnp.int32)[None], (b, s)),
+        }
+        if self.cfg.is_encoder_decoder:
+            batch["frame_embeds"] = jnp.zeros(
+                (b, self.cfg.encoder_seq, self.cfg.d_model), jnp.float32)
+        if self.cfg.arch_type == "vlm":
+            batch["positions"] = jnp.broadcast_to(
+                batch["positions"][..., None], (b, s, 3))
+        return batch
+
+    def _compile(self, b: int):
+        s = min(32, self.max_len // 2)
+        bt = self._dummy_batch(b, s)
+        logits, caches = self._prefill(self.params, bt)
+        dt = self._dummy_batch(b, 1)
+        dt["positions"] = dt["positions"] + s
+        dt["seq_positions"] = dt["seq_positions"] + s
+        self._decode(self.params, dt, caches)
+        self._compiled_prefill_len = s
+
+    def generate(self, tokens: np.ndarray, n_new: int) -> np.ndarray:
+        """Greedy continuation.  tokens: i32[B, S0] (B <= max_batch)."""
+        b, s0 = tokens.shape
+        pad_b = self.max_batch - b
+        s = self._compiled_prefill_len
+        toks = np.zeros((self.max_batch, s), np.int32)
+        toks[:b, :min(s0, s)] = tokens[:, :s]
+        batch = self._dummy_batch(self.max_batch, s)
+        batch["tokens"] = jnp.asarray(toks)
+        logits, caches = self._prefill(self.params, batch)
+        out = [np.asarray(jnp.argmax(logits[:, -1], -1))]
+        pos = s
+        for _ in range(n_new - 1):
+            dbatch = self._dummy_batch(self.max_batch, 1)
+            dbatch["tokens"] = jnp.asarray(out[-1][:, None])
+            dbatch["positions"] = dbatch["positions"] + pos
+            dbatch["seq_positions"] = dbatch["seq_positions"] + pos
+            logits, caches = self._decode(self.params, dbatch, caches)
+            out.append(np.asarray(jnp.argmax(logits[:, -1], -1)))
+            pos += 1
+        return np.stack(out, axis=1)[:b]

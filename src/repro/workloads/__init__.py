@@ -1,0 +1,10 @@
+"""Workload substrate: Azure-2019-like synthetic traces, app populations,
+and chained-invocation workloads."""
+from .azure import (TraceConfig, bursty_trace, edge_trace, steady_trace,
+                    stress_trace, synthesize)
+from .apps import AppPopulation, synthesize_apps
+from .chains import ChainConfig, chained_trace
+
+__all__ = ["TraceConfig", "bursty_trace", "edge_trace", "steady_trace",
+           "stress_trace", "synthesize", "AppPopulation", "synthesize_apps",
+           "ChainConfig", "chained_trace"]

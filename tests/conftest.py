@@ -1,0 +1,37 @@
+import os
+
+# Tests must see the single real CPU device (the 512-device override is
+# exclusively for launch/dryrun.py).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+from repro.core.types import Trace
+
+
+def quantized_trace(rng, n_events: int, n_small: int = 30, n_large: int = 8,
+                    large_frac: float = 0.25, horizon_s: float = 3600.0,
+                    size_small=(30, 60), size_large=(300, 400)) -> Trace:
+    """Random trace with exact-f32 arithmetic (times/durations on a 1/64 s
+    grid, integer MB sizes) so ref and JAX simulators agree bitwise."""
+    q = 64
+    is_large = rng.random(n_events) < large_frac
+    fid = np.where(is_large, 10_000 + rng.integers(0, n_large, n_events),
+                   rng.integers(0, n_small, n_events)).astype(np.int32)
+    size_s = rng.integers(size_small[0], size_small[1] + 1, n_small)
+    size_l = rng.integers(size_large[0], size_large[1] + 1, n_large)
+    size = np.where(is_large, size_l[fid % n_large], size_s[fid % n_small])
+    t = np.sort(rng.integers(0, int(horizon_s * q), n_events)) / q
+    warm = rng.integers(1, 5 * q, n_events) / q
+    cold = warm + rng.integers(q // 2, 20 * q, n_events) / q
+    return Trace(
+        t=t.astype(np.float32), func_id=fid,
+        size_mb=size.astype(np.float32),
+        cls=is_large.astype(np.int32),
+        warm_dur=warm.astype(np.float32), cold_dur=cold.astype(np.float32))
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

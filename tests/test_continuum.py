@@ -1,0 +1,58 @@
+"""Edge-cloud continuum + chained-workload tests (beyond-paper layers)."""
+import numpy as np
+import pytest
+
+from repro.core.continuum import ContinuumConfig, simulate_continuum
+from repro.workloads import edge_trace
+from repro.workloads.chains import ChainConfig, chained_trace
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return edge_trace(seed=0, duration_s=1200)
+
+
+def test_latency_accounting_conserves_events(trace):
+    res = simulate_continuum(ContinuumConfig(n_nodes=2, node_mb=2048.0),
+                             trace)
+    assert len(res.latencies) == len(trace)
+    assert (res.latencies > 0).all()
+    assert res.edge.total_accesses == len(trace)
+    assert res.cloud_offloads == res.edge.drops
+
+
+def test_kiss_improves_e2e_latency_under_contention(trace):
+    base = simulate_continuum(
+        ContinuumConfig(n_nodes=4, node_mb=2048.0, kiss=False), trace)
+    kiss = simulate_continuum(
+        ContinuumConfig(n_nodes=4, node_mb=2048.0, kiss=True), trace)
+    assert kiss.latency_stats()["mean_s"] < base.latency_stats()["mean_s"]
+    assert kiss.latency_stats()["p95_s"] < base.latency_stats()["p95_s"]
+
+
+def test_offload_priced_not_free(trace):
+    cheap = simulate_continuum(
+        ContinuumConfig(n_nodes=2, node_mb=1024.0, cloud_rtt_s=0.0), trace)
+    costly = simulate_continuum(
+        ContinuumConfig(n_nodes=2, node_mb=1024.0, cloud_rtt_s=5.0), trace)
+    assert costly.latency_stats()["mean_s"] > cheap.latency_stats()["mean_s"]
+
+
+def test_chained_trace_structure():
+    ctr, cids = chained_trace(ChainConfig(duration_s=600, seed=1))
+    assert len(ctr) == len(cids)
+    assert (np.diff(np.asarray(ctr.t)) >= 0).all()
+    # every chain instance contributes chain_len events
+    assert len(ctr) % 4 == 0
+    # members of one chain template share function ids across arrivals
+    assert len(np.unique(ctr.func_id)) <= 40 * 4
+
+
+def test_kiss_helps_chained_workloads():
+    ctr, _ = chained_trace(ChainConfig(duration_s=1800, seed=0))
+    from repro.core import (KissConfig, Policy, simulate_baseline_jax,
+                            simulate_kiss_jax)
+    b = simulate_baseline_jax(3 * 1024.0, ctr, Policy.LRU, 512)
+    k = simulate_kiss_jax(KissConfig(total_mb=3 * 1024.0, max_slots=512),
+                          ctr)
+    assert k.overall.cold_start_pct < b.overall.cold_start_pct

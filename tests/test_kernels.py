@@ -1,0 +1,132 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ssm_scan import ssm_scan_pallas
+from repro.kernels.wkv6 import wkv6_pallas
+
+KEY = jax.random.PRNGKey(0)
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("b,sq,skv,h,kv,d", [
+    (1, 128, 128, 4, 1, 64),     # MQA
+    (2, 256, 256, 8, 2, 64),     # GQA
+    (1, 128, 128, 4, 4, 128),    # MHA, wide head
+    (1, 384, 384, 2, 2, 32),     # non-pow2 seq (3 blocks of 128)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 96),
+                                           (False, None)])
+def test_flash_attention_sweep(b, sq, skv, h, kv, d, dtype, causal, window):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, sq, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, skv, kv, d), dtype)
+    v = jax.random.normal(ks[2], (b, skv, kv, d), dtype)
+    out = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 interpret=True)
+    exp = ref.flash_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("b,s,h,kv,d,window", [
+    (2, 1024, 8, 2, 64, None),
+    (2, 1024, 8, 1, 128, 600),   # MQA + ring window
+    (4, 512, 4, 4, 32, None),
+    (1, 256, 16, 8, 64, 200),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(b, s, h, kv, d, window, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, h, d), dtype)
+    kc = jax.random.normal(ks[1], (b, s, kv, d), dtype)
+    vc = jax.random.normal(ks[2], (b, s, kv, d), dtype)
+    cur = jnp.full((b,), s // 2, jnp.int32)
+    sp = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    sp = jnp.where(sp % 5 == 2, -1, sp)  # holes (ring / unfilled slots)
+    out = decode_attention_pallas(q, kc, vc, sp, cur, window=window,
+                                  interpret=True, block_s=256)
+    exp = ref.decode_attention(q, kc, vc, sp, cur, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (2, 256, 4, 64, 32, 64),
+    (1, 128, 2, 32, 16, 128),    # single chunk
+    (1, 512, 1, 64, 64, 64),
+])
+def test_ssm_scan_sweep(b, s, h, p, n, chunk):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    bb = jax.random.normal(ks[3], (b, s, h, n)) * 0.3
+    cc = jax.random.normal(ks[4], (b, s, h, n)) * 0.3
+    y, hf = ssm_scan_pallas(x, dt, a, bb, cc, interpret=True, chunk=chunk)
+    ye, he = ref.ssm_scan(x, dt, a, bb, cc)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye),
+                               atol=5e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(he),
+                               atol=5e-4, rtol=1e-3)
+
+
+def test_ssm_scan_with_initial_state():
+    ks = jax.random.split(KEY, 6)
+    b, s, h, p, n = 1, 128, 2, 32, 16
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    bb = jax.random.normal(ks[3], (b, s, h, n)) * 0.3
+    cc = jax.random.normal(ks[4], (b, s, h, n)) * 0.3
+    h0 = jax.random.normal(ks[5], (b, h, n, p)) * 0.2
+    y, hf = ssm_scan_pallas(x, dt, a, bb, cc, h0=h0, interpret=True, chunk=64)
+    ye, he = ref.ssm_scan(x, dt, a, bb, cc, h0=h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye),
+                               atol=5e-4, rtol=1e-3)
+
+
+@pytest.mark.parametrize("b,s,h,d,chunk", [
+    (2, 128, 2, 64, 64),
+    (1, 64, 4, 32, 32),
+    (1, 128, 1, 64, 128),   # single chunk
+])
+def test_wkv6_sweep(b, s, h, d, chunk):
+    ks = jax.random.split(KEY, 5)
+    r = jax.random.normal(ks[0], (b, s, h, d)) * 0.5
+    k = jax.random.normal(ks[1], (b, s, h, d)) * 0.5
+    v = jax.random.normal(ks[2], (b, s, h, d)) * 0.5
+    w = jax.random.normal(ks[3], (b, s, h, d)) * 0.5 - 1.0
+    u = jax.random.normal(ks[4], (h, d)) * 0.3
+    y, sf = wkv6_pallas(r, k, v, w, u, interpret=True, chunk=chunk)
+    ye, se = ref.wkv6(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye),
+                               atol=5e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(sf), np.asarray(se),
+                               atol=5e-4, rtol=1e-3)
+
+
+def test_wkv6_state_continuation():
+    """Two half-sequences with carried state == one full sequence."""
+    ks = jax.random.split(KEY, 5)
+    b, s, h, d = 1, 128, 2, 32
+    r = jax.random.normal(ks[0], (b, s, h, d)) * 0.5
+    k = jax.random.normal(ks[1], (b, s, h, d)) * 0.5
+    v = jax.random.normal(ks[2], (b, s, h, d)) * 0.5
+    w = jax.random.normal(ks[3], (b, s, h, d)) * 0.5 - 1.0
+    u = jax.random.normal(ks[4], (h, d)) * 0.3
+    y_full, s_full = ref.wkv6(r, k, v, w, u)
+    y1, st = ref.wkv6(r[:, :64], k[:, :64], v[:, :64], w[:, :64], u)
+    y2, s2 = ref.wkv6(r[:, 64:], k[:, 64:], v[:, 64:], w[:, 64:], u, state=st)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y_full[:, 64:]),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
+                               atol=1e-5, rtol=1e-5)

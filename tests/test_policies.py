@@ -1,0 +1,77 @@
+"""Replacement-policy behaviour unit tests (sequential oracle)."""
+import numpy as np
+
+from repro.core.pool_ref import WarmPool
+from repro.core.types import ClassMetrics, Policy, PoolConfig
+
+
+def _access(pool, t, fid, size, warm=1.0, cold=5.0):
+    m = ClassMetrics()
+    out = pool.access(t, fid, size, warm, cold, m)
+    return out
+
+
+def test_lru_evicts_oldest():
+    pool = WarmPool(PoolConfig(100.0, Policy.LRU))
+    _access(pool, 0.0, 1, 40)
+    _access(pool, 10.0, 2, 40)
+    # touch 1 so 2 becomes LRU
+    _access(pool, 20.0, 1, 40)
+    out = _access(pool, 30.0, 3, 40)   # needs eviction
+    assert out == "miss"
+    ids = {c.func_id for c in pool.containers}
+    assert ids == {1, 3}  # 2 evicted
+
+
+def test_freq_evicts_least_frequent():
+    pool = WarmPool(PoolConfig(100.0, Policy.FREQ))
+    _access(pool, 0.0, 1, 40)
+    _access(pool, 1.0, 2, 40)
+    for t in range(2, 6):
+        _access(pool, float(t), 1, 40)   # freq(1)=5, freq(2)=1
+    out = _access(pool, 10.0, 3, 40)
+    assert out == "miss"
+    ids = {c.func_id for c in pool.containers}
+    assert ids == {1, 3}
+
+
+def test_greedy_dual_prefers_keeping_costly():
+    pool = WarmPool(PoolConfig(100.0, Policy.GREEDY_DUAL))
+    _access(pool, 0.0, 1, 40, warm=1.0, cold=100.0)   # expensive cold start
+    _access(pool, 0.5, 2, 40, warm=1.0, cold=1.5)     # cheap cold start
+    out = _access(pool, 10.0, 3, 40)
+    assert out == "miss"
+    ids = {c.func_id for c in pool.containers}
+    assert ids == {1, 3}  # cheap-to-restart 2 evicted first
+
+
+def test_busy_containers_not_evicted():
+    pool = WarmPool(PoolConfig(100.0, Policy.LRU))
+    _access(pool, 0.0, 1, 60, warm=1.0, cold=50.0)   # busy until t=50
+    out = _access(pool, 10.0, 2, 60)                  # 1 still busy
+    assert out == "drop"
+    assert {c.func_id for c in pool.containers} == {1}
+    out = _access(pool, 60.0, 2, 60)                  # 1 idle now
+    assert out == "miss"
+    assert {c.func_id for c in pool.containers} == {2}
+
+
+def test_oversized_container_drops():
+    pool = WarmPool(PoolConfig(100.0, Policy.LRU))
+    assert _access(pool, 0.0, 1, 200) == "drop"
+
+
+def test_concurrent_invocations_spawn_second_container():
+    pool = WarmPool(PoolConfig(100.0, Policy.LRU))
+    assert _access(pool, 0.0, 1, 40, warm=100.0, cold=100.0) == "miss"
+    # same function invoked while first container busy -> second cold start
+    assert _access(pool, 1.0, 1, 40, warm=1.0, cold=5.0) == "miss"
+    assert len(pool.containers) == 2
+
+
+def test_hit_updates_recency_and_busy():
+    pool = WarmPool(PoolConfig(100.0, Policy.LRU))
+    _access(pool, 0.0, 1, 40, warm=2.0)
+    assert _access(pool, 5.0, 1, 40, warm=2.0) == "hit"
+    c = pool.containers[0]
+    assert c.last_use == 5.0 and c.freq == 2.0 and c.busy_until == 7.0

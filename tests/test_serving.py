@@ -1,0 +1,88 @@
+"""Serving-runtime integration: KiSS managing real model containers."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.types import Policy
+from repro.serving import Batcher, KissServer, Request, UnifiedServer
+
+
+@pytest.fixture(scope="module")
+def registry():
+    return {
+        "tiny-dense": get_config("starcoder2-3b").reduced(),
+        "tiny-moe": get_config("granite-moe-1b-a400m").reduced(),
+    }
+
+
+CKW = dict(max_batch=2, max_len=64)
+
+
+def test_cold_then_warm(registry):
+    srv = KissServer(registry, total_mb=200.0, threshold_mb=8.0,
+                     container_kwargs=CKW)
+    toks = np.zeros((1, 8), np.int32)
+    r1 = srv.submit("tiny-dense", toks, n_new=2, now=0.0)
+    assert r1.status == "miss" and r1.tokens.shape == (1, 2)
+    r2 = srv.submit("tiny-dense", toks, n_new=2, now=1.0)
+    assert r2.status == "hit"
+    assert r2.latency_s < r1.latency_s  # warm is faster than cold
+
+
+def test_cold_start_latency_is_real_compile(registry):
+    srv = KissServer(registry, total_mb=200.0, threshold_mb=8.0,
+                     container_kwargs=CKW)
+    toks = np.zeros((1, 8), np.int32)
+    r1 = srv.submit("tiny-dense", toks, n_new=2, now=0.0)
+    r2 = srv.submit("tiny-dense", toks, n_new=2, now=1.0)
+    assert r1.latency_s > 10 * r2.latency_s
+
+
+def test_drop_when_pool_too_small(registry):
+    srv = KissServer(registry, total_mb=1.0, threshold_mb=8.0,
+                     container_kwargs=CKW)
+    r = srv.submit("tiny-dense", np.zeros((1, 4), np.int32), now=0.0)
+    assert r.status == "drop"
+    assert srv.stats.small.drops == 1
+
+
+def test_eviction_destroys_instance(registry):
+    # pool fits exactly one container class-0 at a time
+    srv = KissServer(registry, total_mb=12.5, small_frac=0.8,
+                     threshold_mb=8.0, container_kwargs=CKW)
+    sz = srv.size_mb("tiny-dense")
+    assert sz <= 10.0  # sanity: fits in the 10MB small pool
+    r1 = srv.submit("tiny-dense", np.zeros((1, 4), np.int32), now=0.0)
+    assert r1.status == "miss"
+    assert "tiny-dense" in srv.containers
+
+
+def test_classes_routed_to_separate_pools(registry):
+    srv = KissServer(registry, total_mb=100.0, threshold_mb=8.0,
+                     container_kwargs=CKW)
+    assert srv.size_class("tiny-moe") == 1
+    assert srv.size_class("tiny-dense") == 0
+    assert srv._pool_for("tiny-moe") is srv.large_pool
+    assert srv._pool_for("tiny-dense") is srv.small_pool
+
+
+def test_unified_baseline_single_pool(registry):
+    srv = UnifiedServer(registry, total_mb=100.0, threshold_mb=8.0,
+                        container_kwargs=CKW)
+    assert srv._pool_for("tiny-moe") is srv._pool_for("tiny-dense")
+
+
+def test_batcher_groups_and_pads(registry):
+    srv = KissServer(registry, total_mb=200.0, threshold_mb=8.0,
+                     container_kwargs=CKW)
+    b = Batcher(srv, max_batch=2)
+    rng = np.random.default_rng(0)
+    for i in range(4):
+        toks = rng.integers(0, 100, 4 + i).astype(np.int32)
+        b.enqueue(Request("tiny-dense", toks, n_new=2, arrival=float(i)))
+    done = b.drain()
+    assert len(done) == 4
+    for r in done:
+        assert r.result is not None and r.result.status in ("hit", "miss")
+        assert r.result.tokens.shape == (1, 2)
+    assert len(b.queue) == 0

@@ -1,0 +1,118 @@
+"""Sharding-spec unit tests + a subprocess mini dry-run (the 512-device
+override must not leak into this process)."""
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch.specs import batch_specs_for, decode_window, params_shapes_for
+from repro.models.config import INPUT_SHAPES
+from repro.models.sharding import batch_specs, cache_specs, param_specs
+
+
+class FakeMesh:
+    """Just enough mesh surface for spec construction."""
+
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH_POD = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+@pytest.mark.parametrize("arch", ["glm4-9b", "kimi-k2-1t-a32b", "rwkv6-7b",
+                                  "zamba2-1.2b", "whisper-medium"])
+@pytest.mark.parametrize("mesh", [MESH, MESH_POD])
+def test_param_specs_structure_and_divisibility(arch, mesh):
+    cfg = get_config(arch)
+    shapes = params_shapes_for(cfg)
+    specs = param_specs(cfg, shapes, mesh, "train")
+    flat_shapes = jax.tree_util.tree_leaves(shapes)
+    flat_specs = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_shapes) == len(flat_specs)
+    for sh, sp in zip(flat_shapes, flat_specs):
+        spec_t = tuple(sp) + (None,) * (len(sh.shape) - len(tuple(sp)))
+        for dim, axes in zip(sh.shape, spec_t):
+            if axes is None:
+                continue
+            ax = (axes,) if isinstance(axes, str) else axes
+            total = int(np.prod([mesh.shape[a] for a in ax]))
+            assert dim % total == 0, (arch, sh.shape, sp)
+
+
+def test_experts_sharded_over_model():
+    cfg = get_config("kimi-k2-1t-a32b")
+    shapes = params_shapes_for(cfg)
+    specs = param_specs(cfg, shapes, MESH, "train")
+    gate_spec = specs["layers"]["moe"]["gate"]
+    assert tuple(gate_spec)[0] == None  # stacked layer dim unsharded
+    assert tuple(gate_spec)[1] == "model"  # expert dim
+
+
+def test_serve_mode_replicates_over_data():
+    cfg = get_config("glm4-9b")
+    shapes = params_shapes_for(cfg)
+    specs = param_specs(cfg, shapes, MESH, "serve")
+    wq = tuple(specs["layers"]["attn"]["wq"]["w"])
+    assert wq[1] is None          # in_dim replicated in serve mode
+    assert wq[2] == "model"       # out (heads) TP
+
+
+def test_kv_cache_spec_rules():
+    from repro.launch.specs import cache_specs_for
+    cfg = get_config("glm4-9b")   # kv=2: shard head_dim instead
+    cshapes = cache_specs_for(cfg, INPUT_SHAPES["decode_32k"])
+    specs = cache_specs(cfg, cshapes, MESH)
+    k_spec = tuple(specs.k)
+    assert k_spec[1] in ("data", ("data",))  # batch
+    assert k_spec[4] == "model"    # head_dim sharded (kv=2 < 16)
+
+    cfg2 = get_config("zamba2-1.2b")  # kv=32: shard kv heads
+    cshapes2 = cache_specs_for(cfg2, INPUT_SHAPES["decode_32k"])
+    specs2 = cache_specs(cfg2, cshapes2, MESH)
+    k2 = [tuple(s.k) for s in specs2 if hasattr(s, "k")]
+    assert any(t[2] == "model" for t in k2)  # attn cache kv-head sharded
+
+
+def test_long_context_window_policy():
+    shapes = INPUT_SHAPES
+    assert decode_window(get_config("rwkv6-7b"), shapes["long_500k"]) is None
+    assert decode_window(get_config("glm4-9b"), shapes["long_500k"]) == 4096
+    assert decode_window(get_config("starcoder2-3b"),
+                         shapes["long_500k"]) == 4096
+    assert decode_window(get_config("glm4-9b"), shapes["decode_32k"]) is None
+
+
+def test_batch_specs_cover_all_inputs():
+    for arch in ("qwen2-vl-7b", "whisper-medium", "granite-34b"):
+        cfg = get_config(arch)
+        for shape in INPUT_SHAPES.values():
+            b = batch_specs_for(cfg, shape)
+            specs = batch_specs(cfg, b, MESH)
+            assert set(specs) == set(b)
+
+
+@pytest.mark.slow
+def test_mini_dryrun_subprocess():
+    """Real lower+compile of one pair on the production mesh, in a
+    subprocess so the 512-device env doesn't pollute this process."""
+    code = (
+        "import sys; sys.argv=['dryrun']\n"
+        "from repro.launch.dryrun import run_one\n"
+        "rec = run_one('starcoder2-3b', 'decode_32k', False)\n"
+        "assert rec['compile_s'] > 0\n"
+        "assert rec['collectives']['total_bytes'] > 0\n"
+        "print('MINI-DRYRUN-OK')\n"
+    )
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=560,
+                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+                         cwd="/root/repo")
+    assert "MINI-DRYRUN-OK" in out.stdout, out.stderr[-2000:]

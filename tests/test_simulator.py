@@ -1,0 +1,129 @@
+"""Property tests: the JAX lax.scan simulator is bit-identical to the
+sequential oracle, and pool invariants hold."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (KissConfig, Policy, SimResult, Trace,
+                        simulate_baseline, simulate_baseline_jax,
+                        simulate_kiss, simulate_kiss_jax, sweep_kiss)
+from repro.core.pool_ref import WarmPool
+from repro.core.types import ClassMetrics, PoolConfig
+
+from conftest import quantized_trace
+
+POLICIES = [Policy.LRU, Policy.GREEDY_DUAL, Policy.FREQ]
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       policy=st.sampled_from(POLICIES),
+       total_mb=st.sampled_from([512.0, 1024.0, 2048.0, 4096.0]))
+def test_jax_matches_oracle_baseline(seed, policy, total_mb):
+    rng = np.random.default_rng(seed)
+    trace = quantized_trace(rng, 400)
+    r = simulate_baseline(total_mb, trace, policy, max_slots=96)
+    j = simulate_baseline_jax(total_mb, trace, policy, max_slots=96)
+    assert r.summary() == j.summary()
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       policy=st.sampled_from(POLICIES),
+       frac=st.sampled_from([0.5, 0.7, 0.8, 0.9]))
+def test_jax_matches_oracle_kiss(seed, policy, frac):
+    rng = np.random.default_rng(seed)
+    trace = quantized_trace(rng, 400)
+    cfg = KissConfig(total_mb=2048.0, small_frac=frac, policy=policy,
+                     max_slots=96)
+    r = simulate_kiss(cfg, trace)
+    j = simulate_kiss_jax(cfg, trace)
+    assert r.summary() == j.summary()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), policy=st.sampled_from(POLICIES))
+def test_metrics_conservation(seed, policy):
+    """hits + misses + drops == number of events, per class."""
+    rng = np.random.default_rng(seed)
+    trace = quantized_trace(rng, 300)
+    res = simulate_kiss(KissConfig(total_mb=1024.0, policy=policy,
+                                   max_slots=96), trace)
+    n_small = int((trace.cls == 0).sum())
+    n_large = int((trace.cls == 1).sum())
+    assert res.small.total_accesses == n_small
+    assert res.large.total_accesses == n_large
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_pool_occupancy_invariant(seed):
+    """Pool never exceeds capacity; free + used == capacity."""
+    rng = np.random.default_rng(seed)
+    trace = quantized_trace(rng, 300)
+    pool = WarmPool(PoolConfig(1024.0, Policy.LRU))
+    m = ClassMetrics()
+    for i in range(len(trace)):
+        pool.access(float(trace.t[i]), int(trace.func_id[i]),
+                    float(trace.size_mb[i]), float(trace.warm_dur[i]),
+                    float(trace.cold_dur[i]), m)
+        assert pool.occupancy_ok()
+
+
+def test_infinite_memory_no_drops_and_low_cold(rng):
+    """With memory >> working set every function cold-starts exactly once."""
+    trace = quantized_trace(rng, 1000)
+    res = simulate_baseline(10_000_000.0, trace, Policy.LRU, max_slots=512)
+    o = res.overall
+    assert o.drops == 0
+    uniq = len(np.unique(trace.func_id))
+    # misses >= unique functions (first-touch); busy-concurrency can add more
+    assert o.misses >= uniq
+    assert o.misses <= uniq + len(trace) // 4
+
+
+def test_tiny_memory_everything_drops(rng):
+    trace = quantized_trace(rng, 200)
+    res = simulate_baseline(8.0, trace, Policy.LRU)  # smaller than any cont.
+    assert res.overall.drops == len(trace)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), policy=st.sampled_from(POLICIES),
+       frac=st.sampled_from([0.5, 0.8]))
+def test_kiss_decomposes_into_independent_pools(seed, policy, frac):
+    """KiSS == two isolated single-pool simulations on the class-filtered
+    traces (pool isolation is the policy's defining property)."""
+    rng = np.random.default_rng(seed)
+    trace = quantized_trace(rng, 300)
+    total = 2048.0
+    cfg = KissConfig(total_mb=total, small_frac=frac, policy=policy,
+                     max_slots=96)
+    whole = simulate_kiss(cfg, trace)
+    small = simulate_baseline(total * frac,
+                              trace.select(np.asarray(trace.cls) == 0),
+                              policy, 96)
+    large = simulate_baseline(total * (1 - frac),
+                              trace.select(np.asarray(trace.cls) == 1),
+                              policy, 96)
+    assert whole.small.__dict__ == small.small.__dict__
+    assert whole.large.__dict__ == large.large.__dict__
+
+
+def test_sweep_kiss_matches_pointwise(rng):
+    trace = quantized_trace(rng, 300)
+    totals, fracs, pols = [1024.0, 2048.0], [0.8], [Policy.LRU, Policy.FREQ]
+    grid = sweep_kiss(trace, totals, fracs, pols, max_slots=96)
+    i = 0
+    for tm in totals:
+        for fr in fracs:
+            for po in pols:
+                cfg = KissConfig(total_mb=tm, small_frac=fr, policy=po,
+                                 max_slots=96)
+                ref = simulate_kiss(cfg, trace)
+                got = grid[i]
+                assert int(got[0].sum() + got[1].sum()
+                           - got[0, 3] - got[1, 3]) == len(trace)
+                assert int(got[0, 1]) == ref.small.misses
+                assert int(got[1, 2]) == ref.large.drops
+                i += 1

@@ -1,0 +1,81 @@
+"""End-to-end behaviour: the paper's headline claims at test scale.
+
+On a memory-constrained edge pool, KiSS (80-20 partitioned pools) must
+reduce cold starts vs the unified-pool baseline, hold per-class fairness,
+and be policy-independent — the same trends as Figs 7-16 (full-scale
+validation lives in benchmarks/)."""
+import numpy as np
+import pytest
+
+from repro.core import (KissConfig, Policy, simulate_baseline_jax,
+                        simulate_kiss_jax)
+from repro.workloads import edge_trace
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return edge_trace(seed=0, duration_s=3600)
+
+
+def _pair(trace, total_mb, policy=Policy.LRU, max_slots=512):
+    base = simulate_baseline_jax(total_mb, trace, policy, max_slots)
+    kiss = simulate_kiss_jax(
+        KissConfig(total_mb=total_mb, policy=policy, max_slots=max_slots),
+        trace)
+    return base, kiss
+
+
+def test_kiss_reduces_cold_starts_constrained(trace):
+    """Paper Fig 8 headline: ~60% cold-start reduction when constrained."""
+    base, kiss = _pair(trace, 4 * 1024.0)
+    assert kiss.overall.cold_start_pct < base.overall.cold_start_pct * 0.5
+
+
+def test_kiss_reduces_drops_when_most_constrained(trace):
+    """Paper Fig 9: drops improve under heavy contention (our trace places
+    this band at 2-3 GB; see EXPERIMENTS.md §Workload-calibration)."""
+    base, kiss = _pair(trace, 2 * 1024.0)
+    assert kiss.overall.drop_pct < base.overall.drop_pct * 0.75
+
+
+def test_adaptive_recovers_midband_drop_regression(trace):
+    """Static 80-20 pays a drop penalty mid-band (the paper observes the
+    same trade-off at its low end, §7); the beyond-paper adaptive
+    partitioner must recover most of it while keeping the cold-start win."""
+    from repro.core.adaptive import AdaptiveConfig, simulate_kiss_adaptive
+    total = 6 * 1024.0
+    base = simulate_baseline_jax(total, trace, Policy.LRU, 512)
+    kiss = simulate_kiss_jax(KissConfig(total_mb=total, max_slots=512), trace)
+    ada, _ = simulate_kiss_adaptive(
+        AdaptiveConfig(base=KissConfig(total_mb=total, max_slots=512),
+                       epoch_events=512), trace)
+    assert ada.overall.drop_pct < kiss.overall.drop_pct * 0.7
+    assert ada.overall.cold_start_pct < base.overall.cold_start_pct
+
+
+def test_both_near_zero_when_abundant(trace):
+    """Paper: >16 GB everything converges to ~zero."""
+    base, kiss = _pair(trace, 64 * 1024.0, max_slots=1024)
+    assert base.overall.cold_start_pct < 10.0
+    assert kiss.overall.cold_start_pct < 10.0
+    assert kiss.overall.drops == 0
+
+
+def test_fairness_both_classes_improve(trace):
+    """Paper Figs 10-13: both classes benefit in the constrained band."""
+    base, kiss = _pair(trace, 4 * 1024.0)
+    assert kiss.small.cold_start_pct < base.small.cold_start_pct
+    assert kiss.large.cold_start_pct < base.large.cold_start_pct
+
+
+def test_policy_independence(trace):
+    """Paper Figs 14-16: the KiSS gain holds under LRU, GD and FREQ."""
+    for pol in (Policy.LRU, Policy.GREEDY_DUAL, Policy.FREQ):
+        base, kiss = _pair(trace, 4 * 1024.0, pol)
+        assert kiss.overall.cold_start_pct < base.overall.cold_start_pct, pol
+
+
+def test_small_class_dominates_invocations(trace):
+    n_small = int((trace.cls == 0).sum())
+    n_large = int((trace.cls == 1).sum())
+    assert 3.5 <= n_small / n_large <= 7.0

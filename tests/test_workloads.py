@@ -1,0 +1,88 @@
+"""The synthetic Azure-like traces must reproduce the paper's documented
+workload statistics (§2.5, Figs 2-5)."""
+import numpy as np
+
+from repro.core.analyzer import (analyze, classify, estimate_function_memory,
+                                 invocation_ratio, percentile_distribution,
+                                 sliding_window_iats)
+from repro.workloads import (bursty_trace, edge_trace, steady_trace,
+                             synthesize_apps)
+
+
+def test_invocation_ratio_in_paper_band():
+    """Fig 3: small functions invoke 4-6.5x more than large."""
+    tr = edge_trace(seed=0, duration_s=3600)
+    r = invocation_ratio(tr)["ratio"]
+    assert 3.5 <= r <= 7.0, r
+
+
+def test_container_sizes_in_edge_ranges():
+    """§4.2: small 30-60 MB, large 300-400 MB."""
+    tr = edge_trace(seed=1, duration_s=1800)
+    s = np.asarray(tr.size_mb)
+    c = np.asarray(tr.cls)
+    assert s[c == 0].min() >= 30 and s[c == 0].max() <= 60
+    assert s[c == 1].min() >= 300 and s[c == 1].max() <= 400
+
+
+def test_cold_start_latency_percentiles():
+    """Fig 5: p85 ~15 s small vs up to ~100 s large."""
+    tr = edge_trace(seed=2, duration_s=3600)
+    prof = analyze(tr, threshold_mb=225.0)
+    assert 5.0 <= prof.small_cold_p85 <= 30.0
+    assert 40.0 <= prof.large_cold_p85 <= 200.0
+    assert prof.large_cold_p85 > 3 * prof.small_cold_p85
+
+
+def test_suggested_split_near_80_20():
+    tr = edge_trace(seed=0, duration_s=3600)
+    frac = analyze(tr).suggested_small_frac
+    assert 0.7 <= frac <= 0.9
+
+
+def test_function_memory_estimation_eq1():
+    """Eq (1) exactness + Fig 2 shape: p98 of small functions < 225 MB."""
+    app_mem = np.array([100.0, 400.0])
+    f_dur = np.array([2.0, 8.0])
+    a_dur = np.array([4.0, 16.0])
+    est = estimate_function_memory(app_mem, f_dur, a_dur)
+    np.testing.assert_allclose(est, [50.0, 200.0])
+
+    apps = synthesize_apps(seed=0)
+    fm = apps.function_memory()
+    small = fm[classify(fm) == 0]
+    assert np.percentile(small, 98) < 225.0
+    assert fm.max() <= 560.0  # "up to ~500 MB"
+
+
+def test_iat_similarity_across_classes():
+    """Fig 4: large functions invoke at similar-or-better intervals."""
+    tr = edge_trace(seed=3, duration_s=2 * 3600)
+    iats = sliding_window_iats(tr, window_s=1800.0, stride_s=900.0)
+    assert len(iats["small"]) and len(iats["large"])
+    # mean IATs within an order of magnitude of each other
+    ratio = np.mean(iats["large"]) / np.mean(iats["small"])
+    assert 0.1 <= ratio <= 10.0
+
+
+def test_bursty_trace_has_rate_spikes():
+    tr = bursty_trace(seed=0, duration_s=3600)
+    st = steady_trace(seed=0, duration_s=3600)
+    def peak_over_mean(t):
+        counts, _ = np.histogram(np.asarray(t.t), bins=60)
+        return counts.max() / max(counts.mean(), 1e-9)
+    assert peak_over_mean(tr) > peak_over_mean(st) * 1.25
+
+
+def test_trace_sorted_and_quantized():
+    tr = edge_trace(seed=4, duration_s=600)
+    t = np.asarray(tr.t)
+    assert (np.diff(t) >= 0).all()
+    assert np.allclose(t * 64, np.round(t * 64))  # 1/64 s grid
+    assert np.allclose(tr.size_mb, np.round(tr.size_mb))  # integer MB
+
+
+def test_percentile_distribution_monotone():
+    tr = edge_trace(seed=5, duration_s=600)
+    p, v = percentile_distribution(np.asarray(tr.size_mb))
+    assert (np.diff(v) >= 0).all()
