@@ -1,0 +1,16 @@
+# Convenience targets.  `make check` is the fast pre-commit signal;
+# `make test` is the tier-1 suite the driver runs.
+
+.PHONY: check test bench figures
+
+check:
+	bash scripts/check.sh
+
+test:
+	PYTHONPATH=src python -m pytest -q
+
+bench:
+	PYTHONPATH=src python -m benchmarks.run
+
+figures:
+	PYTHONPATH=src python -m benchmarks.figures

@@ -74,7 +74,31 @@ def main():
     plt.legend(); plt.grid(alpha=.3); plt.tight_layout()
     plt.savefig(f"{OUT}/fig9_drops.png", dpi=120)
 
-    print(f"wrote {OUT}/fig7..9*.png")
+    # Fig C (beyond-paper): routing policy on a 16-node heterogeneous
+    # cluster — p95/p99 end-to-end latency and cloud-offload fraction.
+    from .continuum_bench import routing_comparison
+    byr = routing_comparison(paper_trace(duration_s=1800.0))
+    names = [r.name.lower() for r in byr]
+    p95 = [res.latency_stats()["p95_s"] for res in byr.values()]
+    p99 = [res.latency_stats()["p99_s"] for res in byr.values()]
+    off = [res.offload_pct for res in byr.values()]
+    x = np.arange(len(names))
+    fig, (ax1, ax2) = plt.subplots(1, 2, figsize=(10, 4.5))
+    ax1.bar(x - 0.2, p95, 0.4, label="p95", color="tab:red")
+    ax1.bar(x + 0.2, p99, 0.4, label="p99", color="tab:orange")
+    ax1.set_xticks(x, names, rotation=15)
+    ax1.set_ylabel("end-to-end latency (s)")
+    ax1.set_title("Fig C — routing on 16 heterogeneous nodes")
+    ax1.legend(); ax1.grid(alpha=.3, axis="y")
+    ax2.bar(x, off, 0.5, color="tab:blue")
+    ax2.set_xticks(x, names, rotation=15)
+    ax2.set_ylabel("cloud offload %")
+    ax2.set_title("cloud offload by routing policy")
+    ax2.grid(alpha=.3, axis="y")
+    fig.tight_layout()
+    fig.savefig(f"{OUT}/figC_cluster_routing.png", dpi=120)
+
+    print(f"wrote {OUT}/fig7..9*.png + figC_cluster_routing.png")
 
 
 if __name__ == "__main__":

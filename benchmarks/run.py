@@ -24,7 +24,7 @@ def main() -> None:
         ("stress(sec6.5)", stress.run),
         ("serving_integration", serving_bench.run),
         ("sweep_speed(beyond-paper)", sweep_speed.run),
-        ("continuum+chains(beyond-paper)", continuum_bench.run),
+        ("continuum+cluster+chains(beyond-paper)", continuum_bench.run),
         ("roofline(dry-run)", roofline.run),
     ]
     filters = sys.argv[1:]

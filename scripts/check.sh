@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Fast signal before the full ~4 min suite: core simulator equivalence
+# (deterministic), the cluster subsystem incl. the JAX<->oracle
+# equivalence tests, the continuum layer, and workload calibration.
+# Target: < 2 minutes on the CPU container.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+exec python -m pytest -q -m "not slow" \
+    tests/test_simulator.py \
+    tests/test_cluster.py \
+    tests/test_continuum.py \
+    tests/test_workloads.py \
+    "$@"

@@ -1,0 +1,51 @@
+"""repro.cluster — batched edge-cluster continuum engine (beyond-paper).
+
+The paper evaluates KiSS on ONE edge node and counts drops; this subsystem
+simulates a whole heterogeneous edge cluster in front of a priced cloud
+tier, as a single JAX ``lax.scan`` program: all ``2N`` warm pools of the N
+nodes are stacked on a leading axis, routing happens *inside* the scan,
+and whole families of cluster configurations sweep in one ``vmap``
+(:func:`sweep_cluster`).  A sequential numpy oracle with identical
+semantics lives in ``repro.core.continuum`` and the two are
+equivalence-tested outcome-by-outcome (``tests/test_cluster.py``).
+
+Routing policies (:class:`RoutingPolicy`, carried as data so sweeps can
+vmap over them):
+
+* ``STICKY`` — per-function hash ``func_id % n_nodes``.  Maximum temporal
+  locality (the property KiSS protects), but hot functions collide and a
+  small node may be asked to host containers it can never fit.
+* ``LEAST_LOADED`` — highest instantaneous free fraction of the target
+  pool wins.  Best load spread, worst locality (a function's containers
+  smear across nodes, so warm hits are rediscovered per node).
+* ``SIZE_AWARE`` — sticky-hash restricted to the nodes whose target pool
+  is large enough to ever host the container: large containers are steered
+  to big-memory nodes, small ones keep full sticky locality.  The cluster
+  analogue of KiSS's size-class insight.
+* ``POWER_OF_TWO`` — two hashes nominate two candidate nodes; the less
+  loaded one wins.  Near-sticky locality with a load-escape valve.
+
+Heterogeneity: per-node memory, KiSS split, and unified/KiSS mode are
+arrays (``ClusterConfig.node_mb/small_frac/unified``); a unified node is
+modeled as pool 0 = whole node, pool 1 = zero capacity.
+
+Cloud tier: a drop executes in the cloud at ``cloud_rtt_s`` plus the
+cold/warm execution time, cold with probability ``cloud_cold_prob``
+(pre-drawn, common random numbers across engines and sweep lanes).
+"""
+from ..core.continuum import (ClusterConfig, RoutingPolicy,
+                              cloud_cold_draws, cluster_outcomes_ref,
+                              continuum_latencies, route_hashes)
+from .engine import (ClusterEvent, cluster_events, init_cluster,
+                     simulate_cluster_jax, simulate_cluster_ref,
+                     sweep_cluster)
+from .metrics import ClusterResult, build_result
+from .presets import het16_cluster
+
+__all__ = [
+    "ClusterConfig", "RoutingPolicy", "ClusterEvent", "ClusterResult",
+    "build_result", "cloud_cold_draws", "cluster_events",
+    "cluster_outcomes_ref", "continuum_latencies", "het16_cluster",
+    "init_cluster", "route_hashes", "simulate_cluster_jax",
+    "simulate_cluster_ref", "sweep_cluster",
+]

@@ -14,11 +14,14 @@ from .simulator_ref import simulate_baseline, simulate_kiss
 from .simulator_jax import (metrics_to_result, simulate_baseline_jax,
                             simulate_kiss_jax, sweep_baseline, sweep_kiss)
 from .analyzer import WorkloadProfile, analyze, classify
-from .continuum import ContinuumConfig, ContinuumResult, simulate_continuum
+from .continuum import (ClusterConfig, ContinuumConfig, ContinuumResult,
+                        RoutingPolicy, cluster_outcomes_ref,
+                        simulate_continuum)
 
 __all__ = [
-    "LARGE", "SMALL", "ClassMetrics", "KissConfig", "Policy", "PoolConfig",
-    "SimResult", "Trace", "simulate_baseline", "simulate_kiss",
+    "LARGE", "SMALL", "ClassMetrics", "ClusterConfig", "KissConfig",
+    "Policy", "PoolConfig", "RoutingPolicy", "SimResult", "Trace",
+    "cluster_outcomes_ref", "simulate_baseline", "simulate_kiss",
     "simulate_baseline_jax", "simulate_kiss_jax", "sweep_baseline",
     "sweep_kiss", "metrics_to_result", "WorkloadProfile", "analyze",
     "classify",

@@ -1,4 +1,4 @@
-"""Edge-cloud continuum simulation (beyond the paper's single-node DES).
+"""Edge-cloud continuum: cluster config, routing, and the numpy oracle.
 
 The paper evaluates one edge node and counts *drops* — invocations "punted
 up to the cloud" (§1).  This module closes the loop: a cluster of edge
@@ -6,19 +6,213 @@ nodes (each running KiSS or the unified baseline) in front of a cloud tier
 with a round-trip penalty, measuring what the drop actually costs —
 end-to-end latency — instead of just counting it.
 
-Routing: requests hash per function to an edge node (sticky routing keeps
-temporal locality, the property KiSS protects); a dropped request executes
-in the cloud at +rtt and with the cloud's own (always-warm-ish) latency.
+This file is the *sequential oracle* for the batched JAX engine in
+``repro.cluster``: same ``ClusterConfig``, same routing policies, same
+per-event semantics, executed one event at a time over ``pool_ref.WarmPool``
+so the two engines can be equivalence-tested outcome-by-outcome.
+
+Routing policies (``RoutingPolicy``):
+
+* ``STICKY``       — per-function hash (``func_id % n_nodes``); preserves
+  temporal locality, the property KiSS protects.  This is the historical
+  ``simulate_continuum`` behavior.
+* ``LEAST_LOADED`` — send each request to the node whose target pool has
+  the highest free fraction right now.
+* ``SIZE_AWARE``   — sticky-hash over the subset of nodes whose target
+  pool is big enough to *ever* host the container (large containers are
+  steered to big-memory nodes; falls back to plain sticky if none fit).
+* ``POWER_OF_TWO`` — two independent hashes pick two candidate nodes; the
+  one with the higher free fraction in the target pool wins.
+
+All load comparisons are done in float32 so the numpy oracle and the JAX
+engine take bit-identical routing decisions on the exact-f32 traces the
+test suite generates.
 """
 from __future__ import annotations
 
 import dataclasses
+import enum
 
 import numpy as np
 
 from .pool_ref import WarmPool
-from .types import ClassMetrics, KissConfig, Policy, PoolConfig, Trace
+from .types import (DROP, HIT, MISS, ClassMetrics, Policy, PoolConfig,
+                    Trace)
 
+_OUT_CODE = {"hit": HIT, "miss": MISS, "drop": DROP}
+
+
+class RoutingPolicy(enum.IntEnum):
+    """Cluster request-routing policy (carried as data in the JAX engine)."""
+
+    STICKY = 0
+    LEAST_LOADED = 1
+    SIZE_AWARE = 2
+    POWER_OF_TWO = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterConfig:
+    """A heterogeneous edge cluster in front of a priced cloud tier.
+
+    Per-node arrays (tuples, one entry per node):
+
+    * ``node_mb``    — total warm-pool memory of the node;
+    * ``small_frac`` — KiSS split ratio (ignored when the node is unified);
+    * ``unified``    — True = single unified pool (the paper's baseline),
+      False = KiSS two-pool split.
+
+    Every node always materializes two pool slots — a unified node gets
+    ``(node_mb, 0)`` and routes both size classes to pool 0 — so the JAX
+    engine can stack all pools of all nodes on one leading axis.
+    """
+
+    node_mb: tuple[float, ...]
+    small_frac: tuple[float, ...]
+    unified: tuple[bool, ...]
+    policy: Policy = Policy.LRU
+    routing: RoutingPolicy = RoutingPolicy.STICKY
+    cloud_rtt_s: float = 0.25         # edge->cloud round trip
+    cloud_cold_prob: float = 0.05     # cloud has big warm pools
+    max_slots: int = 1024             # per-pool slot count, as PoolConfig
+
+    def __post_init__(self):
+        n = len(self.node_mb)
+        if not (len(self.small_frac) == len(self.unified) == n and n > 0):
+            raise ValueError("node_mb/small_frac/unified must align, n>=1")
+
+    @property
+    def n_nodes(self) -> int:
+        return len(self.node_mb)
+
+    @classmethod
+    def homogeneous(cls, n_nodes: int, node_mb: float, *, kiss: bool = True,
+                    small_frac: float = 0.8, **kw) -> "ClusterConfig":
+        return cls(node_mb=(float(node_mb),) * n_nodes,
+                   small_frac=(float(small_frac),) * n_nodes,
+                   unified=(not kiss,) * n_nodes, **kw)
+
+    def pool_caps(self) -> np.ndarray:
+        """f64[N, 2] per-node (small, large) pool capacities in MB.
+
+        Capacities are rounded through float32: the JAX engine stores pool
+        state in f32 anyway, and feeding the f64 oracle the same f32-exact
+        values keeps the two engines' free-memory accounting (and hence
+        load-sensitive routing like LEAST_LOADED) bitwise identical even
+        when ``node_mb * small_frac`` is not f32-representable."""
+        caps = np.zeros((self.n_nodes, 2), np.float64)
+        for n in range(self.n_nodes):
+            if self.unified[n]:
+                caps[n] = (self.node_mb[n], 0.0)
+            else:
+                caps[n] = (self.node_mb[n] * self.small_frac[n],
+                           self.node_mb[n] * (1.0 - self.small_frac[n]))
+        return np.float32(caps).astype(np.float64)
+
+
+# --------------------------------------------------------------------------
+# routing: hashes + the per-event decision (shared spec for both engines)
+# --------------------------------------------------------------------------
+
+def route_hashes(func_id: np.ndarray, n_nodes: int):
+    """Two independent deterministic node hashes per event.
+
+    ``h1`` is the historical sticky hash (``func_id % n_nodes``); ``h2`` is
+    a Knuth multiplicative hash.  Both are precomputed host-side so the
+    numpy oracle and the JAX engine share them verbatim.
+    """
+    fid = np.asarray(func_id)
+    h1 = (fid % n_nodes).astype(np.int32)
+    mixed = (fid.astype(np.uint32) * np.uint32(2654435761)) >> np.uint32(16)
+    h2 = (mixed % np.uint32(n_nodes)).astype(np.int32)
+    return h1, h2
+
+
+def _route_ref(routing: RoutingPolicy, h1: int, h2: int, size: float,
+               free_t: np.ndarray, cap_t: np.ndarray) -> int:
+    """One routing decision.  ``free_t``/``cap_t`` are f32[N] for the pool
+    each node would serve this request from (``free_t`` may be ``None``
+    for the policies that never read it)."""
+    if routing == RoutingPolicy.STICKY:
+        return int(h1)
+    if routing == RoutingPolicy.SIZE_AWARE:
+        # sticky-hash over the nodes that can ever host this size
+        elig = cap_t >= np.float32(size) - np.float32(1e-9)
+        k = int(elig.sum())
+        if k == 0:
+            return int(h1)
+        return int(np.flatnonzero(elig)[h1 % k])
+    frac = free_t / np.maximum(cap_t, np.float32(1e-6))
+    if routing == RoutingPolicy.LEAST_LOADED:
+        return int(np.argmax(frac))
+    return int(h1) if frac[h1] >= frac[h2] else int(h2)
+
+
+def cloud_cold_draws(n: int, prob: float, rng_seed: int = 0) -> np.ndarray:
+    """Pre-drawn cloud cold-start coin flips (common random numbers: both
+    engines, and every config of a sweep, price offloads identically)."""
+    return np.random.default_rng(rng_seed).random(n) < prob
+
+
+def continuum_latencies(trace: Trace, outcome: np.ndarray,
+                        cloud_cold: np.ndarray,
+                        cloud_rtt_s: float) -> np.ndarray:
+    """Price each outcome end-to-end: hit -> warm, miss -> cold, drop ->
+    RTT + cloud execution (cold with the pre-drawn probability)."""
+    warm = np.asarray(trace.warm_dur, np.float64)
+    cold = np.asarray(trace.cold_dur, np.float64)
+    return np.where(outcome == HIT, warm,
+                    np.where(outcome == MISS, cold,
+                             cloud_rtt_s + np.where(cloud_cold, cold, warm)))
+
+
+# --------------------------------------------------------------------------
+# the numpy oracle: one event at a time over WarmPool
+# --------------------------------------------------------------------------
+
+def cluster_outcomes_ref(cfg: ClusterConfig, trace: Trace):
+    """Sequential oracle for the cluster: returns ``(node, outcome)`` as
+    i32[T] arrays (outcome: 0 hit, 1 miss, 2 drop/offload)."""
+    n = cfg.n_nodes
+    caps = cfg.pool_caps()
+    pools = [[WarmPool(PoolConfig(caps[i, 0], cfg.policy, cfg.max_slots)),
+              WarmPool(PoolConfig(caps[i, 1], cfg.policy, cfg.max_slots))]
+             for i in range(n)]
+    h1, h2 = route_hashes(trace.func_id, n)
+    unified = np.asarray(cfg.unified, bool)
+    cap_f32 = caps.astype(np.float32)
+    nodes_idx = np.arange(n)
+    sink = ClassMetrics()   # per-node metrics are derived from the outputs
+    node_out = np.empty(len(trace), np.int32)
+    outcome_out = np.empty(len(trace), np.int32)
+    # loop-invariant routing inputs, precomputed per size class
+    tgt_by_cls = [np.where(unified, 0, c) for c in (0, 1)]
+    cap_by_cls = [cap_f32[nodes_idx, t] for t in tgt_by_cls]
+    # only the load-sensitive policies read pool occupancy; skip the
+    # O(n_nodes) per-event scan for sticky/size-aware routing
+    needs_free = cfg.routing in (RoutingPolicy.LEAST_LOADED,
+                                 RoutingPolicy.POWER_OF_TWO)
+    for i in range(len(trace)):
+        cls = int(trace.cls[i])
+        size = float(trace.size_mb[i])
+        tgt = tgt_by_cls[cls]
+        free_t = np.fromiter(
+            (pools[j][tgt[j]].free_mb for j in range(n)), np.float32,
+            n) if needs_free else None
+        cap_t = cap_by_cls[cls]
+        node = _route_ref(cfg.routing, int(h1[i]), int(h2[i]), size,
+                          free_t, cap_t)
+        out = pools[node][int(tgt[node])].access(
+            float(trace.t[i]), int(trace.func_id[i]), size,
+            float(trace.warm_dur[i]), float(trace.cold_dur[i]), sink)
+        node_out[i] = node
+        outcome_out[i] = _OUT_CODE[out]
+    return node_out, outcome_out
+
+
+# --------------------------------------------------------------------------
+# historical single-knob API (kept for the paper-figure benchmarks/tests)
+# --------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
 class ContinuumConfig:
@@ -27,9 +221,16 @@ class ContinuumConfig:
     policy: Policy = Policy.LRU
     kiss: bool = True                 # False => unified baseline nodes
     small_frac: float = 0.8
-    threshold_mb: float = 225.0
     cloud_rtt_s: float = 0.25         # edge->cloud round trip
     cloud_cold_prob: float = 0.05     # cloud has big warm pools
+
+    def as_cluster(self, routing: RoutingPolicy = RoutingPolicy.STICKY,
+                   max_slots: int = 1024) -> ClusterConfig:
+        return ClusterConfig.homogeneous(
+            self.n_nodes, self.node_mb, kiss=self.kiss,
+            small_frac=self.small_frac, policy=self.policy, routing=routing,
+            cloud_rtt_s=self.cloud_rtt_s,
+            cloud_cold_prob=self.cloud_cold_prob, max_slots=max_slots)
 
 
 @dataclasses.dataclass
@@ -50,44 +251,24 @@ class ContinuumResult:
                 "p99_s": float(np.percentile(l, 99))}
 
 
-class _Node:
-    def __init__(self, cfg: ContinuumConfig):
-        if cfg.kiss:
-            kc = KissConfig(total_mb=cfg.node_mb, small_frac=cfg.small_frac,
-                            threshold_mb=cfg.threshold_mb, policy=cfg.policy)
-            self.pools = [WarmPool(kc.small_pool), WarmPool(kc.large_pool)]
-            self.route = lambda cls: cls
-        else:
-            self.pools = [WarmPool(PoolConfig(cfg.node_mb, cfg.policy))]
-            self.route = lambda cls: 0
-
-
 def simulate_continuum(cfg: ContinuumConfig, trace: Trace,
                        rng_seed: int = 0) -> ContinuumResult:
-    rng = np.random.default_rng(rng_seed)
-    nodes = [_Node(cfg) for _ in range(cfg.n_nodes)]
-    metrics = ClassMetrics()
-    latencies = np.empty(len(trace), np.float64)
-    offloads = 0
-    # sticky per-function routing
-    node_of = {}
-    cloud_cold = rng.random(len(trace)) < cfg.cloud_cold_prob
-
-    for i in range(len(trace)):
-        fid = int(trace.func_id[i])
-        node = node_of.setdefault(fid, nodes[fid % cfg.n_nodes])
-        cls = int(trace.cls[i])
-        pool = node.pools[node.route(cls)]
-        warm = float(trace.warm_dur[i])
-        cold = float(trace.cold_dur[i])
-        out = pool.access(float(trace.t[i]), fid, float(trace.size_mb[i]),
-                          warm, cold, metrics)
-        if out == "hit":
-            latencies[i] = warm
-        elif out == "miss":
-            latencies[i] = cold
-        else:  # punted to the cloud tier
-            offloads += 1
-            latencies[i] = cfg.cloud_rtt_s + (cold if cloud_cold[i] else warm)
-    return ContinuumResult(edge=metrics, cloud_offloads=offloads,
+    """Sticky-routed homogeneous continuum (thin wrapper over the cluster
+    oracle; same routing/eviction semantics as the historical per-event
+    loop, with two deliberate fixes: pool capacities are rounded through
+    f32 for JAX-engine parity, and ``max_slots`` is now enforced)."""
+    node, outcome = cluster_outcomes_ref(cfg.as_cluster(), trace)
+    cloud_cold = cloud_cold_draws(len(trace), cfg.cloud_cold_prob, rng_seed)
+    latencies = continuum_latencies(trace, outcome, cloud_cold,
+                                    cfg.cloud_rtt_s)
+    warm = np.asarray(trace.warm_dur, np.float64)
+    cold = np.asarray(trace.cold_dur, np.float64)
+    metrics = ClassMetrics(
+        hits=int((outcome == HIT).sum()),
+        misses=int((outcome == MISS).sum()),
+        drops=int((outcome == DROP).sum()),
+        exec_time=float(warm[outcome == HIT].sum()
+                        + cold[outcome == MISS].sum()))
+    return ContinuumResult(edge=metrics,
+                           cloud_offloads=int((outcome == DROP).sum()),
                            latencies=latencies)

@@ -22,7 +22,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .types import Policy, PoolConfig
+from .types import DROP, HIT, MISS, Policy, PoolConfig
 
 _INF = jnp.float32(jnp.inf)
 
@@ -52,10 +52,6 @@ class Event(NamedTuple):
     cls: jax.Array
     warm: jax.Array
     cold: jax.Array
-
-
-# outcome codes
-HIT, MISS, DROP = 0, 1, 2
 
 
 def init_pool(cfg: PoolConfig) -> PoolState:

@@ -94,11 +94,12 @@ class WarmPool:
             metrics.drops += 1
             return "drop"
         deficit = size_mb - self.free_mb
+        victims: list[Container] = []
         if deficit > 1e-9:
             evictable = sorted(
                 (c for c in self.containers if c.busy_until <= t),
                 key=lambda c: (self._priority(c), c.uid))
-            freed, victims = 0.0, []
+            freed = 0.0
             for c in evictable:
                 if freed >= deficit - 1e-9:
                     break
@@ -107,12 +108,20 @@ class WarmPool:
             if freed < deficit - 1e-9:
                 metrics.drops += 1
                 return "drop"
-            for c in victims:
-                self.containers.remove(c)
-                self.free_mb += c.size_mb
-                if self.cfg.policy == Policy.GREEDY_DUAL:
-                    self.clock = max(self.clock, c.gd_priority)
-            self.last_victims = victims
+        # slot limit, mirroring the JAX engine's fixed-size state: eviction
+        # is memory-driven only, so a slot must be empty after it (the JAX
+        # step's ``empty_exists``) or the container cannot be placed.  This
+        # also bounds the resident count for repro.serving, which shares
+        # this class (PoolConfig.max_slots defaults to 1024).
+        if len(self.containers) - len(victims) >= self.cfg.max_slots:
+            metrics.drops += 1
+            return "drop"
+        for c in victims:
+            self.containers.remove(c)
+            self.free_mb += c.size_mb
+            if self.cfg.policy == Policy.GREEDY_DUAL:
+                self.clock = max(self.clock, c.gd_priority)
+        self.last_victims = victims
         new = Container(func_id=func_id, size_mb=size_mb, last_use=t,
                         freq=1.0,
                         gd_priority=self._gd(1.0, cold_cost, size_mb),

@@ -37,6 +37,10 @@ class Policy(enum.IntEnum):
 SMALL = 0
 LARGE = 1
 
+# outcome codes, shared by the JAX step (pool_jax), the numpy oracle and
+# the cluster metrics (continuum / cluster.metrics)
+HIT, MISS, DROP = 0, 1, 2
+
 
 class Trace(NamedTuple):
     """Struct-of-arrays invocation trace, sorted by time."""

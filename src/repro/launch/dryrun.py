@@ -93,6 +93,8 @@ def _compile_and_measure(cfg, shape, mesh, optimize: bool = False) -> dict:
         rec = {"lower_s": round(t1 - t0, 2), "compile_s": round(t2 - t1, 2)}
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # jax <= 0.4.x: one dict/device
+            cost = cost[0] if cost else None
         if mem is not None:
             for k in ("argument_size_in_bytes", "output_size_in_bytes",
                       "temp_size_in_bytes", "generated_code_size_in_bytes"):

@@ -1,0 +1,99 @@
+"""Property tests (hypothesis): the JAX lax.scan simulator is bit-identical
+to the sequential oracle, and pool invariants hold.
+
+``hypothesis`` is an *optional* dependency (see requirements.txt); when it
+is not installed this module skips and the deterministic fixed-seed
+equivalence tests in ``test_simulator.py`` still provide coverage.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (KissConfig, Policy, simulate_baseline,
+                        simulate_baseline_jax, simulate_kiss,
+                        simulate_kiss_jax)
+from repro.core.pool_ref import WarmPool
+from repro.core.types import ClassMetrics, PoolConfig
+
+from conftest import quantized_trace
+
+POLICIES = [Policy.LRU, Policy.GREEDY_DUAL, Policy.FREQ]
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       policy=st.sampled_from(POLICIES),
+       total_mb=st.sampled_from([512.0, 1024.0, 2048.0, 4096.0]))
+def test_jax_matches_oracle_baseline(seed, policy, total_mb):
+    rng = np.random.default_rng(seed)
+    trace = quantized_trace(rng, 400)
+    r = simulate_baseline(total_mb, trace, policy, max_slots=96)
+    j = simulate_baseline_jax(total_mb, trace, policy, max_slots=96)
+    assert r.summary() == j.summary()
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       policy=st.sampled_from(POLICIES),
+       frac=st.sampled_from([0.5, 0.7, 0.8, 0.9]))
+def test_jax_matches_oracle_kiss(seed, policy, frac):
+    rng = np.random.default_rng(seed)
+    trace = quantized_trace(rng, 400)
+    cfg = KissConfig(total_mb=2048.0, small_frac=frac, policy=policy,
+                     max_slots=96)
+    r = simulate_kiss(cfg, trace)
+    j = simulate_kiss_jax(cfg, trace)
+    assert r.summary() == j.summary()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), policy=st.sampled_from(POLICIES))
+def test_metrics_conservation(seed, policy):
+    """hits + misses + drops == number of events, per class."""
+    rng = np.random.default_rng(seed)
+    trace = quantized_trace(rng, 300)
+    res = simulate_kiss(KissConfig(total_mb=1024.0, policy=policy,
+                                   max_slots=96), trace)
+    n_small = int((trace.cls == 0).sum())
+    n_large = int((trace.cls == 1).sum())
+    assert res.small.total_accesses == n_small
+    assert res.large.total_accesses == n_large
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_pool_occupancy_invariant(seed):
+    """Pool never exceeds capacity; free + used == capacity."""
+    rng = np.random.default_rng(seed)
+    trace = quantized_trace(rng, 300)
+    pool = WarmPool(PoolConfig(1024.0, Policy.LRU))
+    m = ClassMetrics()
+    for i in range(len(trace)):
+        pool.access(float(trace.t[i]), int(trace.func_id[i]),
+                    float(trace.size_mb[i]), float(trace.warm_dur[i]),
+                    float(trace.cold_dur[i]), m)
+        assert pool.occupancy_ok()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), policy=st.sampled_from(POLICIES),
+       frac=st.sampled_from([0.5, 0.8]))
+def test_kiss_decomposes_into_independent_pools(seed, policy, frac):
+    """KiSS == two isolated single-pool simulations on the class-filtered
+    traces (pool isolation is the policy's defining property)."""
+    rng = np.random.default_rng(seed)
+    trace = quantized_trace(rng, 300)
+    total = 2048.0
+    cfg = KissConfig(total_mb=total, small_frac=frac, policy=policy,
+                     max_slots=96)
+    whole = simulate_kiss(cfg, trace)
+    small = simulate_baseline(total * frac,
+                              trace.select(np.asarray(trace.cls) == 0),
+                              policy, 96)
+    large = simulate_baseline(total * (1 - frac),
+                              trace.select(np.asarray(trace.cls) == 1),
+                              policy, 96)
+    assert whole.small.__dict__ == small.small.__dict__
+    assert whole.large.__dict__ == large.large.__dict__
