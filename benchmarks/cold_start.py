@@ -1,36 +1,33 @@
 """Paper Figs 7-8: cold-start percentage vs memory, split sweep vs baseline.
 
-Uses the vmapped sweep (beyond-paper capability): every (memory x split)
-KiSS configuration in one jit, plus the baseline row.
+Every (memory x split) KiSS configuration plus the baseline row goes
+through ``repro.sim.sweep`` — same slot shapes, so the whole grid is ONE
+vmapped ``lax.scan`` program.
 """
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core import Policy, metrics_to_result, sweep_baseline, sweep_kiss
+from repro.sim import Scenario, sweep
 
 from .common import GB, MEMORY_GB, SPLITS, csv_line, paper_trace, timed
 
 
 def run() -> list[str]:
     tr = paper_trace()
-    mems = [gb * GB for gb in MEMORY_GB]
-    grid, dt_k = timed(sweep_kiss, tr, mems, SPLITS, [Policy.LRU], 1024)
-    base, dt_b = timed(sweep_baseline, tr, mems, [Policy.LRU], 1024)
-    n_runs = len(mems) * len(SPLITS) + len(mems)
-    us = (dt_k + dt_b) * 1e6 / n_runs
+    kiss_grid = [Scenario.kiss(gb * GB, small_frac=frac, max_slots=1024)
+                 for gb in MEMORY_GB for frac in SPLITS]
+    base_row = [Scenario.baseline(gb * GB, max_slots=1024)
+                for gb in MEMORY_GB]
+    results, dt = timed(sweep, tr, kiss_grid + base_row)
+    n_runs = len(results)
+    us = dt * 1e6 / n_runs
 
     out = []
-    best_split, best_val = None, None
-    i = 0
     table = {}
     for gi, gb in enumerate(MEMORY_GB):
-        row = {}
-        for si, frac in enumerate(SPLITS):
-            res = metrics_to_result(grid[gi * len(SPLITS) + si])
-            row[frac] = res.overall.cold_start_pct
-        bres = metrics_to_result(base[gi])
-        table[gb] = (bres.overall.cold_start_pct, row)
+        row = {frac: results[gi * len(SPLITS) + si].summary()
+               ["cold_start_pct"] for si, frac in enumerate(SPLITS)}
+        b = results[len(kiss_grid) + gi].summary()["cold_start_pct"]
+        table[gb] = (b, row)
 
     # headline: best reduction for the 80-20 split in the constrained band
     reductions = []

@@ -1,12 +1,9 @@
-"""Shared helpers for the paper-figure benchmarks."""
+"""Shared helpers for the paper-figure benchmarks (repro.sim API)."""
 from __future__ import annotations
 
 import time
 
-import numpy as np
-
-from repro.core import (KissConfig, Policy, simulate_baseline_jax,
-                        simulate_kiss_jax)
+from repro.sim import Scenario, simulate
 from repro.workloads import edge_trace
 
 GB = 1024.0
@@ -26,13 +23,17 @@ def timed(fn, *args, **kwargs):
     return out, (time.perf_counter() - t0)
 
 
-def pair(trace, gb: float, policy=Policy.LRU, small_frac: float = 0.8,
+def pair(trace, gb: float, policy="lru", small_frac: float = 0.8,
          max_slots: int = 1024):
-    base = simulate_baseline_jax(gb * GB, trace, policy, max_slots)
-    kiss = simulate_kiss_jax(
-        KissConfig(total_mb=gb * GB, small_frac=small_frac, policy=policy,
-                   max_slots=max_slots), trace)
-    return base, kiss
+    """(baseline, KiSS) per-class results at ``gb`` GB — the comparison
+    every paper figure is built from."""
+    base = simulate(
+        Scenario.baseline(gb * GB, replacement=policy, max_slots=max_slots),
+        trace)
+    kiss = simulate(
+        Scenario.kiss(gb * GB, small_frac=small_frac, replacement=policy,
+                      max_slots=max_slots), trace)
+    return base.per_class(), kiss.per_class()
 
 
 def csv_line(name: str, us_per_call: float, derived: str) -> str:

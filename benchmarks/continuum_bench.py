@@ -1,51 +1,58 @@
 """Beyond-paper: edge-cloud continuum end-to-end latency, at cluster scale.
 
 The paper counts drops; this benchmark prices them — a dropped request
-executes in the cloud at +RTT.  Two experiments, both running on the
-batched ``repro.cluster`` engine (every configuration family is ONE
-vmapped ``lax.scan`` program):
+executes in the cloud at +RTT.  Two experiments, both through the
+``repro.sim`` front door (every configuration family is ONE vmapped
+``lax.scan`` program):
 
 1. the historical 4-node homogeneous comparison (KiSS vs unified
    baseline, sticky routing) — KiSS trades a higher cloud-offload
    fraction for a lower end-to-end latency;
 2. a 16-node *heterogeneous* cluster (the 1/1/2/6 GB pattern repeated
-   four times: 8 x 1 GB, 4 x 2 GB, 4 x 6 GB nodes) where
-   the routing policy is the variable: sticky-hash vs least-loaded vs
-   size-aware placement vs power-of-two-choices.  Size-aware placement —
-   the cluster-level analogue of KiSS's size-class insight — beats
-   sticky-hash on p95 end-to-end latency by keeping large containers on
-   nodes that can actually host them.
+   four times) where the routing policy is the variable — and "the
+   routing policies" means EVERY policy in the registry, so anything
+   registered via ``@register_routing`` (e.g. ``cost_model``, registered
+   from ``repro.sim.policies``, outside both engines) is benchmarked
+   automatically alongside the four built-ins.
+
+Returns ``(csv_lines, payload)``; the payload carries the stable-keyed
+``Result.summary()`` dicts for ``results/BENCH_*.json``.
 """
 from __future__ import annotations
 
-from repro.cluster import (ClusterConfig, RoutingPolicy, het16_cluster,
-                           sweep_cluster)
+from repro.cluster import het16_cluster
+from repro.sim import Scenario, routing_policies, simulate, sweep
 from repro.workloads.chains import ChainConfig, chained_trace
 
-from .common import csv_line, paper_trace, timed
+from .common import GB, csv_line, paper_trace, timed
 
 
-def routing_comparison(tr):
-    """All four routing policies on the heterogeneous 16-node cluster
-    (shared ``het16_cluster`` preset) in one vmapped sweep; returns
-    {routing: ClusterResult}."""
-    routings = list(RoutingPolicy)
-    res = sweep_cluster(tr, [het16_cluster(r) for r in routings])
-    return dict(zip(routings, res))
+def routing_comparison(tr) -> dict:
+    """Every registered routing policy on the heterogeneous 16-node
+    cluster (shared ``het16_cluster`` preset) in one vmapped sweep;
+    returns ``{policy_name: Result}``."""
+    names = routing_policies()
+    scenarios = [Scenario.from_cluster(het16_cluster(name), name=name)
+                 for name in names]
+    return dict(zip(names, sweep(tr, scenarios)))
 
 
-def run() -> list[str]:
+def run():
     tr = paper_trace(duration_s=1800.0)
     out = []
+    payload = {}
 
     # --- experiment 1: KiSS vs unified baseline, homogeneous 4 x 2 GB ---
-    pair_cfgs = [
-        ClusterConfig.homogeneous(4, 2048.0, kiss=False, max_slots=256),
-        ClusterConfig.homogeneous(4, 2048.0, kiss=True, max_slots=256),
+    pair_scs = [
+        Scenario.cluster((2048.0,) * 4, unified=True, max_slots=256,
+                         name="base_4x2gb"),
+        Scenario.cluster((2048.0,) * 4, unified=False, max_slots=256,
+                         name="kiss_4x2gb"),
     ]
-    (base, kiss), dt = timed(sweep_cluster, tr, pair_cfgs)
+    (base, kiss), dt = timed(sweep, tr, pair_scs)
     for name, res in (("base", base), ("kiss", kiss)):
         l = res.latency_stats()
+        payload[f"continuum_{name}_4x2gb"] = res.summary()
         out.append(csv_line(
             f"continuum_{name}_4x2gb", dt * 1e6 / (2 * len(tr)),
             f"offload={res.offload_pct:.1f}% mean={l['mean_s']:.2f}s "
@@ -59,39 +66,37 @@ def run() -> list[str]:
     out.append(csv_line("continuum_latency_improvement", 0.0,
                         verdict + " (beyond-paper)"))
 
-    # --- experiment 2: routing policies on the heterogeneous 16-node ---
+    # --- experiment 2: every registered routing policy on 16 nodes ---
     byr, dt = timed(routing_comparison, tr)
-    for routing, res in byr.items():
+    for name, res in byr.items():
         l = res.latency_stats()
+        payload[f"cluster16_{name}"] = res.summary()
         out.append(csv_line(
-            f"cluster16_{routing.name.lower()}",
+            f"cluster16_{name}",
             dt * 1e6 / (len(byr) * len(tr)),
             f"p50={l['p50_s']:.2f}s p95={l['p95_s']:.2f}s "
             f"p99={l['p99_s']:.2f}s offload={res.offload_pct:.1f}% "
-            f"edge_cold={res.edge.cold_start_pct:.1f}%"))
-    sticky_p95 = byr[RoutingPolicy.STICKY].latency_stats()["p95_s"]
-    best = min((r for r in byr if r != RoutingPolicy.STICKY),
-               key=lambda r: byr[r].latency_stats()["p95_s"])
+            f"edge_cold={res.per_class().overall.cold_start_pct:.1f}%"))
+    sticky_p95 = byr["sticky"].latency_stats()["p95_s"]
+    best = min((n for n in byr if n != "sticky"),
+               key=lambda n: byr[n].latency_stats()["p95_s"])
     best_p95 = byr[best].latency_stats()["p95_s"]
     if best_p95 < sticky_p95:
-        verdict = (f"{best.name.lower()} beats sticky p95 by "
+        verdict = (f"{best} beats sticky p95 by "
                    f"{(1 - best_p95 / sticky_p95) * 100:.0f}% "
                    f"({best_p95:.2f}s vs {sticky_p95:.2f}s)")
     else:
         verdict = (f"sticky holds best p95 ({sticky_p95:.2f}s; closest "
-                   f"{best.name.lower()} {best_p95:.2f}s)")
+                   f"{best} {best_p95:.2f}s)")
     out.append(csv_line("cluster16_routing_improvement", 0.0,
                         verdict + " on 16 heterogeneous nodes"))
 
     # chained workloads (paper §1.1 motivation)
     (ctr, _), dt = timed(chained_trace, ChainConfig(duration_s=1800.0))
-    from repro.core import (KissConfig, Policy, simulate_baseline_jax,
-                            simulate_kiss_jax)
-    bb = simulate_baseline_jax(3 * 1024.0, ctr, Policy.LRU, 512)
-    kk = simulate_kiss_jax(KissConfig(total_mb=3 * 1024.0, max_slots=512),
-                           ctr)
+    bb = simulate(Scenario.baseline(3 * GB, max_slots=512), ctr)
+    kk = simulate(Scenario.kiss(3 * GB, max_slots=512), ctr)
     out.append(csv_line(
         "chains_cold_pct_3gb", dt * 1e6 / len(ctr),
-        f"base={bb.overall.cold_start_pct:.1f} "
-        f"kiss={kk.overall.cold_start_pct:.1f} (chained invocations)"))
-    return out
+        f"base={bb.summary()['cold_start_pct']:.1f} "
+        f"kiss={kk.summary()['cold_start_pct']:.1f} (chained invocations)"))
+    return out, payload

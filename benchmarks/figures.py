@@ -11,9 +11,9 @@ matplotlib.use("Agg")
 import matplotlib.pyplot as plt
 import numpy as np
 
-from repro.core import (KissConfig, Policy, metrics_to_result,
-                        simulate_baseline_jax, sweep_kiss)
+from repro.core import KissConfig
 from repro.core.adaptive import AdaptiveConfig, simulate_kiss_adaptive
+from repro.sim import Scenario, sweep
 
 from .common import GB, MEMORY_GB, SPLITS, paper_trace
 
@@ -23,19 +23,22 @@ OUT = "results/figures"
 def main():
     os.makedirs(OUT, exist_ok=True)
     tr = paper_trace()
-    mems = [gb * GB for gb in MEMORY_GB]
-    grid = sweep_kiss(tr, mems, SPLITS, [Policy.LRU], 1024)
+    kiss_grid = [Scenario.kiss(gb * GB, small_frac=f, max_slots=1024)
+                 for gb in MEMORY_GB for f in SPLITS]
+    base_row = [Scenario.baseline(gb * GB, max_slots=1024)
+                for gb in MEMORY_GB]
+    results = sweep(tr, kiss_grid + base_row)
     base, kiss80, ada = [], {f: [] for f in SPLITS}, []
     base_drop, kiss_drop, ada_drop = [], [], []
     for mi, gb in enumerate(MEMORY_GB):
-        b = simulate_baseline_jax(gb * GB, tr, Policy.LRU, 1024)
-        base.append(b.overall.cold_start_pct)
-        base_drop.append(b.overall.drop_pct)
+        b = results[len(kiss_grid) + mi].summary()
+        base.append(b["cold_start_pct"])
+        base_drop.append(b["drop_pct"])
         for si, f in enumerate(SPLITS):
-            r = metrics_to_result(grid[mi * len(SPLITS) + si])
-            kiss80[f].append(r.overall.cold_start_pct)
+            r = results[mi * len(SPLITS) + si].summary()
+            kiss80[f].append(r["cold_start_pct"])
             if f == 0.8:
-                kiss_drop.append(r.overall.drop_pct)
+                kiss_drop.append(r["drop_pct"])
         a, _ = simulate_kiss_adaptive(
             AdaptiveConfig(base=KissConfig(total_mb=gb * GB,
                                            max_slots=1024),
@@ -75,10 +78,11 @@ def main():
     plt.savefig(f"{OUT}/fig9_drops.png", dpi=120)
 
     # Fig C (beyond-paper): routing policy on a 16-node heterogeneous
-    # cluster — p95/p99 end-to-end latency and cloud-offload fraction.
+    # cluster — p95/p99 end-to-end latency and cloud-offload fraction,
+    # for EVERY registered routing policy (cost_model included).
     from .continuum_bench import routing_comparison
     byr = routing_comparison(paper_trace(duration_s=1800.0))
-    names = [r.name.lower() for r in byr]
+    names = list(byr)
     p95 = [res.latency_stats()["p95_s"] for res in byr.values()]
     p99 = [res.latency_stats()["p99_s"] for res in byr.values()]
     off = [res.offload_pct for res in byr.values()]

@@ -1,38 +1,39 @@
 """Paper Figs 14-16: KiSS's gain must hold across LRU / GreedyDual / FREQ.
 
-Uses the vmapped sweep to run all (memory x policy) configs concurrently —
-the whole three-figure grid is two device programs.
+One ``repro.sim.sweep`` call covers the whole (memory x policy) grid for
+both KiSS and baseline — every replacement policy in the registry is just
+data to the vmapped engine.
 """
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core import Policy, metrics_to_result, sweep_baseline, sweep_kiss
+from repro.sim import Scenario, sweep
 
 from .common import GB, csv_line, paper_trace, timed
 
 MEMS_GB = [4, 6, 8, 10, 16]
-POLICIES = [Policy.LRU, Policy.GREEDY_DUAL, Policy.FREQ]
+POLICIES = ["lru", "greedy_dual", "freq"]
 
 
 def run() -> list[str]:
     tr = paper_trace()
-    mems = [gb * GB for gb in MEMS_GB]
-    grid, dt_k = timed(sweep_kiss, tr, mems, [0.8], POLICIES, 1024)
-    base, dt_b = timed(sweep_baseline, tr, mems, POLICIES, 1024)
-    us = (dt_k + dt_b) * 1e6 / (len(mems) * len(POLICIES) * 2)
+    kiss_grid = [Scenario.kiss(gb * GB, replacement=pol, max_slots=1024)
+                 for gb in MEMS_GB for pol in POLICIES]
+    base_grid = [Scenario.baseline(gb * GB, replacement=pol, max_slots=1024)
+                 for gb in MEMS_GB for pol in POLICIES]
+    results, dt = timed(sweep, tr, kiss_grid + base_grid)
+    us = dt * 1e6 / len(results)
+    kiss_res, base_res = results[:len(kiss_grid)], results[len(kiss_grid):]
 
     out = []
     spread_max = 0.0
     for gi, gb in enumerate(MEMS_GB):
         vals = {}
         for pi, pol in enumerate(POLICIES):
-            k = metrics_to_result(grid[gi * len(POLICIES) + pi])
-            b = metrics_to_result(base[gi * len(POLICIES) + pi])
-            vals[pol.name] = (b.overall.cold_start_pct,
-                              k.overall.cold_start_pct,
-                              k.small.cold_start_pct,
-                              k.large.cold_start_pct)
+            k = kiss_res[gi * len(POLICIES) + pi].summary()
+            b = base_res[gi * len(POLICIES) + pi].summary()
+            vals[pol.upper()] = (b["cold_start_pct"], k["cold_start_pct"],
+                                 k["small_cold_start_pct"],
+                                 k["large_cold_start_pct"])
         row = " ".join(f"{n}:{v[0]:.1f}->{v[1]:.1f}"
                        for n, v in vals.items())
         out.append(csv_line(f"fig15_overall_cold_{gb}gb", us, row))

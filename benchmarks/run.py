@@ -1,13 +1,42 @@
 """Benchmark driver — one module per paper figure/table plus beyond-paper
-benchmarks.  Prints ``name,us_per_call,derived`` CSV lines.
+benchmarks.  Prints ``name,us_per_call,derived`` CSV lines and writes a
+machine-readable ``results/BENCH_<suite>.json`` per suite (parsed rows +
+wall-clock + any structured payload the suite returns) so the performance
+trajectory is trackable across commits.
 
   PYTHONPATH=src python -m benchmarks.run            # all
   PYTHONPATH=src python -m benchmarks.run fig7 fig9  # filter by prefix
+
+Suites return either ``list[str]`` (CSV lines) or ``(list[str], payload)``
+where ``payload`` is a JSON-serializable dict (e.g. the stable-keyed
+``Result.summary()`` dicts from ``repro.sim``).
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
+import time
 import traceback
+
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results")
+
+
+def _parse_row(line: str) -> dict:
+    name, us, derived = line.split(",", 2)
+    try:
+        us_val = float(us)
+    except ValueError:
+        us_val = None
+    return {"name": name, "us_per_call": us_val, "derived": derived}
+
+
+def _write_json(suite_key: str, doc: dict) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"BENCH_{suite_key}.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
 
 
 def main() -> None:
@@ -33,14 +62,27 @@ def main() -> None:
     for name, fn in suites:
         if filters and not any(f in name for f in filters):
             continue
+        suite_key = name.split("(")[0].replace("+", "_")
         print(f"# --- {name} ---", flush=True)
+        t0 = time.perf_counter()
         try:
-            for line in fn():
+            ret = fn()
+            wall_s = time.perf_counter() - t0
+            lines, payload = ret if isinstance(ret, tuple) else (ret, None)
+            for line in lines:
                 print(line, flush=True)
+            doc = {"suite": name, "wall_s": wall_s,
+                   "rows": [_parse_row(l) for l in lines]}
+            if payload is not None:
+                doc["payload"] = payload
+            _write_json(suite_key, doc)
         except Exception as e:
             failed += 1
+            wall_s = time.perf_counter() - t0
             print(f"{name},0,ERROR:{e}")
             traceback.print_exc()
+            _write_json(suite_key,
+                        {"suite": name, "wall_s": wall_s, "error": str(e)})
     if failed:
         sys.exit(1)
 

@@ -9,8 +9,7 @@ from __future__ import annotations
 
 import os
 
-from repro.core import KissConfig, Policy, simulate_baseline_jax, \
-    simulate_kiss_jax
+from repro.sim import Scenario, simulate
 from repro.workloads import stress_trace
 
 from .common import GB, csv_line, timed
@@ -24,10 +23,8 @@ def run() -> list[str]:
     pool = 10 * GB * (rps / 600.0)
     tr = stress_trace(seed=0, duration_s=2 * 3600.0, rps=rps)
     n = len(tr)
-    base, dt_b = timed(simulate_baseline_jax, pool, tr, Policy.LRU, 1024)
-    kiss, dt_k = timed(
-        simulate_kiss_jax,
-        KissConfig(total_mb=pool, max_slots=1024), tr)
+    base, dt_b = timed(simulate, Scenario.baseline(pool, max_slots=1024), tr)
+    kiss, dt_k = timed(simulate, Scenario.kiss(pool, max_slots=1024), tr)
     us = (dt_b + dt_k) * 1e6 / (2 * n)  # per-event cost
     b, k = base.overall, kiss.overall
     mult = (k.hit_rate / b.hit_rate) if b.hit_rate > 0 else float("inf")

@@ -1,48 +1,45 @@
 """Beyond-paper: vmapped configuration sweep vs sequential evaluation.
 
 The paper evaluates each (memory, split, policy) configuration as a
-separate simulator run.  Our JAX formulation vmaps the whole grid into one
-device program; this benchmark measures the speedup on the paper's Fig 7
-grid (9 memories x 5 splits).
+separate simulator run.  ``repro.sim.sweep`` vmaps the whole grid into
+one device program; this benchmark measures the speedup on the paper's
+Fig 7 grid (9 memories x 5 splits) against per-config jitted runs and the
+paper-style sequential python DES (``engine="ref"``).
 """
 from __future__ import annotations
 
 import time
 
-from repro.core import KissConfig, Policy, simulate_kiss_jax, sweep_kiss
+from repro.sim import Scenario, simulate, sweep
 
 from .common import GB, MEMORY_GB, SPLITS, csv_line, paper_trace
 
 
 def run() -> list[str]:
     tr = paper_trace(duration_s=1800.0)
-    mems = [gb * GB for gb in MEMORY_GB]
+    grid = [Scenario.kiss(gb * GB, small_frac=fr, max_slots=512)
+            for gb in MEMORY_GB for fr in SPLITS]
 
     t0 = time.perf_counter()
-    sweep_kiss(tr, mems, SPLITS, [Policy.LRU], 512)
+    sweep(tr, grid)
     t_warm = time.perf_counter() - t0  # includes compile
     t0 = time.perf_counter()
-    sweep_kiss(tr, mems, SPLITS, [Policy.LRU], 512)
+    sweep(tr, grid)
     t_vmap = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    for tm in mems:
-        for fr in SPLITS:
-            simulate_kiss_jax(KissConfig(total_mb=tm, small_frac=fr,
-                                         max_slots=512), tr)
+    for sc in grid:
+        simulate(sc, tr)
     t_seq = time.perf_counter() - t0
 
     # the paper's methodology: a sequential python DES per config —
-    # time 2 configs of the oracle and extrapolate
-    from repro.core import simulate_kiss
+    # time 2 configs of the oracle engine and extrapolate
     t0 = time.perf_counter()
-    for tm in mems[:1]:
-        for fr in SPLITS[:2]:
-            simulate_kiss(KissConfig(total_mb=tm, small_frac=fr,
-                                     max_slots=512), tr)
-    t_oracle = (time.perf_counter() - t0) / 2 * len(mems) * len(SPLITS)
+    for sc in grid[:2]:
+        simulate(sc, tr, engine="ref")
+    t_oracle = (time.perf_counter() - t0) / 2 * len(grid)
 
-    n = len(mems) * len(SPLITS)
+    n = len(grid)
     return [
         csv_line("sweep_vmap_grid_s", t_vmap * 1e6 / n,
                  f"{t_vmap:.2f}s total ({n} configs, one jit)"),

@@ -1,40 +1,47 @@
-"""Cluster-scale continuum demo: 16 heterogeneous edge nodes, four routing
-policies, and a capacity-planning sweep — all in vmapped lax.scan programs.
+"""Cluster-scale continuum demo: 16 heterogeneous edge nodes, EVERY
+registered routing policy, and a capacity-planning sweep — all in vmapped
+lax.scan programs through the ``repro.sim`` front door.
 
 The paper evaluates KiSS on one node and counts drops.  Here a whole
 heterogeneous edge cluster (8 x 1 GB, 4 x 2 GB, 4 x 6 GB nodes) runs in
-front of a priced
-cloud tier, and the question becomes a *placement* question: which routing
-policy keeps large containers on nodes that can host them?
+front of a priced cloud tier, and the question becomes a *placement*
+question: which routing policy keeps large containers on nodes that can
+host them?  The policy list comes from the routing registry, so the
+``cost_model`` policy (registered in ``repro.sim.policies``, outside the
+engines) — and anything you register yourself — is swept automatically.
 
   PYTHONPATH=src python examples/cluster_sim.py
 """
 import numpy as np
 
-from repro.cluster import RoutingPolicy, het16_cluster, sweep_cluster
+from repro.cluster import het16_cluster
+from repro.sim import Scenario, routing_policies, sweep
 from repro.workloads import edge_trace
 
 
 def main():
     trace = edge_trace(seed=0, duration_s=1800)
-    routings = list(RoutingPolicy)
+    routings = routing_policies()
     big_mbs = [2048.0, 4096.0, 8192.0]
-    configs = ([het16_cluster(r) for r in routings]
-               + [het16_cluster(RoutingPolicy.SIZE_AWARE, big_mb=mb)
-                  for mb in big_mbs])
+    scenarios = ([Scenario.from_cluster(het16_cluster(r), name=r)
+                  for r in routings]
+                 + [Scenario.from_cluster(
+                        het16_cluster("size_aware", big_mb=mb),
+                        name=f"size_aware_{mb:.0f}") for mb in big_mbs])
     print(f"{len(trace)} invocations over 16 heterogeneous nodes; "
-          f"{len(configs)} cluster configs in ONE vmapped lax.scan sweep...")
-    results = sweep_cluster(trace, configs)
+          f"{len(scenarios)} cluster configs in ONE vmapped lax.scan "
+          f"sweep...")
+    results = sweep(trace, scenarios)
     byr = dict(zip(routings, results[:len(routings)]))
 
     print("\nrouting policy     p50s   p95s   p99s  offload%  edge-cold%")
     for r, res in byr.items():
-        l = res.latency_stats()
-        print(f"{r.name.lower():16s} {l['p50_s']:6.2f} {l['p95_s']:6.2f} "
-              f"{l['p99_s']:6.2f} {res.offload_pct:8.1f} "
-              f"{res.edge.cold_start_pct:10.1f}")
+        s = res.summary()
+        print(f"{r:16s} {s['latency_p50_s']:6.2f} {s['latency_p95_s']:6.2f} "
+              f"{s['latency_p99_s']:6.2f} {s['offload_pct']:8.1f} "
+              f"{s['cold_start_pct']:10.1f}")
 
-    aware = byr[RoutingPolicy.SIZE_AWARE]
+    aware = byr["size_aware"]
     print("\nwhere did the large containers go? (size-aware)")
     cls = np.asarray(trace.cls)
     for row in aware.node_table():
@@ -46,9 +53,9 @@ def main():
 
     print("\ncapacity planning: grow the four big nodes (size-aware)")
     for mb, res in zip(big_mbs, results[len(routings):]):
-        l = res.latency_stats()
-        print(f"  big nodes {mb/1024:3.0f} GB -> p95 {l['p95_s']:5.2f}s  "
-              f"offload {res.offload_pct:4.1f}%")
+        s = res.summary()
+        print(f"  big nodes {mb/1024:3.0f} GB -> p95 "
+              f"{s['latency_p95_s']:5.2f}s  offload {s['offload_pct']:4.1f}%")
 
 
 if __name__ == "__main__":

@@ -6,11 +6,9 @@ static split's mid-band drop regression (paper §7.3 future work).
 
   PYTHONPATH=src python examples/kiss_edge_sim.py
 """
-import numpy as np
-
-from repro.core import (KissConfig, Policy, metrics_to_result,
-                        simulate_baseline_jax, sweep_kiss)
+from repro.core import KissConfig
 from repro.core.adaptive import AdaptiveConfig, simulate_kiss_adaptive
+from repro.sim import Scenario, sweep
 from repro.workloads import edge_trace
 
 GB = 1024.0
@@ -20,36 +18,37 @@ SPLITS = [0.9, 0.8, 0.7, 0.5]
 
 def main():
     trace = edge_trace(seed=0, duration_s=3600)
+    kiss_grid = [Scenario.kiss(m * GB, small_frac=f) for m in MEMS
+                 for f in SPLITS]
+    base_row = [Scenario.baseline(m * GB) for m in MEMS]
     print(f"{len(trace)} invocations; sweeping "
-          f"{len(MEMS) * len(SPLITS)} KiSS configs in ONE vmapped jit...")
-    grid = sweep_kiss(trace, [m * GB for m in MEMS], SPLITS, [Policy.LRU],
-                      max_slots=1024)
+          f"{len(kiss_grid) + len(base_row)} configs in ONE vmapped jit...")
+    results = sweep(trace, kiss_grid + base_row)
+    kiss_res = {(m, f): results[mi * len(SPLITS) + si]
+                for mi, m in enumerate(MEMS) for si, f in enumerate(SPLITS)}
+    base_res = dict(zip(MEMS, results[len(kiss_grid):]))
+    adaptive = {}
+    for m in MEMS:
+        adaptive[m] = simulate_kiss_adaptive(
+            AdaptiveConfig(base=KissConfig(total_mb=m * GB, max_slots=1024),
+                           epoch_events=512), trace)
 
     hdr = "mem   baseline | " + " | ".join(
         f"{int(f*100)}-{int(100-f*100)}" for f in SPLITS) + " | adaptive"
     print("\ncold-start %          " + hdr)
-    for mi, m in enumerate(MEMS):
-        base = simulate_baseline_jax(m * GB, trace, Policy.LRU, 1024)
-        ada, _ = simulate_kiss_adaptive(
-            AdaptiveConfig(base=KissConfig(total_mb=m * GB, max_slots=1024),
-                           epoch_events=512), trace)
-        cells = []
-        for si in range(len(SPLITS)):
-            r = metrics_to_result(grid[mi * len(SPLITS) + si])
-            cells.append(f"{r.overall.cold_start_pct:5.1f}")
-        print(f"{m:3d}GB  {base.overall.cold_start_pct:7.1f} | "
+    for m in MEMS:
+        cells = [f"{kiss_res[m, f].summary()['cold_start_pct']:5.1f}"
+                 for f in SPLITS]
+        print(f"{m:3d}GB  "
+              f"{base_res[m].summary()['cold_start_pct']:7.1f} | "
               + " | ".join(cells)
-              + f" | {ada.overall.cold_start_pct:7.1f}")
+              + f" | {adaptive[m][0].overall.cold_start_pct:7.1f}")
 
     print("\ndrop %")
-    for mi, m in enumerate(MEMS):
-        base = simulate_baseline_jax(m * GB, trace, Policy.LRU, 1024)
-        ada, fr = simulate_kiss_adaptive(
-            AdaptiveConfig(base=KissConfig(total_mb=m * GB, max_slots=1024),
-                           epoch_events=512), trace)
-        r80 = metrics_to_result(grid[mi * len(SPLITS) + 1])
-        print(f"{m:3d}GB  base={base.overall.drop_pct:5.1f}  "
-              f"kiss80-20={r80.overall.drop_pct:5.1f}  "
+    for m in MEMS:
+        ada, fr = adaptive[m]
+        print(f"{m:3d}GB  base={base_res[m].summary()['drop_pct']:5.1f}  "
+              f"kiss80-20={kiss_res[m, 0.8].summary()['drop_pct']:5.1f}  "
               f"adaptive={ada.overall.drop_pct:5.1f} "
               f"(final split {fr[-1]:.2f})")
 

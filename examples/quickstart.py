@@ -1,4 +1,4 @@
-"""Quickstart: the paper in 30 seconds.
+"""Quickstart: the paper in 30 seconds, through the ``repro.sim`` API.
 
 Synthesizes an Azure-2019-like edge trace, runs the unified-pool baseline
 and KiSS (80-20) on a constrained 4 GB edge node, and prints the headline
@@ -6,8 +6,7 @@ comparison (paper Figs 7-9).
 
   PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core import KissConfig, Policy, simulate_baseline_jax, \
-    simulate_kiss_jax
+from repro.sim import Scenario, simulate
 from repro.workloads import edge_trace
 
 
@@ -18,17 +17,18 @@ def main():
           f"{int((trace.cls == 1).sum())} large)")
 
     total_mb = 4 * 1024.0
-    base = simulate_baseline_jax(total_mb, trace, Policy.LRU, max_slots=1024)
-    kiss = simulate_kiss_jax(KissConfig(total_mb=total_mb, small_frac=0.8,
-                                        max_slots=1024), trace)
+    base = simulate(Scenario.baseline(total_mb), trace)
+    kiss = simulate(Scenario.kiss(total_mb, small_frac=0.8), trace)
 
-    b, k = base.overall, kiss.overall
+    b, k = base.summary(), kiss.summary()
     print(f"\n4 GB edge node, LRU, KiSS split 80-20")
     print(f"{'':24s}{'baseline':>10s}{'KiSS':>10s}")
-    print(f"{'cold-start %':24s}{b.cold_start_pct:10.1f}{k.cold_start_pct:10.1f}")
-    print(f"{'drop %':24s}{b.drop_pct:10.1f}{k.drop_pct:10.1f}")
-    print(f"{'hit rate %':24s}{b.hit_rate:10.1f}{k.hit_rate:10.1f}")
-    red = (1 - k.cold_start_pct / b.cold_start_pct) * 100
+    for label, key in (("cold-start %", "cold_start_pct"),
+                       ("drop %", "drop_pct"),
+                       ("hit rate %", "hit_rate"),
+                       ("mean e2e latency s", "latency_mean_s")):
+        print(f"{label:24s}{b[key]:10.2f}{k[key]:10.2f}")
+    red = (1 - k["cold_start_pct"] / b["cold_start_pct"]) * 100
     print(f"\ncold-start reduction: {red:.0f}%  (paper claims up to 60%)")
 
 

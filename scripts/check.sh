@@ -1,13 +1,22 @@
 #!/usr/bin/env bash
-# Fast signal before the full ~4 min suite: core simulator equivalence
-# (deterministic), the cluster subsystem incl. the JAX<->oracle
+# Fast signal before the full suite: an API-surface smoke check, the core
+# simulator equivalence (deterministic), the repro.sim front-door +
+# registry tests, the cluster subsystem incl. the JAX<->oracle
 # equivalence tests, the continuum layer, and workload calibration.
 # Target: < 2 minutes on the CPU container.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+# the public API surface must import (and the registries must hold the
+# four built-in routings plus cost_model) before anything else runs
+python - <<'EOF'
+from repro.sim import Scenario, simulate, sweep, routing_policies
+assert {"sticky", "least_loaded", "size_aware", "power_of_two",
+        "cost_model"} <= set(routing_policies()), routing_policies()
+EOF
 exec python -m pytest -q -m "not slow" \
     tests/test_simulator.py \
+    tests/test_sim_api.py \
     tests/test_cluster.py \
     tests/test_continuum.py \
     tests/test_workloads.py \

@@ -9,8 +9,14 @@ and whole families of cluster configurations sweep in one ``vmap``
 semantics lives in ``repro.core.continuum`` and the two are
 equivalence-tested outcome-by-outcome (``tests/test_cluster.py``).
 
-Routing policies (:class:`RoutingPolicy`, carried as data so sweeps can
-vmap over them):
+The supported entrypoints are ``repro.sim.simulate`` / ``repro.sim.sweep``
+with ``Scenario.cluster(...)``; the ``simulate_cluster_*`` /
+``sweep_cluster`` names exported here are deprecation shims over the same
+engine.
+
+Built-in routing policies (:class:`RoutingPolicy`, carried as data so
+sweeps can vmap over them — the full, open set lives in the
+``repro.core.registry`` routing registry):
 
 * ``STICKY`` — per-function hash ``func_id % n_nodes``.  Maximum temporal
   locality (the property KiSS protects), but hot functions collide and a
@@ -36,16 +42,16 @@ cold/warm execution time, cold with probability ``cloud_cold_prob``
 from ..core.continuum import (ClusterConfig, RoutingPolicy,
                               cloud_cold_draws, cluster_outcomes_ref,
                               continuum_latencies, route_hashes)
-from .engine import (ClusterEvent, cluster_events, init_cluster,
-                     simulate_cluster_jax, simulate_cluster_ref,
-                     sweep_cluster)
+from .engine import (ClusterEvent, check_step_mode, cluster_events,
+                     init_cluster, simulate_cluster_jax,
+                     simulate_cluster_ref, sweep_cluster)
 from .metrics import ClusterResult, build_result
 from .presets import het16_cluster
 
 __all__ = [
     "ClusterConfig", "RoutingPolicy", "ClusterEvent", "ClusterResult",
-    "build_result", "cloud_cold_draws", "cluster_events",
-    "cluster_outcomes_ref", "continuum_latencies", "het16_cluster",
-    "init_cluster", "route_hashes", "simulate_cluster_jax",
-    "simulate_cluster_ref", "sweep_cluster",
+    "build_result", "check_step_mode", "cloud_cold_draws",
+    "cluster_events", "cluster_outcomes_ref", "continuum_latencies",
+    "het16_cluster", "init_cluster", "route_hashes",
+    "simulate_cluster_jax", "simulate_cluster_ref", "sweep_cluster",
 ]

@@ -8,8 +8,15 @@ whole trace then runs as ONE ``lax.scan`` program:
 1. per-node load signals (``free``/``capacity`` of the pool that would
    serve this request) are read across the stacked axis;
 2. the routing policy — carried as *data* (an int32 code) so sweeps can
-   vmap over it — picks a node via ``lax.switch``;
+   vmap over it — picks a node via a ``lax.switch`` whose branch table is
+   *built from the routing registry at trace time* (``core.registry``):
+   every ``@register_routing`` policy, built-in or third-party, becomes a
+   branch with no engine edits;
 3. the chosen pool takes the ``pool_step`` transition.
+
+Cloud pricing (``cloud_rtt_s``, ``cloud_cold_prob``) rides along as f32
+data so cost-model-style policies can read it inside the scan and sweeps
+can vmap over it.
 
 Two step modes, numerically identical (property-tested against each other
 and against the numpy oracle in ``core/continuum.py``):
@@ -31,11 +38,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.compat import deprecated
 from ..core.continuum import (ClusterConfig, cloud_cold_draws,
                               cluster_outcomes_ref, route_hashes)
 from ..core.pool_jax import Event, PoolState, init_pool, pool_step
+from ..core.registry import ROUTING, RouteCtx
 from ..core.types import PoolConfig, Trace
 from .metrics import ClusterResult, build_result
+
+
+def check_step_mode(mode: str) -> None:
+    """Validate a scan step mode — the one place the rule lives (used by
+    the cluster entrypoints and the ``repro.sim`` front door alike)."""
+    if mode not in ("gather", "vmap"):
+        raise ValueError(f"mode must be 'gather' or 'vmap', got {mode!r}")
 
 
 class ClusterEvent(NamedTuple):
@@ -74,33 +90,23 @@ def init_cluster(cfg: ClusterConfig) -> PoolState:
 
 
 def _route(routing: jax.Array, ev: ClusterEvent, free_t: jax.Array,
-           cap_t: jax.Array) -> jax.Array:
-    """The in-scan routing decision; mirrors ``continuum._route_ref``."""
-    frac = free_t / jnp.maximum(cap_t, 1e-6)
-
-    def sticky(_):
-        return ev.h1
-
-    def least_loaded(_):
-        return jnp.argmax(frac).astype(jnp.int32)
-
-    def size_aware(_):
-        elig = (cap_t >= ev.size - 1e-9).astype(jnp.int32)
-        k = jnp.sum(elig)
-        j = jnp.mod(ev.h1, jnp.maximum(k, 1))
-        cand = jnp.argmax(jnp.cumsum(elig) == j + 1).astype(jnp.int32)
-        return jnp.where(k == 0, ev.h1, cand)
-
-    def power_of_two(_):
-        return jnp.where(frac[ev.h1] >= frac[ev.h2], ev.h1, ev.h2)
-
-    return jax.lax.switch(routing, [sticky, least_loaded, size_aware,
-                                    power_of_two], None)
+           cap_t: jax.Array, cloud: jax.Array) -> jax.Array:
+    """The in-scan routing decision: a ``lax.switch`` over every policy in
+    the routing registry (same pure functions the numpy oracle dispatches),
+    indexed by the ``routing`` code carried as data."""
+    ctx = RouteCtx(h1=ev.h1, h2=ev.h2, size=ev.size, cls=ev.cls,
+                   warm=ev.warm, cold=ev.cold, free=free_t, cap=cap_t,
+                   cloud_rtt_s=cloud[0], cloud_cold_prob=cloud[1])
+    branches = [
+        (lambda _, fn=spec.fn: jnp.asarray(fn(jnp, ctx)).astype(jnp.int32))
+        for spec in ROUTING.specs()
+    ]
+    return jax.lax.switch(routing, branches, None)
 
 
 def _run_cluster_impl(pools: PoolState, events: ClusterEvent,
                       routing: jax.Array, unified: jax.Array,
-                      n_nodes: int, mode: str):
+                      cloud: jax.Array, n_nodes: int, mode: str):
     """The whole trace in one scan.  Returns (node i32[T], outcome i32[T])."""
     n = n_nodes
     tree = jax.tree_util.tree_map
@@ -110,7 +116,8 @@ def _run_cluster_impl(pools: PoolState, events: ClusterEvent,
         cap2 = pools.capacity.reshape(n, 2)
         tgt = jnp.where(unified, 0, ev.cls)          # i32[N] pool per node
         lanes = jnp.arange(n)
-        node = _route(routing, ev, free2[lanes, tgt], cap2[lanes, tgt])
+        node = _route(routing, ev, free2[lanes, tgt], cap2[lanes, tgt],
+                      cloud)
         p = node * 2 + tgt[node]
         core_ev = Event(ev.t, ev.func_id, ev.size, ev.cls, ev.warm, ev.cold)
         if mode == "gather":
@@ -139,49 +146,45 @@ _run_cluster = jax.jit(_run_cluster_impl,
 @functools.lru_cache(maxsize=None)
 def _sweep_runner(n_nodes: int, mode: str):
     """Cached jitted vmap of the scan, keyed on the static shape args, so
-    repeated ``sweep_cluster`` calls hit the compile cache like
-    ``_run_cluster`` does."""
+    repeated sweep calls hit the compile cache like ``_run_cluster``
+    does."""
     return jax.jit(jax.vmap(
         functools.partial(_run_cluster_impl, n_nodes=n_nodes, mode=mode),
-        in_axes=(0, None, 0, 0)))
+        in_axes=(0, None, 0, 0, 0)))
 
 
-def simulate_cluster_jax(cfg: ClusterConfig, trace: Trace,
-                         rng_seed: int = 0,
-                         mode: str = "gather") -> ClusterResult:
-    """Simulate the cluster on ``trace``; one jitted scan end to end."""
-    if mode not in ("gather", "vmap"):
-        raise ValueError(f"mode must be 'gather' or 'vmap', got {mode!r}")
+def _cloud_vec(cfg: ClusterConfig) -> jnp.ndarray:
+    return jnp.asarray([cfg.cloud_rtt_s, cfg.cloud_cold_prob], jnp.float32)
+
+
+# The implementations below are shared by the deprecated public names and
+# the ``repro.sim`` front door (which must not trip its own deprecation
+# warnings).
+
+def _simulate_cluster_jax(cfg: ClusterConfig, trace: Trace,
+                          rng_seed: int = 0,
+                          mode: str = "gather") -> ClusterResult:
+    check_step_mode(mode)
     events = cluster_events(trace, cfg.n_nodes)
     node, outcome = _run_cluster(
         init_cluster(cfg), events, jnp.int32(int(cfg.routing)),
-        jnp.asarray(cfg.unified, bool), n_nodes=cfg.n_nodes, mode=mode)
+        jnp.asarray(cfg.unified, bool), _cloud_vec(cfg),
+        n_nodes=cfg.n_nodes, mode=mode)
     cloud_cold = cloud_cold_draws(len(trace), cfg.cloud_cold_prob, rng_seed)
     return build_result(cfg, trace, np.asarray(node), np.asarray(outcome),
                         cloud_cold)
 
 
-def simulate_cluster_ref(cfg: ClusterConfig, trace: Trace,
-                         rng_seed: int = 0) -> ClusterResult:
-    """Numpy-oracle twin of :func:`simulate_cluster_jax` (same result
-    type, sequential engine from ``core/continuum.py``)."""
+def _simulate_cluster_ref(cfg: ClusterConfig, trace: Trace,
+                          rng_seed: int = 0) -> ClusterResult:
     node, outcome = cluster_outcomes_ref(cfg, trace)
     cloud_cold = cloud_cold_draws(len(trace), cfg.cloud_cold_prob, rng_seed)
     return build_result(cfg, trace, node, outcome, cloud_cold)
 
 
-def sweep_cluster(trace: Trace, configs, rng_seed: int = 0,
-                  mode: str = "gather") -> list[ClusterResult]:
-    """Evaluate many cluster configurations (capacities x splits x routing)
-    in ONE vmapped jit, mirroring ``sweep_kiss``.
-
-    All configs must share ``n_nodes`` and ``max_slots`` (the stacked
-    shapes); everything else — per-node capacities, splits, unified flags,
-    routing policy, cloud pricing — may vary per config.  Cloud cold flips
-    use common random numbers across configs.
-    """
-    if mode not in ("gather", "vmap"):
-        raise ValueError(f"mode must be 'gather' or 'vmap', got {mode!r}")
+def _sweep_cluster(trace: Trace, configs, rng_seed: int = 0,
+                   mode: str = "gather") -> list[ClusterResult]:
+    check_step_mode(mode)
     configs = list(configs)
     if not configs:
         raise ValueError("sweep_cluster: configs must be non-empty")
@@ -194,10 +197,43 @@ def sweep_cluster(trace: Trace, configs, rng_seed: int = 0,
         lambda *xs: jnp.stack(xs), *[init_cluster(c) for c in configs])
     routing = jnp.asarray([int(c.routing) for c in configs], jnp.int32)
     unified = jnp.asarray([c.unified for c in configs], bool)
+    cloud = jnp.stack([_cloud_vec(c) for c in configs])
     events = cluster_events(trace, n)
-    nodes, outcomes = _sweep_runner(n, mode)(pools, events, routing, unified)
+    nodes, outcomes = _sweep_runner(n, mode)(pools, events, routing,
+                                             unified, cloud)
     nodes, outcomes = np.asarray(nodes), np.asarray(outcomes)
     return [build_result(c, trace, nodes[g], outcomes[g],
                          cloud_cold_draws(len(trace), c.cloud_cold_prob,
                                           rng_seed))
             for g, c in enumerate(configs)]
+
+
+@deprecated("repro.sim.simulate(Scenario.cluster(...))")
+def simulate_cluster_jax(cfg: ClusterConfig, trace: Trace,
+                         rng_seed: int = 0,
+                         mode: str = "gather") -> ClusterResult:
+    """Simulate the cluster on ``trace``; one jitted scan end to end."""
+    return _simulate_cluster_jax(cfg, trace, rng_seed, mode)
+
+
+@deprecated("repro.sim.simulate(Scenario.cluster(...), engine='ref')")
+def simulate_cluster_ref(cfg: ClusterConfig, trace: Trace,
+                         rng_seed: int = 0) -> ClusterResult:
+    """Numpy-oracle twin of :func:`simulate_cluster_jax` (same result
+    type, sequential engine from ``core/continuum.py``)."""
+    return _simulate_cluster_ref(cfg, trace, rng_seed)
+
+
+@deprecated("repro.sim.sweep(trace, scenarios)")
+def sweep_cluster(trace: Trace, configs, rng_seed: int = 0,
+                  mode: str = "gather") -> list[ClusterResult]:
+    """Evaluate many cluster configurations (capacities x splits x routing)
+    in ONE vmapped jit.
+
+    All configs must share ``n_nodes`` and ``max_slots`` (the stacked
+    shapes); everything else — per-node capacities, splits, unified flags,
+    routing policy, cloud pricing — may vary per config.  Cloud cold flips
+    use common random numbers across configs.  (``repro.sim.sweep``
+    additionally buckets mixed shapes into multiple vmapped runs.)
+    """
+    return _sweep_cluster(trace, configs, rng_seed, mode)

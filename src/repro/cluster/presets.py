@@ -6,12 +6,15 @@ from __future__ import annotations
 from ..core.continuum import ClusterConfig, RoutingPolicy
 
 
-def het16_cluster(routing: RoutingPolicy, big_mb: float = 6144.0,
+def het16_cluster(routing, big_mb: float = 6144.0,
                   max_slots: int = 256, cloud_rtt_s: float = 0.5,
                   cloud_cold_prob: float = 0.25) -> ClusterConfig:
     """The 16-node heterogeneous benchmark cluster: 1/1/2/``big_mb`` GB
     nodes interleaved so sticky hashing lands each function class on a
-    mix of node sizes, all KiSS-split 80/20, in front of a priced cloud."""
+    mix of node sizes, all KiSS-split 80/20, in front of a priced cloud.
+
+    ``routing`` is anything the routing registry resolves: a registered
+    name (``"cost_model"``), a :class:`RoutingPolicy` member, or a code."""
     return ClusterConfig(
         node_mb=(1024.0, 1024.0, 2048.0, float(big_mb)) * 4,
         small_frac=(0.8,) * 16, unified=(False,) * 16, routing=routing,

@@ -1,15 +1,27 @@
 """KiSS core: the paper's contribution.
 
 * ``types``          — trace/config/metric datatypes
+* ``registry``       — pluggable routing/replacement policy registries
+  (one pure function per policy, shared by both engines)
 * ``pool_ref``       — sequential oracle warm pool
-* ``simulator_ref``  — sequential oracle simulator
+* ``simulator_ref``  — sequential oracle simulator (deprecated entrypoints)
 * ``pool_jax``       — fixed-slot JAX warm pool (one-event transition)
-* ``simulator_jax``  — lax.scan simulator + vmapped config sweeps
+* ``simulator_jax``  — lax.scan simulator + vmapped sweeps (deprecated
+  entrypoints)
 * ``analyzer``       — workload analyzer (paper §2.5, Fig 6)
 * ``adaptive``       — beyond-paper adaptive partitioning (paper §7.3)
+* ``continuum``      — cluster config + numpy cluster oracle
+
+The supported front door for simulations is ``repro.sim``
+(``Scenario`` / ``simulate`` / ``sweep``); the ``simulate_*`` /
+``sweep_*`` names re-exported here are deprecation shims kept for
+back-compat and as the equivalence-test reference implementations.
 """
 from .types import (LARGE, SMALL, ClassMetrics, KissConfig, Policy,
                     PoolConfig, SimResult, Trace)
+from .registry import (REPLACEMENT, ROUTING, PolicySpec, RouteCtx,
+                       SlotStats, register_replacement, register_routing,
+                       replacement_policies, routing_policies)
 from .simulator_ref import simulate_baseline, simulate_kiss
 from .simulator_jax import (metrics_to_result, simulate_baseline_jax,
                             simulate_kiss_jax, sweep_baseline, sweep_kiss)
@@ -20,9 +32,11 @@ from .continuum import (ClusterConfig, ContinuumConfig, ContinuumResult,
 
 __all__ = [
     "LARGE", "SMALL", "ClassMetrics", "ClusterConfig", "KissConfig",
-    "Policy", "PoolConfig", "RoutingPolicy", "SimResult", "Trace",
-    "cluster_outcomes_ref", "simulate_baseline", "simulate_kiss",
-    "simulate_baseline_jax", "simulate_kiss_jax", "sweep_baseline",
-    "sweep_kiss", "metrics_to_result", "WorkloadProfile", "analyze",
-    "classify",
+    "Policy", "PolicySpec", "PoolConfig", "REPLACEMENT", "ROUTING",
+    "RouteCtx", "RoutingPolicy", "SimResult", "SlotStats", "Trace",
+    "cluster_outcomes_ref", "register_replacement", "register_routing",
+    "replacement_policies", "routing_policies", "simulate_baseline",
+    "simulate_kiss", "simulate_baseline_jax", "simulate_kiss_jax",
+    "sweep_baseline", "sweep_kiss", "metrics_to_result",
+    "WorkloadProfile", "analyze", "classify",
 ]

@@ -7,6 +7,11 @@ bytes requested), bounded to [min_frac, max_frac].  Shrinking a pool evicts
 lowest-priority *idle* containers until the new capacity is respected; busy
 containers are never killed (the pool temporarily runs a negative free
 balance, which naturally blocks admissions until it drains).
+
+``simulate_kiss_adaptive`` is the one legacy entrypoint deliberately NOT
+deprecated by the ``repro.sim`` redesign: a ``Scenario`` is a *static*
+spec, and folding per-epoch re-splitting into it (as a scenario mode that
+also covers per-node cluster autoscaling) is a ROADMAP item.
 """
 from __future__ import annotations
 

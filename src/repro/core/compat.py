@@ -1,0 +1,35 @@
+"""Deprecation helper for the legacy simulator entrypoints.
+
+The scenario-based front door (``repro.sim``) supersedes the zoo of
+``simulate_*`` / ``sweep_*`` functions that accumulated across
+``repro.core`` and ``repro.cluster``.  The old names keep working — each
+is a thin shim that emits a :class:`DeprecationWarning` and forwards to
+the retained implementation — so downstream code migrates at its own
+pace, and the equivalence tests can still pit the new engine against the
+historical ones.
+"""
+from __future__ import annotations
+
+import functools
+import warnings
+
+
+def deprecated(replacement: str):
+    """Wrap an entrypoint so calling it warns and forwards unchanged.
+
+    ``replacement`` is the human-readable new spelling, e.g.
+    ``"repro.sim.simulate(Scenario.kiss(...))"``.
+    """
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            warnings.warn(
+                f"{fn.__name__} is deprecated; use {replacement} instead",
+                DeprecationWarning, stacklevel=2)
+            return fn(*args, **kwargs)
+
+        wrapper.__deprecated__ = replacement
+        return wrapper
+
+    return deco

@@ -11,18 +11,18 @@ This file is the *sequential oracle* for the batched JAX engine in
 per-event semantics, executed one event at a time over ``pool_ref.WarmPool``
 so the two engines can be equivalence-tested outcome-by-outcome.
 
-Routing policies (``RoutingPolicy``):
+Routing is *pluggable*: every policy is a registered pure function in
+``core.registry`` (``@register_routing``), and this oracle dispatches the
+exact same function — with numpy float32 scalars — that the JAX engine
+compiles into its ``lax.switch`` table.  The four built-ins keep their
+historical ``RoutingPolicy`` enum codes:
 
-* ``STICKY``       — per-function hash (``func_id % n_nodes``); preserves
-  temporal locality, the property KiSS protects.  This is the historical
-  ``simulate_continuum`` behavior.
-* ``LEAST_LOADED`` — send each request to the node whose target pool has
-  the highest free fraction right now.
-* ``SIZE_AWARE``   — sticky-hash over the subset of nodes whose target
-  pool is big enough to *ever* host the container (large containers are
-  steered to big-memory nodes; falls back to plain sticky if none fit).
-* ``POWER_OF_TWO`` — two independent hashes pick two candidate nodes; the
-  one with the higher free fraction in the target pool wins.
+* ``STICKY`` (``"sticky"``)             — ``func_id % n_nodes``; preserves
+  temporal locality, the property KiSS protects.
+* ``LEAST_LOADED`` (``"least_loaded"``) — highest free fraction wins.
+* ``SIZE_AWARE`` (``"size_aware"``)     — sticky-hash over the nodes whose
+  target pool can ever host the container.
+* ``POWER_OF_TWO`` (``"power_of_two"``) — two hashes, less loaded wins.
 
 All load comparisons are done in float32 so the numpy oracle and the JAX
 engine take bit-identical routing decisions on the exact-f32 traces the
@@ -35,7 +35,9 @@ import enum
 
 import numpy as np
 
+from .compat import deprecated
 from .pool_ref import WarmPool
+from .registry import REPLACEMENT, ROUTING, RouteCtx
 from .types import (DROP, HIT, MISS, ClassMetrics, Policy, PoolConfig,
                     Trace)
 
@@ -43,12 +45,20 @@ _OUT_CODE = {"hit": HIT, "miss": MISS, "drop": DROP}
 
 
 class RoutingPolicy(enum.IntEnum):
-    """Cluster request-routing policy (carried as data in the JAX engine)."""
+    """The built-in routing policies' registry codes, as an enum for
+    back-compat.  New policies need no enum entry — pass their registered
+    name (or code) wherever a routing policy is accepted."""
 
     STICKY = 0
     LEAST_LOADED = 1
     SIZE_AWARE = 2
     POWER_OF_TWO = 3
+
+
+# the registry is the source of truth; the enum is a frozen alias of its
+# first four entries and must never drift from it
+assert [r.name.lower() for r in RoutingPolicy] == ROUTING.names()[:4]
+assert [p.name.lower() for p in Policy] == REPLACEMENT.names()[:3]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,8 +80,8 @@ class ClusterConfig:
     node_mb: tuple[float, ...]
     small_frac: tuple[float, ...]
     unified: tuple[bool, ...]
-    policy: Policy = Policy.LRU
-    routing: RoutingPolicy = RoutingPolicy.STICKY
+    policy: Policy | int | str = Policy.LRU
+    routing: RoutingPolicy | int | str = RoutingPolicy.STICKY
     cloud_rtt_s: float = 0.25         # edge->cloud round trip
     cloud_cold_prob: float = 0.05     # cloud has big warm pools
     max_slots: int = 1024             # per-pool slot count, as PoolConfig
@@ -80,6 +90,15 @@ class ClusterConfig:
         n = len(self.node_mb)
         if not (len(self.small_frac) == len(self.unified) == n and n > 0):
             raise ValueError("node_mb/small_frac/unified must align, n>=1")
+        # normalize policies (name | code | enum) to registry codes, kept
+        # as the historical enums where one exists so reprs stay readable
+        rcode = ROUTING.resolve(self.routing)
+        object.__setattr__(
+            self, "routing",
+            RoutingPolicy(rcode) if rcode < len(RoutingPolicy) else rcode)
+        pcode = REPLACEMENT.resolve(self.policy)
+        object.__setattr__(
+            self, "policy", Policy(pcode) if pcode < len(Policy) else pcode)
 
     @property
     def n_nodes(self) -> int:
@@ -128,26 +147,6 @@ def route_hashes(func_id: np.ndarray, n_nodes: int):
     return h1, h2
 
 
-def _route_ref(routing: RoutingPolicy, h1: int, h2: int, size: float,
-               free_t: np.ndarray, cap_t: np.ndarray) -> int:
-    """One routing decision.  ``free_t``/``cap_t`` are f32[N] for the pool
-    each node would serve this request from (``free_t`` may be ``None``
-    for the policies that never read it)."""
-    if routing == RoutingPolicy.STICKY:
-        return int(h1)
-    if routing == RoutingPolicy.SIZE_AWARE:
-        # sticky-hash over the nodes that can ever host this size
-        elig = cap_t >= np.float32(size) - np.float32(1e-9)
-        k = int(elig.sum())
-        if k == 0:
-            return int(h1)
-        return int(np.flatnonzero(elig)[h1 % k])
-    frac = free_t / np.maximum(cap_t, np.float32(1e-6))
-    if routing == RoutingPolicy.LEAST_LOADED:
-        return int(np.argmax(frac))
-    return int(h1) if frac[h1] >= frac[h2] else int(h2)
-
-
 def cloud_cold_draws(n: int, prob: float, rng_seed: int = 0) -> np.ndarray:
     """Pre-drawn cloud cold-start coin flips (common random numbers: both
     engines, and every config of a sweep, price offloads identically)."""
@@ -172,7 +171,12 @@ def continuum_latencies(trace: Trace, outcome: np.ndarray,
 
 def cluster_outcomes_ref(cfg: ClusterConfig, trace: Trace):
     """Sequential oracle for the cluster: returns ``(node, outcome)`` as
-    i32[T] arrays (outcome: 0 hit, 1 miss, 2 drop/offload)."""
+    i32[T] arrays (outcome: 0 hit, 1 miss, 2 drop/offload).
+
+    The routing decision calls the registered policy function with numpy
+    float32 inputs — the same pure function the JAX engine compiles — so
+    any policy added via ``@register_routing`` runs here unchanged.
+    """
     n = cfg.n_nodes
     caps = cfg.pool_caps()
     pools = [[WarmPool(PoolConfig(caps[i, 0], cfg.policy, cfg.max_slots)),
@@ -188,22 +192,28 @@ def cluster_outcomes_ref(cfg: ClusterConfig, trace: Trace):
     # loop-invariant routing inputs, precomputed per size class
     tgt_by_cls = [np.where(unified, 0, c) for c in (0, 1)]
     cap_by_cls = [cap_f32[nodes_idx, t] for t in tgt_by_cls]
-    # only the load-sensitive policies read pool occupancy; skip the
-    # O(n_nodes) per-event scan for sticky/size-aware routing
-    needs_free = cfg.routing in (RoutingPolicy.LEAST_LOADED,
-                                 RoutingPolicy.POWER_OF_TWO)
+    spec = ROUTING.spec(cfg.routing)
+    rtt = np.float32(cfg.cloud_rtt_s)
+    ccp = np.float32(cfg.cloud_cold_prob)
     for i in range(len(trace)):
         cls = int(trace.cls[i])
-        size = float(trace.size_mb[i])
         tgt = tgt_by_cls[cls]
+        # only load-sensitive policies read pool occupancy; skip the
+        # O(n_nodes) per-event scan for the others (spec.needs_free)
         free_t = np.fromiter(
             (pools[j][tgt[j]].free_mb for j in range(n)), np.float32,
-            n) if needs_free else None
-        cap_t = cap_by_cls[cls]
-        node = _route_ref(cfg.routing, int(h1[i]), int(h2[i]), size,
-                          free_t, cap_t)
+            n) if spec.needs_free else None
+        ctx = RouteCtx(
+            h1=np.int32(h1[i]), h2=np.int32(h2[i]),
+            size=np.float32(trace.size_mb[i]), cls=np.int32(cls),
+            warm=np.float32(trace.warm_dur[i]),
+            cold=np.float32(trace.cold_dur[i]),
+            free=free_t, cap=cap_by_cls[cls],
+            cloud_rtt_s=rtt, cloud_cold_prob=ccp)
+        node = int(spec.fn(np, ctx))
         out = pools[node][int(tgt[node])].access(
-            float(trace.t[i]), int(trace.func_id[i]), size,
+            float(trace.t[i]), int(trace.func_id[i]),
+            float(trace.size_mb[i]),
             float(trace.warm_dur[i]), float(trace.cold_dur[i]), sink)
         node_out[i] = node
         outcome_out[i] = _OUT_CODE[out]
@@ -251,6 +261,7 @@ class ContinuumResult:
                 "p99_s": float(np.percentile(l, 99))}
 
 
+@deprecated("repro.sim.simulate(Scenario.cluster(...), engine='ref')")
 def simulate_continuum(cfg: ContinuumConfig, trace: Trace,
                        rng_seed: int = 0) -> ContinuumResult:
     """Sticky-routed homogeneous continuum (thin wrapper over the cluster

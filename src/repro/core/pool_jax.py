@@ -13,7 +13,9 @@ oracle in ``pool_ref.py`` (property-tested):
 
 The policy is carried *in the state* (``policy`` int32 scalar) rather than as
 a static Python value, so a single jitted simulator can be vmapped across
-LRU/GD/FREQ as data.
+every registered replacement policy as data (the priority expression is
+built from ``core.registry.REPLACEMENT`` at trace time — register a new
+policy and this pool ranks by it with no engine edits).
 """
 from __future__ import annotations
 
@@ -22,9 +24,15 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from .registry import REPLACEMENT, ROUTING, SlotStats, replacement_priority
 from .types import DROP, HIT, MISS, Policy, PoolConfig
 
 _INF = jnp.float32(jnp.inf)
+
+# A newly registered policy must show up in already-jitted engines, whose
+# compiled programs baked in the previous registry: drop the trace caches.
+ROUTING.on_register(jax.clear_caches)
+REPLACEMENT.on_register(jax.clear_caches)
 
 
 class PoolState(NamedTuple):
@@ -74,10 +82,11 @@ def init_pool(cfg: PoolConfig) -> PoolState:
 
 
 def _priority(p: PoolState) -> jax.Array:
-    """Eviction priority per slot (lower = evicted first)."""
-    return jnp.where(p.policy == int(Policy.LRU), p.last_use,
-                     jnp.where(p.policy == int(Policy.FREQ), p.freq,
-                               p.gd_pri))
+    """Eviction priority per slot (lower = evicted first), built from the
+    replacement-policy registry with the policy code as data."""
+    stats = SlotStats(last_use=p.last_use, freq=p.freq, gd_pri=p.gd_pri,
+                      size=p.size, busy_until=p.busy_until)
+    return replacement_priority(jnp, p.policy, stats)
 
 
 def _gd(clock, freq, cold_cost, size):

@@ -10,12 +10,24 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import math
+import operator
 
 import numpy as np
 
+from .registry import REPLACEMENT, SlotStats
 from .types import ClassMetrics, Policy, PoolConfig
 
 _ids = itertools.count()
+
+# The built-in replacement policies are pure field reads; an attrgetter
+# keeps the oracle's eviction sort (its hottest loop) at attribute speed.
+# Semantics are pinned to the registry codes by the asserts in
+# ``continuum.py``; third-party policies take the generic SlotStats path.
+_FAST_PRIORITY = {
+    int(Policy.LRU): operator.attrgetter("last_use"),
+    int(Policy.GREEDY_DUAL): operator.attrgetter("gd_priority"),
+    int(Policy.FREQ): operator.attrgetter("freq"),
+}
 
 
 def _f32(x) -> float:
@@ -50,17 +62,24 @@ class WarmPool:
         self.containers: list[Container] = []
         self.free_mb = float(cfg.capacity_mb)
         self.clock = 0.0  # GreedyDual inflation clock
+        # the replacement policy, resolved once: built-ins hit the
+        # attrgetter fast path, anything else dispatches the registered
+        # pure function (the same one the JAX pool ranks by)
+        code = REPLACEMENT.resolve(cfg.policy)
+        self._fast_pri = _FAST_PRIORITY.get(code)
+        self._pri_fn = REPLACEMENT.spec(code).fn
         # set by access(): containers evicted by the last event — lets the
         # serving runtime destroy the corresponding real model instances.
         self.last_victims: list[Container] = []
 
     # -- policy priority --------------------------------------------------
     def _priority(self, c: Container) -> float:
-        if self.cfg.policy == Policy.LRU:
-            return c.last_use
-        if self.cfg.policy == Policy.FREQ:
-            return c.freq
-        return c.gd_priority
+        """The registered replacement policy on this container's stats."""
+        if self._fast_pri is not None:
+            return self._fast_pri(c)
+        return float(self._pri_fn(np, SlotStats(
+            last_use=c.last_use, freq=c.freq, gd_pri=c.gd_priority,
+            size=c.size_mb, busy_until=c.busy_until)))
 
     def _gd(self, freq: float, cold_cost: float, size: float) -> float:
         # f32-stepwise: clock + (freq * cost) / max(size, 1e-6)

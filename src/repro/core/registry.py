@@ -1,0 +1,265 @@
+"""First-class policy registries: one definition, two engines.
+
+Routing and replacement policies used to be closed enums whose semantics
+were duplicated between the JAX engine (``lax.switch`` branches /
+``jnp.where`` chains) and the numpy oracle (if/elif dispatch) — adding a
+policy meant editing four files in lockstep.  Here each policy is ONE
+registered pure function written against an array namespace ``xp`` (either
+``numpy`` or ``jax.numpy``):
+
+* the JAX engines *build* their ``lax.switch`` table / priority
+  ``where``-chain from the registry at trace time, and
+* the sequential oracle dispatches the very same function with ``numpy``
+  scalars,
+
+so a third-party policy is a decorator away and is automatically
+bit-identical across engines (both sides run the same float32 arithmetic
+on the same inputs)::
+
+    from repro.sim import register_routing
+
+    @register_routing("my_policy")
+    def my_policy(xp, ctx):          # ctx: RouteCtx
+        return xp.argmax(ctx.free)   # -> node index
+
+Registered policies are identified by a stable integer *code* (assigned in
+registration order) so they keep working as vmapped *data* in config
+sweeps.  The four built-in routings and three built-in replacements are
+registered here with codes matching the historical ``RoutingPolicy`` /
+``Policy`` enums, which remain as aliases.
+
+Registering a new policy invalidates the JIT caches of any engine that
+baked the previous registry into a compiled program (see ``on_register``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+
+class RouteCtx(NamedTuple):
+    """Inputs available to a routing decision, one invocation at a time.
+
+    Scalars are float32/int32 (numpy scalars in the oracle, traced scalars
+    in the JAX scan); ``free``/``cap`` are f32[n_nodes] views of the pool
+    each node would serve this request from.  ``free`` is only populated
+    for policies registered with ``needs_free=True`` (the oracle skips the
+    O(n_nodes) occupancy scan otherwise; the JAX engine always provides
+    it).
+    """
+
+    h1: object            # i32  sticky hash: func_id % n_nodes
+    h2: object            # i32  second (Knuth multiplicative) hash
+    size: object          # f32  container footprint (MB)
+    cls: object           # i32  size class (0 small, 1 large)
+    warm: object          # f32  warm execution time (s)
+    cold: object          # f32  cold execution time (s)
+    free: object          # f32[N] free MB of each node's target pool
+    cap: object           # f32[N] capacity MB of each node's target pool
+    cloud_rtt_s: object   # f32  edge->cloud round trip (s)
+    cloud_cold_prob: object  # f32  cloud cold-start probability
+
+
+class SlotStats(NamedTuple):
+    """Per-container statistics a replacement policy may rank by.
+
+    Lower priority = evicted first.  In the JAX pool these are f32[slots]
+    arrays; in the sequential oracle they are python floats for one
+    container.
+    """
+
+    last_use: object
+    freq: object
+    gd_pri: object        # GreedyDual priority maintained by the pool
+    size: object          # container footprint (MB)
+    busy_until: object
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicySpec:
+    name: str
+    code: int
+    fn: Callable
+    needs_free: bool = True   # routing only: reads ctx.free?
+
+
+class PolicyRegistry:
+    """Ordered name -> code -> pure-function registry for one policy kind."""
+
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._specs: list[PolicySpec] = []
+        self._by_name: dict[str, PolicySpec] = {}
+        self._hooks: list[Callable[[], None]] = []
+
+    # -- registration ------------------------------------------------------
+    def register(self, name: str, *, needs_free: bool = True):
+        """Decorator: register ``fn(xp, ctx_or_stats)`` under ``name``.
+
+        Codes are assigned in registration order and never reused; a
+        duplicate name is an error (policies are process-global).
+        """
+        if not isinstance(name, str) or not name:
+            raise ValueError(f"{self.kind} policy name must be a non-empty "
+                             f"string, got {name!r}")
+
+        def deco(fn):
+            if name in self._by_name:
+                raise ValueError(
+                    f"{self.kind} policy {name!r} is already registered")
+            spec = PolicySpec(name=name, code=len(self._specs), fn=fn,
+                              needs_free=needs_free)
+            self._specs.append(spec)
+            self._by_name[name] = spec
+            for hook in self._hooks:
+                hook()
+            return fn
+
+        return deco
+
+    def on_register(self, hook: Callable[[], None]) -> None:
+        """Run ``hook()`` after every new registration (engines use this to
+        drop JIT caches that baked in the previous dispatch table)."""
+        if hook not in self._hooks:
+            self._hooks.append(hook)
+
+    # -- lookup ------------------------------------------------------------
+    def resolve(self, policy) -> int:
+        """Name | code | IntEnum member -> registered integer code."""
+        if isinstance(policy, str):
+            try:
+                return self._by_name[policy].code
+            except KeyError:
+                raise KeyError(
+                    f"unknown {self.kind} policy {policy!r}; registered: "
+                    f"{self.names()}") from None
+        try:
+            code = int(policy)
+            if code != policy:   # 1.9 must not silently become policy 1
+                raise ValueError
+        except (TypeError, ValueError):
+            raise KeyError(f"cannot resolve {self.kind} policy "
+                           f"{policy!r} (want a name or an integer code)"
+                           ) from None
+        if not 0 <= code < len(self._specs):
+            raise KeyError(f"unknown {self.kind} policy code {code}; "
+                           f"registered: {self.names()}")
+        return code
+
+    def spec(self, policy) -> PolicySpec:
+        return self._specs[self.resolve(policy)]
+
+    def specs(self) -> tuple[PolicySpec, ...]:
+        return tuple(self._specs)
+
+    def names(self) -> list[str]:
+        return [s.name for s in self._specs]
+
+    def __len__(self) -> int:
+        return len(self._specs)
+
+    def __contains__(self, policy) -> bool:
+        try:
+            self.resolve(policy)
+            return True
+        except KeyError:
+            return False
+
+
+ROUTING = PolicyRegistry("routing")
+REPLACEMENT = PolicyRegistry("replacement")
+
+register_routing = ROUTING.register
+register_replacement = REPLACEMENT.register
+
+
+def routing_policies() -> list[str]:
+    """Names of all registered routing policies, in code order."""
+    return ROUTING.names()
+
+
+def replacement_policies() -> list[str]:
+    """Names of all registered replacement policies, in code order."""
+    return REPLACEMENT.names()
+
+
+# --------------------------------------------------------------------------
+# built-in routing policies (codes 0-3 == the historical RoutingPolicy enum)
+# --------------------------------------------------------------------------
+# All load comparisons are float32 so the numpy oracle and the JAX engine
+# take bit-identical decisions on exact-f32 traces.
+
+def _free_frac(xp, ctx: RouteCtx):
+    return ctx.free / xp.maximum(ctx.cap, xp.float32(1e-6))
+
+
+@register_routing("sticky", needs_free=False)
+def _sticky(xp, ctx: RouteCtx):
+    """Per-function hash (``func_id % n_nodes``): maximum temporal
+    locality — the property KiSS protects."""
+    return ctx.h1
+
+
+@register_routing("least_loaded")
+def _least_loaded(xp, ctx: RouteCtx):
+    """Highest instantaneous free fraction of the target pool wins."""
+    return xp.argmax(_free_frac(xp, ctx))
+
+
+@register_routing("size_aware", needs_free=False)
+def _size_aware(xp, ctx: RouteCtx):
+    """Sticky-hash over the nodes whose target pool can *ever* host this
+    container (falls back to plain sticky when none can)."""
+    elig = (ctx.cap >= ctx.size - xp.float32(1e-9)).astype(xp.int32)
+    k = xp.sum(elig)
+    j = xp.mod(ctx.h1, xp.maximum(k, 1))
+    cand = xp.argmax(xp.cumsum(elig) == j + 1)
+    return xp.where(k == 0, ctx.h1, cand)
+
+
+@register_routing("power_of_two")
+def _power_of_two(xp, ctx: RouteCtx):
+    """Two hashes nominate two candidates; the less loaded one wins."""
+    frac = _free_frac(xp, ctx)
+    return xp.where(frac[ctx.h1] >= frac[ctx.h2], ctx.h1, ctx.h2)
+
+
+# --------------------------------------------------------------------------
+# built-in replacement policies (codes 0-2 == the historical Policy enum)
+# --------------------------------------------------------------------------
+
+@register_replacement("lru")
+def _lru(xp, s: SlotStats):
+    return s.last_use
+
+
+@register_replacement("greedy_dual")
+def _greedy_dual(xp, s: SlotStats):
+    """FaaSCache-style: priority = clock + freq * cold_cost / size, already
+    maintained incrementally by the pool in ``gd_pri``."""
+    return s.gd_pri
+
+
+@register_replacement("freq")
+def _freq(xp, s: SlotStats):
+    return s.freq
+
+
+def replacement_priority(xp, policy, stats: SlotStats):
+    """Eviction priority for ``policy`` carried as *data* (vmappable).
+
+    Builds a ``where``-chain over every registered replacement policy so a
+    single jitted simulator sweeps policies as an int array.  The oracle,
+    which holds a concrete code, dispatches directly via ``spec().fn``.
+
+    Policy-as-data has an inherent cost: ``where`` (and ``lax.switch``
+    under vmap) evaluates every registered branch per event.  Each branch
+    is a few scalar f32 ops — noise next to the pool step's O(slots)
+    sort — but registries are process-global, so keep policy functions
+    cheap.
+    """
+    specs = REPLACEMENT.specs()
+    out = specs[0].fn(xp, stats)
+    for spec in specs[1:]:
+        out = xp.where(policy == spec.code, spec.fn(xp, stats), out)
+    return out

@@ -1,12 +1,14 @@
 """JAX discrete-event simulator: the whole trace is one ``lax.scan``.
 
-Three entry points:
+Three entry points, all deprecated in favour of the scenario front door
+(``repro.sim.simulate`` / ``repro.sim.sweep``) but retained unchanged as
+the historical single-node engines the new API is equivalence-tested
+against:
 
 * ``simulate_baseline_jax`` — unified pool (paper baseline).
 * ``simulate_kiss_jax``     — KiSS two-pool policy.
-* ``sweep_kiss``            — BEYOND-PAPER: a single jit that vmaps the
-  simulator over a grid of (split fraction, policy, total memory) configs,
-  evaluating every configuration of the paper's Figs 7-16 concurrently.
+* ``sweep_kiss``            — a single jit that vmaps the simulator over a
+  grid of (split fraction, policy, total memory) configs.
 
 Metrics are accumulated per size class as an f32[2, 4] array with columns
 (hits, misses, drops, exec_time) and converted back to ``SimResult``.
@@ -19,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .compat import deprecated
 from .pool_jax import Event, PoolState, init_pool, pool_step
 from .types import (ClassMetrics, KissConfig, PoolConfig, Policy, SimResult,
                     Trace)
@@ -65,6 +68,7 @@ def _run_baseline(pool: PoolState, events: Event) -> jax.Array:
     return metrics
 
 
+@deprecated("repro.sim.simulate(Scenario.baseline(...))")
 def simulate_baseline_jax(total_mb: float, trace: Trace,
                           policy: Policy = Policy.LRU,
                           max_slots: int = 1024) -> SimResult:
@@ -101,6 +105,7 @@ def _run_kiss(small: PoolState, large: PoolState, events: Event) -> jax.Array:
     return metrics
 
 
+@deprecated("repro.sim.simulate(Scenario.kiss(...))")
 def simulate_kiss_jax(cfg: KissConfig, trace: Trace) -> SimResult:
     small = init_pool(cfg.small_pool)
     large = init_pool(cfg.large_pool)
@@ -112,6 +117,7 @@ def simulate_kiss_jax(cfg: KissConfig, trace: Trace) -> SimResult:
 # beyond-paper: vmapped configuration sweep
 # --------------------------------------------------------------------------
 
+@deprecated("repro.sim.sweep(trace, [Scenario.kiss(...), ...])")
 def sweep_kiss(trace: Trace, total_mbs, small_fracs, policies,
                max_slots: int = 1024) -> np.ndarray:
     """Evaluate every (total_mb, small_frac, policy) KiSS configuration of a
@@ -135,6 +141,7 @@ def sweep_kiss(trace: Trace, total_mbs, small_fracs, policies,
     return np.asarray(run(small_b, large_b, events))
 
 
+@deprecated("repro.sim.sweep(trace, [Scenario.baseline(...), ...])")
 def sweep_baseline(trace: Trace, total_mbs, policies,
                    max_slots: int = 1024) -> np.ndarray:
     """Baseline analogue of ``sweep_kiss``: f32[G, 2, 4] over the

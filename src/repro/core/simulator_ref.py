@@ -2,12 +2,18 @@
 
 ``simulate_baseline``  — one unified warm pool (the paper's baseline).
 ``simulate_kiss``      — the KiSS policy: two pools split small/large.
+
+Both are deprecated entrypoints: the scenario front door
+(``repro.sim.simulate(Scenario.baseline(...), engine="ref")``) supersedes
+them.  The implementations are retained unchanged — they are the
+single-node oracles the new engine is equivalence-tested against.
 """
 from __future__ import annotations
 
+from .compat import deprecated
 from .pool_ref import WarmPool
-from .types import (LARGE, SMALL, ClassMetrics, KissConfig, PoolConfig,
-                    SimResult, Trace)
+from .types import (LARGE, SMALL, ClassMetrics, KissConfig, Policy,
+                    PoolConfig, SimResult, Trace)
 
 
 def _run(pools, route, trace: Trace) -> SimResult:
@@ -22,15 +28,16 @@ def _run(pools, route, trace: Trace) -> SimResult:
     return SimResult(small=metrics[SMALL], large=metrics[LARGE])
 
 
+@deprecated("repro.sim.simulate(Scenario.baseline(...), engine='ref')")
 def simulate_baseline(total_mb: float, trace: Trace, policy=None,
                       max_slots: int = 1024) -> SimResult:
-    from .types import Policy
     cfg = PoolConfig(total_mb, policy if policy is not None else Policy.LRU,
                      max_slots)
     pool = WarmPool(cfg)
     return _run([pool], lambda cls: 0, trace)
 
 
+@deprecated("repro.sim.simulate(Scenario.kiss(...), engine='ref')")
 def simulate_kiss(cfg: KissConfig, trace: Trace) -> SimResult:
     small = WarmPool(cfg.small_pool)
     large = WarmPool(cfg.large_pool)

@@ -129,6 +129,13 @@ class ClassMetrics:
         n = self.total_accesses
         return 100.0 * self.hits / n if n else 0.0
 
+    @property
+    def serviceable_mean_s(self) -> float:
+        """Mean execution latency over the serviceable (non-dropped)
+        invocations, seconds."""
+        n = self.serviceable
+        return self.exec_time / n if n else 0.0
+
     def __add__(self, other: "ClassMetrics") -> "ClassMetrics":
         return ClassMetrics(self.hits + other.hits,
                             self.misses + other.misses,
@@ -146,6 +153,8 @@ class SimResult:
         return self.small + self.large
 
     def summary(self) -> dict:
+        """Stable-keyed metric dict; ``repro.sim.Result.summary()`` exposes
+        a superset of these keys, so benchmark consumers can read either."""
         o = self.overall
         return {
             "cold_start_pct": o.cold_start_pct,
@@ -157,4 +166,6 @@ class SimResult:
             "large_drop_pct": self.large.drop_pct,
             "serviceable": o.serviceable,
             "total": o.total_accesses,
+            "exec_time_s": o.exec_time,
+            "serviceable_mean_s": o.serviceable_mean_s,
         }

@@ -1,0 +1,50 @@
+"""repro.sim — one Scenario API, pluggable policy registries, one Result.
+
+The KiSS paper's value is workload-driven *policy comparison*; this
+package is the single front door for it::
+
+    from repro.sim import Scenario, simulate, sweep
+
+    trace = edge_trace(seed=0, duration_s=3600)
+    kiss = simulate(Scenario.kiss(4 * 1024.0), trace)        # jitted scan
+    base = simulate(Scenario.baseline(4 * 1024.0), trace)
+    print(kiss.summary()["cold_start_pct"],
+          base.summary()["cold_start_pct"])
+
+    results = sweep(trace, [Scenario.kiss(gb * 1024.0)       # one vmapped
+                            for gb in (2, 4, 8, 16)])        # program
+
+Routing and replacement policies are open registries
+(``repro.core.registry``): registering a pure function makes it available
+to the jitted JAX engine (a ``lax.switch`` branch built at trace time),
+the sequential numpy oracle (same function, numpy scalars), and vmapped
+sweeps (the code is data) — bit-identically, with no engine edits::
+
+    from repro.sim import register_routing
+
+    @register_routing("my_policy")
+    def my_policy(xp, ctx):            # ctx: RouteCtx
+        return xp.argmax(ctx.free)     # -> node index
+
+``policies`` registers ``cost_model`` (predicted end-to-end latency
+routing) exactly this way — from outside the engines.
+
+The historical entrypoints (``simulate_kiss_jax``, ``sweep_cluster``,
+...) still work as deprecation shims and are equivalence-tested against
+this API.
+"""
+from ..core.registry import (REPLACEMENT, ROUTING, PolicySpec, RouteCtx,
+                             SlotStats, register_replacement,
+                             register_routing, replacement_policies,
+                             routing_policies)
+from .api import simulate, sweep
+from .result import SUMMARY_KEYS, Result
+from .scenario import Scenario
+from . import policies  # registers cost_model et al.  # noqa: F401
+
+__all__ = [
+    "REPLACEMENT", "ROUTING", "PolicySpec", "Result", "RouteCtx",
+    "SUMMARY_KEYS", "Scenario", "SlotStats", "register_replacement",
+    "register_routing", "replacement_policies", "routing_policies",
+    "simulate", "sweep",
+]

@@ -1,0 +1,79 @@
+"""The front door: ``simulate(scenario, trace)`` and ``sweep``.
+
+One entrypoint for every configuration (single node, heterogeneous
+cluster, any registered policy) and both engines:
+
+* ``engine="jax"`` — the whole trace as one jitted ``lax.scan``
+  (``repro.cluster``); sweeps run vmapped, one device program per group
+  of like-shaped scenarios.
+* ``engine="ref"`` — the sequential numpy oracle, one event at a time
+  (``repro.core.continuum``); slower, bit-identical, the ground truth the
+  JAX engine is equivalence-tested against.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Sequence
+
+from ..cluster.engine import (_simulate_cluster_jax, _simulate_cluster_ref,
+                              _sweep_cluster, check_step_mode)
+from ..core.types import Trace
+from .result import Result
+from .scenario import Scenario
+
+_ENGINES = ("jax", "ref")
+
+
+def _check_engine(engine: str) -> None:
+    if engine not in _ENGINES:
+        raise ValueError(f"engine must be one of {_ENGINES}, got {engine!r}")
+
+
+def simulate(scenario: Scenario, trace: Trace, *, engine: str = "jax",
+             mode: str = "gather", rng_seed: int = 0) -> Result:
+    """Run one scenario over ``trace`` and return the unified
+    :class:`Result`.
+
+    ``mode`` selects the JAX scan-step formulation (``"gather"`` |
+    ``"vmap"``); it is ignored by the reference engine.  ``rng_seed``
+    fixes the cloud cold-start draws (common random numbers: both engines
+    and every scenario of a sweep price offloads identically).
+    """
+    _check_engine(engine)
+    check_step_mode(mode)
+    cfg = scenario.to_cluster_config()
+    if engine == "jax":
+        raw = _simulate_cluster_jax(cfg, trace, rng_seed, mode)
+    else:
+        raw = _simulate_cluster_ref(cfg, trace, rng_seed)
+    return Result(scenario=scenario, raw=raw)
+
+
+def sweep(trace: Trace, scenarios: Iterable[Scenario], *,
+          engine: str = "jax", mode: str = "gather",
+          rng_seed: int = 0) -> list[Result]:
+    """Evaluate many scenarios on one trace; results in input order.
+
+    Scenarios sharing stacked shapes (``n_nodes``, ``max_slots``) are
+    batched into ONE vmapped ``lax.scan`` program; mixed shapes simply
+    split into one program per group — callers no longer need to
+    hand-partition their grids the way ``sweep_cluster`` required.
+    """
+    _check_engine(engine)
+    check_step_mode(mode)
+    scenarios = list(scenarios)
+    if not scenarios:
+        raise ValueError("sweep: scenarios must be non-empty")
+    if engine == "ref":
+        return [simulate(s, trace, engine="ref", rng_seed=rng_seed)
+                for s in scenarios]
+    groups: dict[tuple[int, int], list[int]] = {}
+    for i, s in enumerate(scenarios):
+        groups.setdefault((s.n_nodes, s.max_slots), []).append(i)
+    results: list[Result | None] = [None] * len(scenarios)
+    for idxs in groups.values():
+        raws = _sweep_cluster(
+            trace, [scenarios[i].to_cluster_config() for i in idxs],
+            rng_seed=rng_seed, mode=mode)
+        for i, raw in zip(idxs, raws):
+            results[i] = Result(scenario=scenarios[i], raw=raw)
+    return results

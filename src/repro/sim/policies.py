@@ -1,0 +1,38 @@
+"""Policies that live *outside* the engines — proof the registry works.
+
+``cost_model`` is the ROADMAP's learned/cost-model routing item: instead
+of hashing or load-balancing, score every node by the end-to-end latency
+this request would be *predicted* to pay there, and send it to the
+cheapest.  It is registered through the same public decorator a
+third-party package would use; neither ``repro.core`` nor
+``repro.cluster`` knows it exists, yet it runs in the jitted ``lax.scan``
+engine, the numpy oracle, and vmapped sweeps (bit-identically — the
+prediction is pure float32 arithmetic over the routing context).
+"""
+from __future__ import annotations
+
+from ..core.registry import RouteCtx, register_routing
+
+
+@register_routing("cost_model")
+def cost_model(xp, ctx: RouteCtx):
+    """Predicted end-to-end latency per node; cheapest wins.
+
+    * A node whose target pool can host the container is predicted to pay
+      ``p_cold * cold_cost``, with the pool's occupancy (1 - free
+      fraction) as the cold-start-probability estimate: an empty pool has
+      room to keep containers warm, a full one will be evicting.
+    * A node that can *never* host it will drop to the cloud, which is
+      predicted to pay the round trip plus the cloud's own cold-start
+      probability times the cold cost.
+
+    Ties (e.g. several idle nodes predicting zero) resolve to the lowest
+    node index in both engines (``argmin`` takes the first minimum).
+    """
+    frac = ctx.free / xp.maximum(ctx.cap, xp.float32(1e-6))
+    cold_cost = ctx.cold - ctx.warm
+    p_cold = xp.float32(1.0) - frac
+    edge_pred = p_cold * cold_cost
+    cloud_pred = ctx.cloud_rtt_s + ctx.cloud_cold_prob * cold_cost
+    feasible = ctx.cap >= ctx.size - xp.float32(1e-9)
+    return xp.argmin(xp.where(feasible, edge_pred, cloud_pred))

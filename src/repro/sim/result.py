@@ -1,0 +1,120 @@
+"""The one result type every simulation returns.
+
+``Result`` subsumes the three historical result types — the single-node
+``SimResult`` (per-class view), the continuum ``ContinuumResult``
+(latency view), and the cluster ``ClusterResult`` (per-node view) — as
+methods over the same underlying per-event arrays, with a stable-keyed
+``summary()`` for benchmarks, regardless of which engine
+(``"jax"``/``"ref"``) or scenario shape produced it.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..cluster.metrics import ClusterResult
+from ..core.continuum import ContinuumResult
+from ..core.types import ClassMetrics, SimResult
+from .scenario import Scenario
+
+#: The keys ``summary()`` always returns, in order.  ``SimResult.summary``
+#: produces the first eleven; the rest are the cluster/latency extras.
+SUMMARY_KEYS = (
+    "cold_start_pct", "drop_pct", "hit_rate",
+    "small_cold_start_pct", "large_cold_start_pct",
+    "small_drop_pct", "large_drop_pct",
+    "serviceable", "total", "exec_time_s", "serviceable_mean_s",
+    "n_nodes", "offload_pct",
+    "latency_mean_s", "latency_p50_s", "latency_p95_s", "latency_p99_s",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Result:
+    """One simulation run: scenario + per-event outcomes, priced end to
+    end.
+
+    * ``node``/``outcome`` — i32[T] routed node and 0 hit / 1 miss /
+      2 drop->cloud, per invocation;
+    * ``latencies`` — f64[T] end-to-end seconds (drops pay the cloud
+      round trip);
+    * ``per_node`` — f64[N, 2, 4] (hits, misses, drops, edge exec time)
+      per (node, size class).
+    """
+
+    scenario: Scenario
+    raw: ClusterResult
+
+    # -- per-event arrays --------------------------------------------------
+    @property
+    def node(self) -> np.ndarray:
+        return self.raw.node
+
+    @property
+    def outcome(self) -> np.ndarray:
+        return self.raw.outcome
+
+    @property
+    def latencies(self) -> np.ndarray:
+        return self.raw.latencies
+
+    @property
+    def per_node(self) -> np.ndarray:
+        return self.raw.per_node
+
+    def __len__(self) -> int:
+        return len(self.raw.latencies)
+
+    # -- per-class view (subsumes SimResult) -------------------------------
+    def per_class(self) -> SimResult:
+        """Cluster-wide metrics split by size class."""
+        return self.raw.per_class
+
+    @property
+    def overall(self) -> ClassMetrics:
+        return self.raw.edge
+
+    # -- per-node view (subsumes ClusterResult) ----------------------------
+    def node_metrics(self, n: int) -> ClassMetrics:
+        return self.raw.node_metrics(n)
+
+    def node_table(self) -> list[dict]:
+        """Per-node utilization summary (events, hit/drop rates)."""
+        return self.raw.node_table()
+
+    @property
+    def cloud_offloads(self) -> int:
+        return self.raw.cloud_offloads
+
+    @property
+    def offload_pct(self) -> float:
+        return self.raw.offload_pct
+
+    # -- latency view (subsumes ContinuumResult) ---------------------------
+    def latency_stats(self) -> dict:
+        """End-to-end latency percentiles: mean/p50/p95/p99 seconds."""
+        return self.raw.latency_stats()
+
+    def as_continuum(self) -> ContinuumResult:
+        return self.raw.as_continuum()
+
+    def as_cluster(self) -> ClusterResult:
+        return self.raw
+
+    # -- the benchmark-stable summary --------------------------------------
+    def summary(self) -> dict:
+        """Every ``SimResult.summary()`` key plus the cluster/latency
+        extras, always in :data:`SUMMARY_KEYS` order."""
+        s = self.per_class().summary()
+        lat = self.latency_stats()
+        s.update({
+            "n_nodes": self.scenario.n_nodes,
+            "offload_pct": self.offload_pct,
+            "latency_mean_s": lat["mean_s"],
+            "latency_p50_s": lat["p50_s"],
+            "latency_p95_s": lat["p95_s"],
+            "latency_p99_s": lat["p99_s"],
+        })
+        assert tuple(s) == SUMMARY_KEYS
+        return s

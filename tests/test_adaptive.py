@@ -1,8 +1,9 @@
 """Beyond-paper adaptive partitioning tests."""
 import numpy as np
 
-from repro.core import KissConfig, Policy, simulate_kiss
+from repro.core import KissConfig, Policy
 from repro.core.adaptive import AdaptiveConfig, simulate_kiss_adaptive
+from repro.sim import Scenario, simulate
 
 from conftest import quantized_trace
 
@@ -30,7 +31,8 @@ def test_adaptive_not_worse_than_static_when_static_is_wrong(rng):
     """With inverted traffic (large dominates), adaptive should beat the
     static 80-20 on drops+misses."""
     trace = quantized_trace(rng, 800, large_frac=0.7)
-    static = simulate_kiss(KissConfig(total_mb=2048.0, max_slots=96), trace)
+    static = simulate(Scenario.kiss(2048.0, max_slots=96), trace,
+                      engine="ref").per_class()
     res, _ = simulate_kiss_adaptive(
         AdaptiveConfig(base=KissConfig(total_mb=2048.0, max_slots=96),
                        epoch_events=128), trace)

@@ -1,5 +1,11 @@
 """repro.cluster: JAX batched engine vs numpy oracle, conservation,
-heterogeneous routing, step modes, and the vmapped config sweep."""
+heterogeneous routing, step modes, and the vmapped config sweep.
+
+These tests exercise the historical cluster entrypoints on purpose (they
+are the reference implementations the ``repro.sim`` front door is
+equivalence-tested against in ``test_sim_api.py``), so their deprecation
+warnings are silenced module-wide.
+"""
 import numpy as np
 import pytest
 
@@ -9,6 +15,8 @@ from repro.cluster import (ClusterConfig, RoutingPolicy,
 from repro.core import Policy
 
 from conftest import quantized_trace
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
 
 ROUTINGS = list(RoutingPolicy)
 
@@ -169,13 +177,17 @@ def test_benchmark_het16_routing_claim_pinned():
     """Pin the exact benchmark configuration (paper trace + het16 cloud
     pricing): the claim continuum_bench prints — a non-sticky policy beats
     sticky-hash on p95 — must hold on the real trace, not just the
-    synthetic 4-node fixture above."""
+    synthetic 4-node fixture above.  The comparison now spans EVERY
+    registered routing policy, so the externally registered cost_model
+    must appear in it."""
     from benchmarks.continuum_bench import routing_comparison
     from benchmarks.common import paper_trace
+    from repro.sim import routing_policies
     byr = routing_comparison(paper_trace(duration_s=1800.0))
-    p95 = {r: res.latency_stats()["p95_s"] for r, res in byr.items()}
-    assert min(p95[r] for r in p95 if r != RoutingPolicy.STICKY) \
-        < p95[RoutingPolicy.STICKY]
+    assert set(routing_policies()) <= set(byr)
+    assert "cost_model" in byr
+    p95 = {name: res.latency_stats()["p95_s"] for name, res in byr.items()}
+    assert min(v for n, v in p95.items() if n != "sticky") < p95["sticky"]
 
 
 def test_unified_node_serves_both_classes_in_pool_zero():

@@ -1,8 +1,13 @@
-"""Edge-cloud continuum + chained-workload tests (beyond-paper layers)."""
+"""Edge-cloud continuum + chained-workload tests (beyond-paper layers).
+
+Deliberately exercises the deprecated entrypoints (the new front door is
+covered by test_sim_api.py), so the warnings are silenced module-wide."""
 import numpy as np
 import pytest
 
 from repro.core.continuum import ContinuumConfig, simulate_continuum
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
 from repro.workloads import edge_trace
 from repro.workloads.chains import ChainConfig, chained_trace
 

@@ -1,0 +1,378 @@
+"""repro.sim: the Scenario front door, policy registries, unified Result,
+and the deprecation shims.
+
+The heart of this file is the registry-driven equivalence test: for EVERY
+registered routing policy — built-ins, the externally registered
+``cost_model``, and the policies this file registers itself — the jitted
+JAX engine and the sequential numpy oracle must agree bit-for-bit, because
+both engines execute the same registered pure function.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.sim import (SUMMARY_KEYS, Result, RouteCtx, Scenario,
+                       register_replacement, register_routing,
+                       replacement_policies, routing_policies, simulate,
+                       sweep)
+
+from conftest import quantized_trace
+
+# ---------------------------------------------------------------------------
+# policies registered OUTSIDE the engines, before collection, so the
+# parametrized equivalence sweep below exercises them too.
+# ---------------------------------------------------------------------------
+
+
+@register_routing("test_second_hash", needs_free=False)
+def _second_hash(xp, ctx):
+    """Route by the second (Knuth) hash only — exercises ctx.h2."""
+    return ctx.h2
+
+
+@register_routing("test_round_robin_cls")
+def _cls_split(xp, ctx):
+    """Large containers to the emptiest node, small ones sticky —
+    exercises cls/free/cap together."""
+    frac = ctx.free / xp.maximum(ctx.cap, xp.float32(1e-6))
+    return xp.where(ctx.cls == 1, xp.argmax(frac).astype(xp.int32), ctx.h1)
+
+
+@register_replacement("test_biggest_first")
+def _biggest_first(xp, s):
+    """Evict the largest idle container first (priority = -size)."""
+    return -s.size
+
+
+def het4(routing="sticky", replacement="lru"):
+    return Scenario.cluster(
+        (1024.0, 1024.0, 2048.0, 4096.0), small_frac=(0.8, 0.8, 0.8, 0.5),
+        unified=(False, True, False, False), routing=routing,
+        replacement=replacement, max_slots=64)
+
+
+# ---------------------------------------------------------------------------
+# Scenario construction + validation
+# ---------------------------------------------------------------------------
+
+def test_scenario_constructors_normalize():
+    k = Scenario.kiss(2048.0, small_frac=0.7)
+    assert k.node_mb == (2048.0,) and k.unified == (False,)
+    assert k.small_frac == (0.7,) and k.n_nodes == 1
+    b = Scenario.baseline(1024.0)
+    assert b.unified == (True,)
+    c = Scenario.cluster((1024.0, 2048.0), routing="size_aware")
+    assert c.small_frac == (0.8, 0.8) and c.routing == "size_aware"
+    # enum members and codes canonicalize to names
+    from repro.core import Policy, RoutingPolicy
+    s = Scenario.kiss(512.0, replacement=Policy.GREEDY_DUAL)
+    assert s.replacement == "greedy_dual"
+    assert Scenario.cluster((512.0,),
+                            routing=RoutingPolicy.POWER_OF_TWO
+                            ).routing == "power_of_two"
+    # scenarios are frozen and hashable
+    assert hash(k) != hash(b)
+    with pytest.raises(Exception):
+        k.max_slots = 7
+
+
+def test_scenario_rejects_bad_specs():
+    with pytest.raises(KeyError):
+        Scenario.kiss(1024.0, replacement="no_such_policy")
+    with pytest.raises(KeyError):
+        Scenario.cluster((1024.0,), routing="no_such_routing")
+    with pytest.raises(ValueError):
+        Scenario.kiss(1024.0, small_frac=1.5)
+    with pytest.raises(ValueError):
+        Scenario.cluster(())
+    with pytest.raises(ValueError):
+        Scenario.cluster((1024.0, 2048.0), small_frac=(0.8, 0.8, 0.8))
+    with pytest.raises(ValueError):
+        Scenario.kiss(-4.0)
+
+
+def test_scenario_round_trips_cluster_config():
+    sc = het4(routing="cost_model", replacement="freq")
+    cfg = sc.to_cluster_config()
+    assert Scenario.from_cluster(cfg) == sc
+
+
+def test_engine_and_mode_validation():
+    tr = quantized_trace(np.random.default_rng(0), 20)
+    with pytest.raises(ValueError, match="engine"):
+        simulate(Scenario.kiss(512.0), tr, engine="numpy")
+    with pytest.raises(ValueError, match="mode"):
+        simulate(Scenario.kiss(512.0), tr, mode="scatter")
+    with pytest.raises(ValueError, match="mode"):
+        sweep(tr, [Scenario.kiss(512.0)], mode="scatter")
+    with pytest.raises(ValueError):
+        sweep(tr, [])
+
+
+# ---------------------------------------------------------------------------
+# the tentpole acceptance: registry-driven engine equivalence, EVERY policy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("routing", routing_policies())
+def test_every_registered_routing_jax_matches_oracle(routing):
+    """Exact per-event equivalence (routed node AND outcome) between the
+    jitted lax.scan engine and the numpy oracle, for every policy in the
+    registry — including cost_model and this file's test policies."""
+    for seed in (0, 1):
+        tr = quantized_trace(np.random.default_rng(seed), 400)
+        sc = het4(routing=routing)
+        j = simulate(sc, tr, engine="jax")
+        r = simulate(sc, tr, engine="ref")
+        assert (j.node == r.node).all(), routing
+        assert (j.outcome == r.outcome).all(), routing
+        assert (j.per_node == r.per_node).all()
+        assert np.allclose(j.latencies, r.latencies)
+
+
+@pytest.mark.parametrize("replacement", replacement_policies())
+def test_every_registered_replacement_jax_matches_oracle(replacement):
+    """Same bit-equivalence across engines for every replacement policy,
+    including the custom size-ranked one registered above."""
+    tr = quantized_trace(np.random.default_rng(3), 400)
+    sc = Scenario.kiss(1024.0, replacement=replacement, max_slots=96)
+    j = simulate(sc, tr, engine="jax")
+    r = simulate(sc, tr, engine="ref")
+    assert (j.outcome == r.outcome).all(), replacement
+    assert j.overall.drops > 0   # the pool actually contends at 1 GB
+
+
+def test_cost_model_is_registered_from_outside_the_engines():
+    """The acceptance-criterion policy: registered via the public
+    decorator from repro.sim.policies — neither repro.core nor
+    repro.cluster defines or exports it."""
+    import repro.cluster
+    import repro.core
+    import repro.sim.policies as pol
+    assert "cost_model" in routing_policies()
+    assert pol.cost_model.__module__ == "repro.sim.policies"
+    assert not hasattr(repro.core, "cost_model")
+    assert not hasattr(repro.cluster, "cost_model")
+    # and it is not one of the frozen enum codes
+    from repro.core import ROUTING, RoutingPolicy
+    assert ROUTING.resolve("cost_model") >= len(RoutingPolicy)
+
+
+def test_cost_model_prefers_feasible_nodes():
+    """With an expensive cloud, large containers must be routed to the one
+    node that can host them (every other node's prediction is the cloud
+    round trip, which dominates any edge cold-start estimate here)."""
+    rng = np.random.default_rng(11)
+    tr = quantized_trace(rng, 500)
+    sc = Scenario.cluster((1024.0, 1024.0, 1024.0, 4096.0),
+                          small_frac=(0.8, 0.8, 0.8, 0.5),
+                          routing="cost_model", max_slots=64,
+                          cloud_rtt_s=50.0)
+    res = simulate(sc, tr)
+    cls = np.asarray(tr.cls)
+    # only node 3's large pool (2048 MB) fits 300-400 MB containers
+    assert (res.node[cls == 1] == 3).all()
+    sticky = simulate(
+        dataclasses_replace_routing(sc, "sticky"), tr)
+    assert res.overall.drops < sticky.overall.drops
+
+
+def dataclasses_replace_routing(sc: Scenario, routing: str) -> Scenario:
+    import dataclasses
+    return dataclasses.replace(sc, routing=routing)
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError, match="already registered"):
+        register_routing("sticky")(lambda xp, ctx: ctx.h1)
+    with pytest.raises(ValueError, match="already registered"):
+        register_replacement("lru")(lambda xp, s: s.last_use)
+
+
+def test_registry_resolution_is_strict():
+    from repro.core import ROUTING
+    assert ROUTING.resolve("sticky") == 0 == ROUTING.resolve(0)
+    with pytest.raises(KeyError):
+        ROUTING.resolve(1.9)       # must not truncate to least_loaded
+    with pytest.raises(KeyError):
+        ROUTING.resolve(None)
+    with pytest.raises(KeyError):
+        ROUTING.resolve(10_000)
+    assert "sticky" in ROUTING and None not in ROUTING
+    assert 1.9 not in ROUTING and 10_000 not in ROUTING
+
+
+# ---------------------------------------------------------------------------
+# acceptance: the new front door reproduces the legacy entrypoints exactly
+# ---------------------------------------------------------------------------
+
+def _counts(summary):
+    return {k: v for k, v in summary.items()
+            if k not in ("exec_time_s", "serviceable_mean_s")}
+
+
+@pytest.mark.filterwarnings("ignore::DeprecationWarning")
+def test_simulate_reproduces_legacy_single_node():
+    """Scenario.kiss / Scenario.baseline through BOTH engines reproduce
+    the four historical single-node simulators (counts exactly; exec time
+    to accumulation-order tolerance)."""
+    from repro.core import (KissConfig, Policy, simulate_baseline,
+                            simulate_baseline_jax, simulate_kiss,
+                            simulate_kiss_jax)
+    for seed, policy in ((0, Policy.LRU), (1, Policy.GREEDY_DUAL)):
+        tr = quantized_trace(np.random.default_rng(seed), 400)
+        cfg = KissConfig(total_mb=2048.0, policy=policy, max_slots=96)
+        legacy = {"jax": simulate_kiss_jax(cfg, tr),
+                  "ref": simulate_kiss(cfg, tr)}
+        sc = Scenario.kiss(2048.0, replacement=policy, max_slots=96)
+        for engine in ("jax", "ref"):
+            got = simulate(sc, tr, engine=engine).per_class()
+            assert _counts(got.summary()) == _counts(
+                legacy[engine].summary()), engine
+            assert got.summary()["exec_time_s"] == pytest.approx(
+                legacy[engine].summary()["exec_time_s"], rel=1e-6)
+        legacy_b = {"jax": simulate_baseline_jax(1024.0, tr, policy, 96),
+                    "ref": simulate_baseline(1024.0, tr, policy, 96)}
+        scb = Scenario.baseline(1024.0, replacement=policy, max_slots=96)
+        for engine in ("jax", "ref"):
+            got = simulate(scb, tr, engine=engine).per_class()
+            assert _counts(got.summary()) == _counts(
+                legacy_b[engine].summary()), engine
+
+
+@pytest.mark.filterwarnings("ignore::DeprecationWarning")
+def test_simulate_reproduces_legacy_cluster_exactly():
+    from repro.cluster import simulate_cluster_jax, simulate_cluster_ref
+    tr = quantized_trace(np.random.default_rng(5), 400)
+    sc = het4(routing="power_of_two")
+    cfg = sc.to_cluster_config()
+    legacy_j = simulate_cluster_jax(cfg, tr)
+    legacy_r = simulate_cluster_ref(cfg, tr)
+    new_j = simulate(sc, tr, engine="jax")
+    new_r = simulate(sc, tr, engine="ref")
+    for legacy, new in ((legacy_j, new_j), (legacy_r, new_r)):
+        assert (legacy.node == new.node).all()
+        assert (legacy.outcome == new.outcome).all()
+        assert (legacy.per_node == new.per_node).all()
+        assert (legacy.latencies == new.latencies).all()
+
+
+@pytest.mark.filterwarnings("ignore::DeprecationWarning")
+def test_sweep_reproduces_legacy_sweep_cluster_and_buckets_shapes():
+    from repro.cluster import sweep_cluster
+    tr = quantized_trace(np.random.default_rng(9), 300)
+    same_shape = [het4(), het4(routing="size_aware")]
+    legacy = sweep_cluster(tr, [s.to_cluster_config() for s in same_shape])
+    # mixed n_nodes/max_slots in ONE sweep call (legacy raises on this)
+    mixed = same_shape + [Scenario.kiss(2048.0, max_slots=96),
+                          Scenario.cluster((2048.0,) * 2, max_slots=32)]
+    got = sweep(tr, mixed)
+    for leg, new in zip(legacy, got[:2]):
+        assert (leg.outcome == new.outcome).all()
+        assert (leg.node == new.node).all()
+    for sc, new in zip(mixed, got):
+        one = simulate(sc, tr)
+        assert (one.outcome == new.outcome).all()
+    with pytest.raises(ValueError):
+        sweep_cluster(tr, [s.to_cluster_config() for s in mixed])
+
+
+def test_sweep_ref_engine_matches_jax():
+    tr = quantized_trace(np.random.default_rng(2), 250)
+    scs = [het4(), Scenario.kiss(1024.0, max_slots=64)]
+    j = sweep(tr, scs, engine="jax")
+    r = sweep(tr, scs, engine="ref")
+    for a, b in zip(j, r):
+        assert (a.outcome == b.outcome).all()
+
+
+# ---------------------------------------------------------------------------
+# the unified Result
+# ---------------------------------------------------------------------------
+
+def test_result_summary_stable_keys_and_views():
+    tr = quantized_trace(np.random.default_rng(1), 300)
+    for sc in (Scenario.kiss(1024.0, max_slots=64), het4()):
+        res = simulate(sc, tr)
+        s = res.summary()
+        assert tuple(s) == SUMMARY_KEYS
+        assert s["total"] == len(tr) == len(res)
+        assert s["n_nodes"] == sc.n_nodes
+        # per-class view sums to the trace
+        pc = res.per_class()
+        assert pc.overall.total_accesses == len(tr)
+        # per-node view is conserved and matches the routed events
+        assert res.per_node[:, :, :3].sum() == len(tr)
+        for n in range(sc.n_nodes):
+            assert res.node_metrics(n).total_accesses == \
+                (res.node == n).sum()
+        assert len(res.node_table()) == sc.n_nodes
+        # latency view: drops pay at least the cloud RTT
+        lat = res.latency_stats()
+        assert set(lat) == {"mean_s", "p50_s", "p95_s", "p99_s"}
+        assert s["offload_pct"] == pytest.approx(
+            100.0 * (res.outcome == 2).sum() / len(tr))
+        # legacy projections still available
+        assert res.as_cluster().cfg.n_nodes == sc.n_nodes
+        assert res.as_continuum().cloud_offloads == res.cloud_offloads
+
+
+def test_summary_exec_keys_match_legacy_simresult():
+    """Satellite: SimResult.summary() and Result.summary() expose the same
+    per-class keys (the Result adds only the cluster/latency extras)."""
+    tr = quantized_trace(np.random.default_rng(4), 200)
+    res = simulate(Scenario.kiss(1024.0, max_slots=64), tr)
+    legacy_keys = set(res.per_class().summary())
+    assert {"exec_time_s", "serviceable_mean_s"} <= legacy_keys
+    assert legacy_keys <= set(SUMMARY_KEYS)
+    o = res.overall
+    assert res.summary()["serviceable_mean_s"] == pytest.approx(
+        o.exec_time / max(o.serviceable, 1))
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims: forward AND warn (satellite)
+# ---------------------------------------------------------------------------
+
+def _shim_calls():
+    from repro import cluster, core
+    from repro.core import KissConfig
+    from repro.core.continuum import ContinuumConfig
+    tr = quantized_trace(np.random.default_rng(0), 60)
+    kcfg = KissConfig(total_mb=1024.0, max_slots=32)
+    ccfg = het4().to_cluster_config()
+    return [
+        (core.simulate_baseline, (1024.0, tr, None, 32)),
+        (core.simulate_kiss, (kcfg, tr)),
+        (core.simulate_baseline_jax, (1024.0, tr)),
+        (core.simulate_kiss_jax, (kcfg, tr)),
+        (core.sweep_baseline, (tr, [1024.0], [0])),
+        (core.sweep_kiss, (tr, [1024.0], [0.8], [0])),
+        (core.simulate_continuum, (ContinuumConfig(n_nodes=2), tr)),
+        (cluster.simulate_cluster_jax, (ccfg, tr)),
+        (cluster.simulate_cluster_ref, (ccfg, tr)),
+        (cluster.sweep_cluster, (tr, [ccfg])),
+    ]
+
+
+@pytest.mark.parametrize("fn,args", _shim_calls(),
+                         ids=lambda v: getattr(v, "__name__", ""))
+def test_deprecated_entrypoints_warn_and_forward(fn, args):
+    with pytest.warns(DeprecationWarning, match=fn.__name__):
+        warned = fn(*args)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        silent = fn(*args)
+    # forwarded result is the real thing (same type, same numbers)
+    assert type(warned) is type(silent)
+    for a, b in zip(warned if isinstance(warned, list) else [warned],
+                    silent if isinstance(silent, list) else [silent]):
+        if hasattr(a, "summary"):          # SimResult
+            assert a.summary() == b.summary()
+        elif hasattr(a, "outcome"):        # ClusterResult
+            assert (a.outcome == b.outcome).all()
+        elif hasattr(a, "latencies"):      # ContinuumResult
+            assert (a.latencies == b.latencies).all()
+        else:                              # raw metrics grid
+            assert (np.asarray(a) == np.asarray(b)).all()
+    assert fn.__deprecated__.startswith("repro.sim")

@@ -16,6 +16,10 @@ from repro.core.types import ClassMetrics, PoolConfig
 
 from conftest import quantized_trace
 
+# these tests deliberately drive the deprecated single-node entrypoints:
+# they are the oracle-equivalence reference for repro.sim (test_sim_api)
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
 POLICIES = [Policy.LRU, Policy.GREEDY_DUAL, Policy.FREQ]
 
 

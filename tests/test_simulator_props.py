@@ -8,6 +8,8 @@ equivalence tests in ``test_simulator.py`` still provide coverage.
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 

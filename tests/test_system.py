@@ -7,8 +7,8 @@ validation lives in benchmarks/)."""
 import numpy as np
 import pytest
 
-from repro.core import (KissConfig, Policy, simulate_baseline_jax,
-                        simulate_kiss_jax)
+from repro.core import KissConfig, Policy
+from repro.sim import Scenario, simulate, sweep
 from repro.workloads import edge_trace
 
 
@@ -18,11 +18,11 @@ def trace():
 
 
 def _pair(trace, total_mb, policy=Policy.LRU, max_slots=512):
-    base = simulate_baseline_jax(total_mb, trace, policy, max_slots)
-    kiss = simulate_kiss_jax(
-        KissConfig(total_mb=total_mb, policy=policy, max_slots=max_slots),
-        trace)
-    return base, kiss
+    base, kiss = sweep(trace, [
+        Scenario.baseline(total_mb, replacement=policy,
+                          max_slots=max_slots),
+        Scenario.kiss(total_mb, replacement=policy, max_slots=max_slots)])
+    return base.per_class(), kiss.per_class()
 
 
 def test_kiss_reduces_cold_starts_constrained(trace):
@@ -44,8 +44,7 @@ def test_adaptive_recovers_midband_drop_regression(trace):
     partitioner must recover most of it while keeping the cold-start win."""
     from repro.core.adaptive import AdaptiveConfig, simulate_kiss_adaptive
     total = 6 * 1024.0
-    base = simulate_baseline_jax(total, trace, Policy.LRU, 512)
-    kiss = simulate_kiss_jax(KissConfig(total_mb=total, max_slots=512), trace)
+    base, kiss = _pair(trace, total)
     ada, _ = simulate_kiss_adaptive(
         AdaptiveConfig(base=KissConfig(total_mb=total, max_slots=512),
                        epoch_events=512), trace)
