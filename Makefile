@@ -1,7 +1,9 @@
 # Convenience targets.  `make check` is the fast pre-commit signal;
-# `make test` is the tier-1 suite the driver runs.
+# `make test` is the tier-1 suite the driver runs.  `make bench` runs the
+# benchmark suites AND gates the wall-clock trajectory against the pinned
+# snapshots in benchmarks/baselines/ (re-pin with `make bench-baseline`).
 
-.PHONY: check test bench figures
+.PHONY: check test bench bench-baseline figures
 
 check:
 	bash scripts/check.sh
@@ -11,6 +13,10 @@ test:
 
 bench:
 	PYTHONPATH=src python -m benchmarks.run
+	PYTHONPATH=src python -m benchmarks.compare
+
+bench-baseline:
+	PYTHONPATH=src python -m benchmarks.compare --update
 
 figures:
 	PYTHONPATH=src python -m benchmarks.figures

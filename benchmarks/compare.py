@@ -1,0 +1,107 @@
+"""Perf-trajectory gate: diff fresh ``results/BENCH_<suite>.json`` files
+against the committed snapshots in ``benchmarks/baselines/`` and fail
+loudly on wall-clock regressions.
+
+  PYTHONPATH=src python -m benchmarks.compare             # gate (make bench)
+  PYTHONPATH=src python -m benchmarks.compare --update    # re-pin baselines
+
+A suite regresses when its fresh wall-clock exceeds the baseline by more
+than ``THRESHOLD`` (20%) *and* by more than ``ABS_SLACK_S`` (the absolute
+floor keeps sub-second suites from tripping the gate on scheduler noise).
+Suites present only on one side are reported but never fail the gate —
+adding a benchmark must not require touching the baselines in the same
+commit.  Exit code 1 on any regression.
+
+Wall-clock is machine-specific: the committed snapshot tracks the
+trajectory of ONE reference machine, so on new hardware re-pin once with
+``make bench-baseline`` before trusting the gate.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import sys
+
+THRESHOLD = 0.20      # relative wall-clock regression that fails the gate
+ABS_SLACK_S = 1.0     # ignore regressions smaller than this in absolute s
+
+BASELINE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "baselines")
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results")
+
+
+def _load(dirname: str) -> dict[str, dict]:
+    docs = {}
+    if not os.path.isdir(dirname):
+        return docs
+    for name in sorted(os.listdir(dirname)):
+        if name.startswith("BENCH_") and name.endswith(".json"):
+            with open(os.path.join(dirname, name)) as f:
+                docs[name] = json.load(f)
+    return docs
+
+
+def update() -> None:
+    fresh = _load(RESULTS_DIR)
+    if not fresh:
+        sys.exit(f"no results/BENCH_*.json under {RESULTS_DIR}; "
+                 f"run `make bench` first")
+    os.makedirs(BASELINE_DIR, exist_ok=True)
+    for name in fresh:
+        shutil.copy(os.path.join(RESULTS_DIR, name),
+                    os.path.join(BASELINE_DIR, name))
+        print(f"pinned {name}")
+
+
+def compare() -> int:
+    base = _load(BASELINE_DIR)
+    fresh = _load(RESULTS_DIR)
+    if not base:
+        print(f"no baselines under {BASELINE_DIR}; run "
+              f"`python -m benchmarks.compare --update` to pin them")
+        return 0
+    regressions = []
+    print(f"{'suite':42s} {'base_s':>8s} {'fresh_s':>8s} {'delta':>8s}")
+    for name, bdoc in base.items():
+        fdoc = fresh.get(name)
+        if fdoc is None:
+            print(f"{name:42s} {bdoc.get('wall_s', 0):8.2f} "
+                  f"{'missing':>8s} {'-':>8s}")
+            continue
+        if "error" in fdoc:
+            regressions.append((name, f"suite errored: {fdoc['error']}"))
+            continue
+        bw, fw = bdoc.get("wall_s"), fdoc.get("wall_s")
+        if not bw or not fw:
+            continue
+        rel = (fw - bw) / bw
+        flag = ""
+        if rel > THRESHOLD and fw - bw > ABS_SLACK_S:
+            flag = "  << REGRESSION"
+            regressions.append(
+                (name, f"wall-clock {bw:.2f}s -> {fw:.2f}s (+{rel:.0%})"))
+        print(f"{name:42s} {bw:8.2f} {fw:8.2f} {rel:+7.0%} {flag}")
+    for name in sorted(set(fresh) - set(base)):
+        print(f"{name:42s} {'new':>8s} {fresh[name].get('wall_s', 0):8.2f} "
+              f"{'-':>8s}  (no baseline; --update to pin)")
+    if regressions:
+        print(f"\nFAIL: {len(regressions)} wall-clock regression(s) "
+              f"beyond +{THRESHOLD:.0%} / {ABS_SLACK_S}s:")
+        for name, why in regressions:
+            print(f"  {name}: {why}")
+        return 1
+    print("\nperf trajectory OK")
+    return 0
+
+
+def main() -> None:
+    if "--update" in sys.argv[1:]:
+        update()
+        return
+    sys.exit(compare())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,11 +1,13 @@
 """Paper Fig 9: drop percentage vs memory (KiSS 80-20 vs baseline), plus
-the beyond-paper adaptive partitioner on the same sweep."""
+the beyond-paper autoscaled scenario on the same sweep (the adaptive
+partitioner as a first-class `Scenario` mode)."""
 from __future__ import annotations
 
-from repro.core import KissConfig, Policy
-from repro.core.adaptive import AdaptiveConfig, simulate_kiss_adaptive
+from repro.sim import Autoscale, Scenario, simulate
 
 from .common import GB, MEMORY_GB, csv_line, pair, paper_trace, timed
+
+ASC = Autoscale(epoch_events=512)
 
 
 def run() -> list[str]:
@@ -14,14 +16,15 @@ def run() -> list[str]:
     best_red = 0.0
     for gb in MEMORY_GB:
         (base, kiss), dt = timed(pair, tr, gb)
-        ada, _ = simulate_kiss_adaptive(
-            AdaptiveConfig(base=KissConfig(total_mb=gb * GB, max_slots=1024),
-                           epoch_events=512), tr)
+        ada = simulate(
+            Scenario.kiss(gb * GB, max_slots=1024, autoscale=ASC), tr)
+        asum = ada.summary()
         us = dt * 1e6 / 2
         b, k, a = (base.overall.drop_pct, kiss.overall.drop_pct,
-                   ada.overall.drop_pct)
+                   asum["drop_pct"])
         out.append(csv_line(f"fig9_drop_pct_{gb}gb", us,
-                            f"base={b:.1f} kiss={k:.1f} adaptive={a:.1f}"))
+                            f"base={b:.1f} kiss={k:.1f} adaptive={a:.1f} "
+                            f"final_frac={asum['frac_final_mean']:.2f}"))
         if b > 5.0 and k < b:
             best_red = max(best_red, (1 - k / b) * 100)
     out.append(csv_line("fig9_best_drop_reduction_pct", us,

@@ -11,9 +11,7 @@ matplotlib.use("Agg")
 import matplotlib.pyplot as plt
 import numpy as np
 
-from repro.core import KissConfig
-from repro.core.adaptive import AdaptiveConfig, simulate_kiss_adaptive
-from repro.sim import Scenario, sweep
+from repro.sim import Autoscale, Scenario, sweep
 
 from .common import GB, MEMORY_GB, SPLITS, paper_trace
 
@@ -27,7 +25,12 @@ def main():
                  for gb in MEMORY_GB for f in SPLITS]
     base_row = [Scenario.baseline(gb * GB, max_slots=1024)
                 for gb in MEMORY_GB]
-    results = sweep(tr, kiss_grid + base_row)
+    # the autoscaled lanes ride the same sweep call: they bucket into
+    # their own vmapped program keyed on the epoch shape
+    ada_row = [Scenario.kiss(gb * GB, max_slots=1024,
+                             autoscale=Autoscale(epoch_events=512))
+               for gb in MEMORY_GB]
+    results = sweep(tr, kiss_grid + base_row + ada_row)
     base, kiss80, ada = [], {f: [] for f in SPLITS}, []
     base_drop, kiss_drop, ada_drop = [], [], []
     for mi, gb in enumerate(MEMORY_GB):
@@ -39,12 +42,9 @@ def main():
             kiss80[f].append(r["cold_start_pct"])
             if f == 0.8:
                 kiss_drop.append(r["drop_pct"])
-        a, _ = simulate_kiss_adaptive(
-            AdaptiveConfig(base=KissConfig(total_mb=gb * GB,
-                                           max_slots=1024),
-                           epoch_events=512), tr)
-        ada.append(a.overall.cold_start_pct)
-        ada_drop.append(a.overall.drop_pct)
+        a = results[len(kiss_grid) + len(base_row) + mi].summary()
+        ada.append(a["cold_start_pct"])
+        ada_drop.append(a["drop_pct"])
 
     # Fig 7: cold start across split configurations
     plt.figure(figsize=(7, 4.5))

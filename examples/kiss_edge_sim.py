@@ -1,14 +1,14 @@
-"""Full paper-style evaluation sweep + the beyond-paper adaptive partitioner.
+"""Full paper-style evaluation sweep + the autoscaled-scenario mode.
 
-Reproduces the Fig 7/8/9 sweeps (memory 2-24 GB x splits x baseline) using
-the vmapped simulator, then shows adaptive partitioning recovering the
-static split's mid-band drop regression (paper §7.3 future work).
+Reproduces the Fig 7/8/9 sweeps (memory 2-16 GB x splits x baseline) using
+the vmapped simulator, then shows per-epoch adaptive re-splitting
+(`Scenario(..., autoscale=Autoscale(...))`) recovering the static split's
+mid-band drop regression (paper §7.3 future work) — all through ONE
+`sweep` call: the autoscaled lanes bucket into their own vmapped program.
 
   PYTHONPATH=src python examples/kiss_edge_sim.py
 """
-from repro.core import KissConfig
-from repro.core.adaptive import AdaptiveConfig, simulate_kiss_adaptive
-from repro.sim import Scenario, sweep
+from repro.sim import Autoscale, Scenario, sweep
 from repro.workloads import edge_trace
 
 GB = 1024.0
@@ -21,17 +21,16 @@ def main():
     kiss_grid = [Scenario.kiss(m * GB, small_frac=f) for m in MEMS
                  for f in SPLITS]
     base_row = [Scenario.baseline(m * GB) for m in MEMS]
-    print(f"{len(trace)} invocations; sweeping "
-          f"{len(kiss_grid) + len(base_row)} configs in ONE vmapped jit...")
-    results = sweep(trace, kiss_grid + base_row)
+    ada_row = [Scenario.kiss(m * GB, autoscale=Autoscale(epoch_events=512))
+               for m in MEMS]
+    grid = kiss_grid + base_row + ada_row
+    print(f"{len(trace)} invocations; sweeping {len(grid)} configs "
+          f"(incl. {len(ada_row)} autoscaled) in vmapped jits...")
+    results = sweep(trace, grid)
     kiss_res = {(m, f): results[mi * len(SPLITS) + si]
                 for mi, m in enumerate(MEMS) for si, f in enumerate(SPLITS)}
     base_res = dict(zip(MEMS, results[len(kiss_grid):]))
-    adaptive = {}
-    for m in MEMS:
-        adaptive[m] = simulate_kiss_adaptive(
-            AdaptiveConfig(base=KissConfig(total_mb=m * GB, max_slots=1024),
-                           epoch_events=512), trace)
+    ada_res = dict(zip(MEMS, results[len(kiss_grid) + len(base_row):]))
 
     hdr = "mem   baseline | " + " | ".join(
         f"{int(f*100)}-{int(100-f*100)}" for f in SPLITS) + " | adaptive"
@@ -42,15 +41,16 @@ def main():
         print(f"{m:3d}GB  "
               f"{base_res[m].summary()['cold_start_pct']:7.1f} | "
               + " | ".join(cells)
-              + f" | {adaptive[m][0].overall.cold_start_pct:7.1f}")
+              + f" | {ada_res[m].summary()['cold_start_pct']:7.1f}")
 
     print("\ndrop %")
     for m in MEMS:
-        ada, fr = adaptive[m]
+        ada = ada_res[m].summary()
         print(f"{m:3d}GB  base={base_res[m].summary()['drop_pct']:5.1f}  "
               f"kiss80-20={kiss_res[m, 0.8].summary()['drop_pct']:5.1f}  "
-              f"adaptive={ada.overall.drop_pct:5.1f} "
-              f"(final split {fr[-1]:.2f})")
+              f"adaptive={ada['drop_pct']:5.1f} "
+              f"(final split {ada['frac_final_mean']:.2f} over "
+              f"{ada['n_epochs']} epochs)")
 
 
 if __name__ == "__main__":

@@ -8,16 +8,30 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 # the public API surface must import (and the registries must hold the
-# four built-in routings plus cost_model) before anything else runs
+# four built-in routings plus cost_model) before anything else runs; the
+# autoscale smoke pins the Scenario knob end to end on a tiny trace
 python - <<'EOF'
-from repro.sim import Scenario, simulate, sweep, routing_policies
+import numpy as np
+from repro.sim import Autoscale, Scenario, simulate, sweep, routing_policies
+from repro.core.types import Trace
 assert {"sticky", "least_loaded", "size_aware", "power_of_two",
         "cost_model"} <= set(routing_policies()), routing_policies()
+n = 96
+tr = Trace(t=np.arange(n, dtype=np.float32),
+           func_id=np.arange(n, dtype=np.int32) % 7,
+           size_mb=np.full(n, 64, np.float32),
+           cls=(np.arange(n, dtype=np.int32) % 3 == 0).astype(np.int32),
+           warm_dur=np.ones(n, np.float32), cold_dur=np.full(n, 3, np.float32))
+res = simulate(Scenario.kiss(256.0, max_slots=16,
+                             autoscale=Autoscale(epoch_events=32)), tr)
+assert res.fracs.shape == (3, 1), res.fracs.shape
+assert res.summary()["n_epochs"] == 3
 EOF
 exec python -m pytest -q -m "not slow" \
     tests/test_simulator.py \
     tests/test_sim_api.py \
     tests/test_cluster.py \
+    tests/test_autoscale.py \
     tests/test_continuum.py \
     tests/test_workloads.py \
     "$@"

@@ -28,6 +28,14 @@ and against the numpy oracle in ``core/continuum.py``):
   event and a select mask keeps only the routed pool's new state: the
   fully batched formulation, O(N * slots) per event, useful as a
   cross-check and on accelerators where the batched sort amortizes.
+
+Autoscaled scenarios (``Scenario(..., autoscale=Autoscale(...))``) run the
+same per-event step inside an outer scan over fixed-length epochs
+(``_run_autoscale_impl``): each full epoch ends with every KiSS node
+re-splitting its small/large pools from the per-class pressure observed on
+that node (``pool_resize`` vmapped over the stacked pool axis).  The trace
+is padded to a whole number of epochs with guaranteed-drop no-op events
+that are masked out of the pressure signal and sliced off the outputs.
 """
 from __future__ import annotations
 
@@ -39,11 +47,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.compat import deprecated
-from ..core.continuum import (ClusterConfig, cloud_cold_draws,
+from ..core.continuum import (Autoscale, ClusterConfig, cloud_cold_draws,
                               cluster_outcomes_ref, route_hashes)
-from ..core.pool_jax import Event, PoolState, init_pool, pool_step
+from ..core.pool_jax import (Event, PoolState, init_pool, pool_resize,
+                             pool_step)
 from ..core.registry import ROUTING, RouteCtx
-from ..core.types import PoolConfig, Trace
+from ..core.types import DROP, MISS, PoolConfig, Trace
 from .metrics import ClusterResult, build_result
 
 
@@ -104,10 +113,10 @@ def _route(routing: jax.Array, ev: ClusterEvent, free_t: jax.Array,
     return jax.lax.switch(routing, branches, None)
 
 
-def _run_cluster_impl(pools: PoolState, events: ClusterEvent,
-                      routing: jax.Array, unified: jax.Array,
-                      cloud: jax.Array, n_nodes: int, mode: str):
-    """The whole trace in one scan.  Returns (node i32[T], outcome i32[T])."""
+def _make_step(routing: jax.Array, unified: jax.Array, cloud: jax.Array,
+               n_nodes: int, mode: str):
+    """Build the per-event scan step (route, then step the routed pool) —
+    shared by the static whole-trace scan and the autoscaled epoch scan."""
     n = n_nodes
     tree = jax.tree_util.tree_map
 
@@ -135,12 +144,93 @@ def _run_cluster_impl(pools: PoolState, events: ClusterEvent,
             outcome = outs[p]
         return pools, (node, outcome)
 
+    return step
+
+
+def _run_cluster_impl(pools: PoolState, events: ClusterEvent,
+                      routing: jax.Array, unified: jax.Array,
+                      cloud: jax.Array, n_nodes: int, mode: str):
+    """The whole trace in one scan.  Returns (node i32[T], outcome i32[T])."""
+    step = _make_step(routing, unified, cloud, n_nodes, mode)
     _, (nodes, outcomes) = jax.lax.scan(step, pools, events)
     return nodes, outcomes
 
 
+def _run_autoscale_impl(pools: PoolState, events: ClusterEvent,
+                        valid: jax.Array, routing: jax.Array,
+                        unified: jax.Array, cloud: jax.Array,
+                        frac: jax.Array, node_mb: jax.Array, asc: jax.Array,
+                        n_nodes: int, mode: str):
+    """The autoscaled trace: an outer scan over epochs, the existing event
+    scan inside each epoch, and a per-node re-split between epochs.
+
+    ``events`` leaves are shaped ``[E, epoch_events, ...]`` (trace padded
+    with guaranteed-drop no-ops); ``valid`` is f32[E, e] marking real
+    events.  Pad events never touch pool state (a drop is a no-op
+    transition) and are masked out of the pressure signal here — the
+    padding bias that skewed the legacy ``core.adaptive`` split decision
+    cannot arise.  ``frac`` is the running f32[N] small-pool fraction,
+    ``asc`` packs (min_frac, max_frac, gain) as data so sweeps can vmap
+    over them.  Returns (node i32[E, e], outcome i32[E, e], fracs
+    f32[E, N]).
+    """
+    step = _make_step(routing, unified, cloud, n_nodes, mode)
+    tree = jax.tree_util.tree_map
+    mn, mx, gain = asc[0], asc[1], asc[2]
+    pool_unified = jnp.repeat(unified, 2)            # bool[2N]
+
+    def epoch(carry, inp):
+        pools, frac = carry
+        evs, val = inp
+
+        def inner(c, x):
+            pools, press = c
+            ev, v = x
+            pools, (node, outcome) = step(pools, ev)
+            # pressure = misses + 2x drops, per (routed node, size class);
+            # pad events carry v == 0 and contribute nothing
+            w = v * jnp.where(outcome == MISS, 1.0,
+                              jnp.where(outcome == DROP, 2.0, 0.0))
+            press = press.at[node, ev.cls].add(w)
+            return (pools, press), (node, outcome)
+
+        (pools, press), (nodes, outcomes) = jax.lax.scan(
+            inner, (pools, jnp.zeros((n_nodes, 2), jnp.float32)),
+            (evs, val))
+        press_s, press_l = press[:, 0], press[:, 1]
+        tot = press_s + press_l
+        delta = jnp.where(tot > 0,
+                          gain * (press_s - press_l)
+                          / jnp.where(tot > 0, tot, jnp.float32(1.0)),
+                          jnp.float32(0.0))
+        # a trailing partial epoch (pad suffix ⇒ last event invalid) never
+        # completes: no re-split, the frac row just repeats
+        is_full = val[-1] > 0
+        cand = jnp.minimum(mx, jnp.maximum(frac + delta, mn))
+        new_frac = jnp.where(is_full & ~unified, cand, frac)
+        now = jnp.max(jnp.where(val > 0, evs.t, -jnp.inf))
+        caps = jnp.stack([node_mb * new_frac,
+                          node_mb * (jnp.float32(1.0) - new_frac)],
+                         axis=1).reshape(-1)
+        resized = jax.vmap(pool_resize, in_axes=(0, None, 0))(
+            pools, now, caps)
+        keep = is_full & ~pool_unified                # bool[2N]
+        pools = tree(
+            lambda r, o: jnp.where(
+                keep.reshape((-1,) + (1,) * (r.ndim - 1)), r, o),
+            resized, pools)
+        return (pools, new_frac), (nodes, outcomes, new_frac)
+
+    _, (nodes, outcomes, fracs) = jax.lax.scan(epoch, (pools, frac),
+                                               (events, valid))
+    return nodes, outcomes, fracs
+
+
 _run_cluster = jax.jit(_run_cluster_impl,
                        static_argnames=("n_nodes", "mode"))
+
+_run_autoscale = jax.jit(_run_autoscale_impl,
+                         static_argnames=("n_nodes", "mode"))
 
 
 @functools.lru_cache(maxsize=None)
@@ -151,6 +241,53 @@ def _sweep_runner(n_nodes: int, mode: str):
     return jax.jit(jax.vmap(
         functools.partial(_run_cluster_impl, n_nodes=n_nodes, mode=mode),
         in_axes=(0, None, 0, 0, 0)))
+
+
+@functools.lru_cache(maxsize=None)
+def _sweep_autoscale_runner(n_nodes: int, mode: str):
+    """Autoscale analogue of ``_sweep_runner``: configs (pools, routing,
+    unified, cloud, frac, node_mb, asc) vmap as data; the epoch grid and
+    validity mask are shared across lanes."""
+    return jax.jit(jax.vmap(
+        functools.partial(_run_autoscale_impl, n_nodes=n_nodes, mode=mode),
+        in_axes=(0, None, None, 0, 0, 0, 0, 0, 0)))
+
+
+def _epoch_grid(events: ClusterEvent, n_events: int, epoch_events: int,
+                drop_size: float):
+    """Pad the trace to a whole number of epochs and reshape to [E, e].
+
+    Pad events are guaranteed-drop no-ops: an impossible function id and a
+    size larger than any pool, so ``pool_step`` leaves every pool state
+    untouched.  Returns (epoch-shaped events, valid f32[E, e]); the f32
+    mask doubles as the pressure weight inside the scan.
+    """
+    e = epoch_events
+    n_epochs = -(-n_events // e)
+    pad = n_epochs * e - n_events
+    if pad:
+        last_t = events.t[-1] if n_events else jnp.float32(0.0)
+        fills = ClusterEvent(
+            t=last_t, func_id=-2, size=drop_size, cls=0, warm=0.0, cold=0.0,
+            h1=0, h2=0)
+        events = jax.tree_util.tree_map(
+            lambda a, f: jnp.concatenate(
+                [a, jnp.full((pad,), f, a.dtype)]), events, fills)
+    epochs = jax.tree_util.tree_map(
+        lambda a: a.reshape(n_epochs, e), events)
+    valid = jnp.concatenate(
+        [jnp.ones(n_events, jnp.float32),
+         jnp.zeros(pad, jnp.float32)]).reshape(n_epochs, e)
+    return epochs, valid
+
+
+def _autoscale_inputs(cfg: ClusterConfig, asc: Autoscale):
+    """The per-config data the autoscaled scan consumes beyond the static
+    scan's (routing, unified, cloud): initial fracs, node capacities, and
+    the (min_frac, max_frac, gain) triple — all f32, all vmappable."""
+    return (jnp.asarray(cfg.small_frac, jnp.float32),
+            jnp.asarray(cfg.node_mb, jnp.float32),
+            jnp.asarray([asc.min_frac, asc.max_frac, asc.gain], jnp.float32))
 
 
 def _cloud_vec(cfg: ClusterConfig) -> jnp.ndarray:
@@ -182,22 +319,30 @@ def _simulate_cluster_ref(cfg: ClusterConfig, trace: Trace,
     return build_result(cfg, trace, node, outcome, cloud_cold)
 
 
-def _sweep_cluster(trace: Trace, configs, rng_seed: int = 0,
-                   mode: str = "gather") -> list[ClusterResult]:
-    check_step_mode(mode)
+def _stack_configs(configs, what: str):
+    """Validate the shared stacked shapes (``n_nodes``/``max_slots``) and
+    stack the per-config scan inputs — the one place both sweep
+    entrypoints (static and autoscaled) build their vmapped data from."""
     configs = list(configs)
     if not configs:
-        raise ValueError("sweep_cluster: configs must be non-empty")
-    n = configs[0].n_nodes
-    slots = configs[0].max_slots
+        raise ValueError(f"{what}: configs must be non-empty")
+    n, slots = configs[0].n_nodes, configs[0].max_slots
     if any(c.n_nodes != n or c.max_slots != slots for c in configs):
-        raise ValueError("sweep_cluster: configs must share n_nodes and "
-                         "max_slots")
+        raise ValueError(f"{what}: configs must share n_nodes and "
+                         f"max_slots")
     pools = jax.tree_util.tree_map(
         lambda *xs: jnp.stack(xs), *[init_cluster(c) for c in configs])
     routing = jnp.asarray([int(c.routing) for c in configs], jnp.int32)
     unified = jnp.asarray([c.unified for c in configs], bool)
     cloud = jnp.stack([_cloud_vec(c) for c in configs])
+    return configs, n, pools, routing, unified, cloud
+
+
+def _sweep_cluster(trace: Trace, configs, rng_seed: int = 0,
+                   mode: str = "gather") -> list[ClusterResult]:
+    check_step_mode(mode)
+    configs, n, pools, routing, unified, cloud = _stack_configs(
+        configs, "sweep_cluster")
     events = cluster_events(trace, n)
     nodes, outcomes = _sweep_runner(n, mode)(pools, events, routing,
                                              unified, cloud)
@@ -205,6 +350,76 @@ def _sweep_cluster(trace: Trace, configs, rng_seed: int = 0,
     return [build_result(c, trace, nodes[g], outcomes[g],
                          cloud_cold_draws(len(trace), c.cloud_cold_prob,
                                           rng_seed))
+            for g, c in enumerate(configs)]
+
+
+def _drop_size(cfg: ClusterConfig) -> float:
+    """A pad-event size no pool of this cluster can ever host, even after
+    the autoscaler grows it to the whole node."""
+    return float(max(cfg.node_mb)) * 10.0
+
+
+def _simulate_cluster_autoscale_jax(
+        cfg: ClusterConfig, asc: Autoscale, trace: Trace, rng_seed: int = 0,
+        mode: str = "gather") -> tuple[ClusterResult, np.ndarray]:
+    """Autoscaled twin of :func:`_simulate_cluster_jax`: returns
+    (ClusterResult, fracs f32[E, N])."""
+    check_step_mode(mode)
+    n_events = len(trace)
+    epochs, valid = _epoch_grid(cluster_events(trace, cfg.n_nodes),
+                                n_events, asc.epoch_events, _drop_size(cfg))
+    frac0, node_mb, asc_vec = _autoscale_inputs(cfg, asc)
+    node, outcome, fracs = _run_autoscale(
+        init_cluster(cfg), epochs, valid, jnp.int32(int(cfg.routing)),
+        jnp.asarray(cfg.unified, bool), _cloud_vec(cfg), frac0, node_mb,
+        asc_vec, n_nodes=cfg.n_nodes, mode=mode)
+    node = np.asarray(node).reshape(-1)[:n_events]
+    outcome = np.asarray(outcome).reshape(-1)[:n_events]
+    cloud_cold = cloud_cold_draws(n_events, cfg.cloud_cold_prob, rng_seed)
+    return (build_result(cfg, trace, node, outcome, cloud_cold),
+            np.asarray(fracs))
+
+
+def _simulate_cluster_autoscale_ref(
+        cfg: ClusterConfig, asc: Autoscale, trace: Trace,
+        rng_seed: int = 0) -> tuple[ClusterResult, np.ndarray]:
+    node, outcome, fracs = cluster_outcomes_ref(cfg, trace, autoscale=asc)
+    cloud_cold = cloud_cold_draws(len(trace), cfg.cloud_cold_prob, rng_seed)
+    return build_result(cfg, trace, node, outcome, cloud_cold), fracs
+
+
+def _sweep_cluster_autoscale(
+        trace: Trace, configs, autoscales, rng_seed: int = 0,
+        mode: str = "gather") -> list[tuple[ClusterResult, np.ndarray]]:
+    """Vmapped sweep over autoscaled configs.  All configs must share
+    ``n_nodes``/``max_slots`` AND all autoscales ``epoch_events`` (the
+    stacked shapes); min/max/gain, fracs and capacities vary as data."""
+    check_step_mode(mode)
+    autoscales = list(autoscales)
+    configs, n, pools, routing, unified, cloud = _stack_configs(
+        configs, "autoscale sweep")
+    if len(configs) != len(autoscales):
+        raise ValueError("autoscale sweep: need one Autoscale per config")
+    e = autoscales[0].epoch_events
+    if any(a.epoch_events != e for a in autoscales):
+        raise ValueError("autoscale sweep: configs must share epoch_events"
+                         " (sweep() buckets mixed epoch shapes for you)")
+    per_cfg = [_autoscale_inputs(c, a) for c, a in zip(configs, autoscales)]
+    frac0, node_mb, asc_vec = (jnp.stack([p[i] for p in per_cfg])
+                               for i in range(3))
+    n_events = len(trace)
+    drop_size = max(_drop_size(c) for c in configs)
+    epochs, valid = _epoch_grid(cluster_events(trace, n), n_events, e,
+                                drop_size)
+    nodes, outcomes, fracs = _sweep_autoscale_runner(n, mode)(
+        pools, epochs, valid, routing, unified, cloud, frac0, node_mb,
+        asc_vec)
+    nodes = np.asarray(nodes).reshape(len(configs), -1)[:, :n_events]
+    outcomes = np.asarray(outcomes).reshape(len(configs), -1)[:, :n_events]
+    fracs = np.asarray(fracs)
+    return [(build_result(c, trace, nodes[g], outcomes[g],
+                          cloud_cold_draws(n_events, c.cloud_cold_prob,
+                                           rng_seed)), fracs[g])
             for g, c in enumerate(configs)]
 
 

@@ -9,8 +9,9 @@
 * ``simulator_jax``  — lax.scan simulator + vmapped sweeps (deprecated
   entrypoints)
 * ``analyzer``       — workload analyzer (paper §2.5, Fig 6)
-* ``adaptive``       — beyond-paper adaptive partitioning (paper §7.3)
-* ``continuum``      — cluster config + numpy cluster oracle
+* ``adaptive``       — ``simulate_kiss_adaptive`` shim over the autoscaled
+  scenario mode (``Scenario(..., autoscale=...)``, paper §7.3)
+* ``continuum``      — cluster/autoscale config + numpy cluster oracle
 
 The supported front door for simulations is ``repro.sim``
 (``Scenario`` / ``simulate`` / ``sweep``); the ``simulate_*`` /
@@ -26,11 +27,12 @@ from .simulator_ref import simulate_baseline, simulate_kiss
 from .simulator_jax import (metrics_to_result, simulate_baseline_jax,
                             simulate_kiss_jax, sweep_baseline, sweep_kiss)
 from .analyzer import WorkloadProfile, analyze, classify
-from .continuum import (ClusterConfig, ContinuumConfig, ContinuumResult,
-                        RoutingPolicy, cluster_outcomes_ref,
-                        simulate_continuum)
+from .continuum import (Autoscale, ClusterConfig, ContinuumConfig,
+                        ContinuumResult, RoutingPolicy,
+                        cluster_outcomes_ref, simulate_continuum)
 
 __all__ = [
+    "Autoscale",
     "LARGE", "SMALL", "ClassMetrics", "ClusterConfig", "KissConfig",
     "Policy", "PolicySpec", "PoolConfig", "REPLACEMENT", "ROUTING",
     "RouteCtx", "RoutingPolicy", "SimResult", "SlotStats", "Trace",

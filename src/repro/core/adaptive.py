@@ -1,51 +1,35 @@
 """Beyond-paper: adaptive partitioning (the paper's §7.3 future work).
 
 The paper's KiSS uses a *static* 80-20 split and observes a drop regression
-at 2-3 GB.  Here the split is re-tuned every epoch of ``epoch_events``
-invocations from the observed per-class pressure (misses + drops weighted by
-bytes requested), bounded to [min_frac, max_frac].  Shrinking a pool evicts
-lowest-priority *idle* containers until the new capacity is respected; busy
-containers are never killed (the pool temporarily runs a negative free
-balance, which naturally blocks admissions until it drains).
+at 2-3 GB.  Adaptive partitioning re-tunes the split every epoch from the
+observed per-class pressure — and it is now a first-class scenario mode::
 
-``simulate_kiss_adaptive`` is the one legacy entrypoint deliberately NOT
-deprecated by the ``repro.sim`` redesign: a ``Scenario`` is a *static*
-spec, and folding per-epoch re-splitting into it (as a scenario mode that
-also covers per-node cluster autoscaling) is a ROADMAP item.
+    from repro.sim import Autoscale, Scenario, simulate
+
+    res = simulate(Scenario.kiss(total_mb,
+                                 autoscale=Autoscale(epoch_events=512)),
+                   trace)
+    res.fracs          # f32[epochs, nodes] split trajectory
+
+:func:`simulate_kiss_adaptive` — historically the last non-``Scenario``
+entrypoint — is now a deprecation shim over a 1-node autoscaled scenario
+(the epoch loop lives in ``repro.cluster.engine``, its numpy oracle in
+``core/continuum.py``).  The move also fixed a padding bias: the legacy
+loop here padded the final epoch with guaranteed-drop events and subtracted
+them from the returned counts only, so the padded drops still fed the
+pressure signal and skewed the last split decision.  The engine-level
+autoscaler masks pad events out of the pressure entirely (and a trailing
+partial epoch never re-splits).
 """
 from __future__ import annotations
 
 import dataclasses
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from .pool_jax import Event, PoolState, init_pool, pool_step, _priority, _INF
-from .simulator_jax import _metrics_update, _trace_to_events, _to_result
+from .compat import deprecated
+from .continuum import Autoscale
 from .types import KissConfig, SimResult, Trace
-
-
-def _resize(p: PoolState, now: jax.Array, new_capacity: jax.Array) -> PoolState:
-    """Change pool capacity between epochs; evicts lowest-priority *idle*
-    containers (same (priority, seq) order as ``pool_step``) until the new
-    capacity is respected.  ``now`` is the epoch-boundary time."""
-    used = jnp.sum(jnp.where(p.valid, p.size, 0.0))
-    deficit = used - new_capacity
-    idle = p.valid & (p.busy_until <= now)
-    pri = jnp.where(idle, _priority(p), _INF)
-    by_seq = jnp.argsort(p.seq, stable=True)
-    order = by_seq[jnp.argsort(pri[by_seq], stable=True)]
-    sz_ord = jnp.where(idle[order], p.size[order], 0.0)
-    freed_before = jnp.cumsum(sz_ord) - sz_ord
-    evict_ord = idle[order] & (freed_before < deficit - 1e-9)
-    evict = jnp.zeros_like(p.valid).at[order].set(evict_ord)
-    freed = jnp.sum(jnp.where(evict, p.size, 0.0))
-    return p._replace(
-        valid=p.valid & ~evict,
-        capacity=new_capacity,
-        free=new_capacity - (used - freed),
-    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,79 +40,36 @@ class AdaptiveConfig:
     max_frac: float = 0.9
     gain: float = 0.15  # fraction step per epoch toward the pressured class
 
+    def as_autoscale(self) -> Autoscale:
+        return Autoscale(epoch_events=self.epoch_events,
+                         min_frac=self.min_frac, max_frac=self.max_frac,
+                         gain=self.gain)
 
-def simulate_kiss_adaptive(cfg: AdaptiveConfig, trace: Trace) -> tuple[SimResult, np.ndarray]:
+
+@deprecated("repro.sim.simulate(Scenario.kiss(..., autoscale=...))")
+def simulate_kiss_adaptive(cfg: AdaptiveConfig,
+                           trace: Trace) -> tuple[SimResult, np.ndarray]:
     """Run KiSS with per-epoch adaptive re-splitting.
 
-    Returns (SimResult, fractions_per_epoch).  Fully jitted per epoch; the
-    split decision is a tiny scalar computation also in JAX.
+    Returns ``(SimResult, fractions_per_epoch)`` like the historical
+    entrypoint, but forwards to the jitted autoscaled-scenario engine.
     """
-    events = _trace_to_events(trace)
-    n = int(events.t.shape[0])
-    e = cfg.epoch_events
-    pad = (-n) % e
-    if pad:
-        # pad with no-op events far in the future routed to class 0 with
-        # zero size (always hit-less but also harmless: size 0 inserts!) —
-        # instead pad by repeating the last event time with size>capacity so
-        # it drops, and subtract the padding drops afterwards.
-        big = jnp.float32(cfg.base.total_mb * 10)
-        pad_ev = Event(
-            t=jnp.full((pad,), events.t[-1] + 1e6),
-            func_id=jnp.full((pad,), -2, jnp.int32),
-            size=jnp.full((pad,), big),
-            cls=jnp.zeros((pad,), jnp.int32),
-            warm=jnp.zeros((pad,)), cold=jnp.zeros((pad,)))
-        events = jax.tree_util.tree_map(
-            lambda a, b: jnp.concatenate([a, b]), events, pad_ev)
-    n_epochs = (n + pad) // e
-    epochs = jax.tree_util.tree_map(
-        lambda a: a.reshape(n_epochs, e, *a.shape[1:]), events)
-
-    small = init_pool(cfg.base.small_pool)
-    large = init_pool(cfg.base.large_pool)
-    total = jnp.float32(cfg.base.total_mb)
-
-    @jax.jit
-    def epoch(small, large, evs, frac):
-        def step(carry, ev):
-            small, large, metrics = carry
-
-            def sb(ops):
-                s, l = ops
-                s, out = pool_step(s, ev)
-                return s, l, out
-
-            def lb(ops):
-                s, l = ops
-                l, out = pool_step(l, ev)
-                return s, l, out
-
-            small, large, outcome = jax.lax.cond(ev.cls == 0, sb, lb,
-                                                 (small, large))
-            return (small, large, _metrics_update(metrics, ev, outcome)), None
-
-        init = (small, large, jnp.zeros((2, 4), jnp.float32))
-        (small, large, m), _ = jax.lax.scan(step, init, evs)
-        # pressure = misses + drops, bytes-weighted by class mean size
-        press_s = m[0, 1] + 2.0 * m[0, 2]
-        press_l = m[1, 1] + 2.0 * m[1, 2]
-        tot = press_s + press_l
-        delta = jnp.where(tot > 0, cfg.gain * (press_s - press_l) / tot, 0.0)
-        new_frac = jnp.clip(frac + delta, cfg.min_frac, cfg.max_frac)
-        now = evs.t[-1]
-        small = _resize(small, now, total * new_frac)
-        large = _resize(large, now, total * (1.0 - new_frac))
-        return small, large, m, new_frac
-
-    frac = jnp.float32(cfg.base.small_frac)
-    metrics = np.zeros((2, 4), np.float32)
-    fracs = []
-    for i in range(n_epochs):
-        evs = jax.tree_util.tree_map(lambda a: a[i], epochs)
-        small, large, m, frac = epoch(small, large, evs, frac)
-        metrics += np.asarray(m)
-        fracs.append(float(frac))
-    if pad:  # padded events always DROP in class 0; remove them
-        metrics[0, 2] -= pad
-    return _to_result(metrics), np.asarray(fracs)
+    # deferred: repro.sim imports this package, not the other way around
+    from ..sim import Scenario, simulate
+    base = cfg.base
+    if base.small_policy is not None or base.large_policy is not None:
+        raise ValueError("per-pool policy overrides are not supported by "
+                         "the autoscaled scenario path")
+    if not cfg.min_frac <= base.small_frac <= cfg.max_frac:
+        # the legacy loop silently clipped such a start at the first epoch
+        # boundary; the scenario path rejects it at construction instead
+        raise ValueError(
+            f"AdaptiveConfig.base.small_frac={base.small_frac} must start "
+            f"inside [min_frac, max_frac] = [{cfg.min_frac}, "
+            f"{cfg.max_frac}]")
+    scenario = Scenario.kiss(base.total_mb, small_frac=base.small_frac,
+                             replacement=base.policy,
+                             max_slots=base.max_slots,
+                             autoscale=cfg.as_autoscale())
+    res = simulate(scenario, trace)
+    return res.per_class(), np.asarray(res.fracs[:, 0], np.float64)

@@ -62,6 +62,43 @@ assert [p.name.lower() for p in Policy] == REPLACEMENT.names()[:3]
 
 
 @dataclasses.dataclass(frozen=True)
+class Autoscale:
+    """Per-epoch adaptive re-splitting of every KiSS node's pools.
+
+    Every ``epoch_events`` invocations, each non-unified node re-tunes its
+    small/large split from the *observed per-class pressure* on that node
+    (misses + 2x drops), moving the split ``gain`` of the way toward the
+    pressured class and clipping to ``[min_frac, max_frac]``.  Shrinking a
+    pool evicts lowest-priority idle containers; busy containers are never
+    killed (the pool temporarily runs a negative free balance).
+
+    A trailing partial epoch never completes, so it triggers no re-split —
+    this is also what keeps the engine's epoch padding out of the pressure
+    signal (the historical ``core.adaptive`` loop let its padded
+    guaranteed-drop events bias the final split).
+
+    Frozen and hashable: rides inside :class:`repro.sim.Scenario`, and
+    ``min_frac``/``max_frac``/``gain`` are vmapped as data in sweeps
+    (scenarios sharing ``epoch_events`` batch into one program).
+    """
+
+    epoch_events: int = 512
+    min_frac: float = 0.5
+    max_frac: float = 0.9
+    gain: float = 0.15   # fraction step per epoch toward the pressured class
+
+    def __post_init__(self):
+        if int(self.epoch_events) != self.epoch_events or \
+                self.epoch_events < 1:
+            raise ValueError("epoch_events must be a positive integer")
+        object.__setattr__(self, "epoch_events", int(self.epoch_events))
+        if not 0.0 < self.min_frac <= self.max_frac < 1.0:
+            raise ValueError("need 0 < min_frac <= max_frac < 1")
+        if self.gain < 0.0:
+            raise ValueError("gain must be >= 0")
+
+
+@dataclasses.dataclass(frozen=True)
 class ClusterConfig:
     """A heterogeneous edge cluster in front of a priced cloud tier.
 
@@ -169,13 +206,19 @@ def continuum_latencies(trace: Trace, outcome: np.ndarray,
 # the numpy oracle: one event at a time over WarmPool
 # --------------------------------------------------------------------------
 
-def cluster_outcomes_ref(cfg: ClusterConfig, trace: Trace):
+def cluster_outcomes_ref(cfg: ClusterConfig, trace: Trace,
+                         autoscale: Autoscale | None = None):
     """Sequential oracle for the cluster: returns ``(node, outcome)`` as
-    i32[T] arrays (outcome: 0 hit, 1 miss, 2 drop/offload).
+    i32[T] arrays (outcome: 0 hit, 1 miss, 2 drop/offload) — plus a
+    per-epoch ``fracs`` f32[E, N] array when ``autoscale`` is given.
 
     The routing decision calls the registered policy function with numpy
     float32 inputs — the same pure function the JAX engine compiles — so
-    any policy added via ``@register_routing`` runs here unchanged.
+    any policy added via ``@register_routing`` runs here unchanged.  With
+    ``autoscale``, every full epoch of ``epoch_events`` invocations ends by
+    re-splitting each KiSS node from its observed per-class pressure
+    (``WarmPool.resize``), with every scalar step mirrored through float32
+    so the jitted engine's re-splits are reproduced bit-for-bit.
     """
     n = cfg.n_nodes
     caps = cfg.pool_caps()
@@ -189,13 +232,15 @@ def cluster_outcomes_ref(cfg: ClusterConfig, trace: Trace):
     sink = ClassMetrics()   # per-node metrics are derived from the outputs
     node_out = np.empty(len(trace), np.int32)
     outcome_out = np.empty(len(trace), np.int32)
-    # loop-invariant routing inputs, precomputed per size class
+    # routing inputs precomputed per size class (loop-invariant between
+    # re-splits; refreshed by the autoscaler below when capacities move)
     tgt_by_cls = [np.where(unified, 0, c) for c in (0, 1)]
     cap_by_cls = [cap_f32[nodes_idx, t] for t in tgt_by_cls]
     spec = ROUTING.spec(cfg.routing)
     rtt = np.float32(cfg.cloud_rtt_s)
     ccp = np.float32(cfg.cloud_cold_prob)
-    for i in range(len(trace)):
+
+    def run_event(i: int) -> tuple[int, int]:
         cls = int(trace.cls[i])
         tgt = tgt_by_cls[cls]
         # only load-sensitive policies read pool occupancy; skip the
@@ -217,7 +262,56 @@ def cluster_outcomes_ref(cfg: ClusterConfig, trace: Trace):
             float(trace.warm_dur[i]), float(trace.cold_dur[i]), sink)
         node_out[i] = node
         outcome_out[i] = _OUT_CODE[out]
-    return node_out, outcome_out
+        return node, outcome_out[i]
+
+    if autoscale is None:
+        for i in range(len(trace)):
+            run_event(i)
+        return node_out, outcome_out
+
+    # -- autoscaled path: epoch loop with float32-mirrored re-splitting ----
+    f32 = np.float32
+    e = autoscale.epoch_events
+    mn, mx, gain = (f32(autoscale.min_frac), f32(autoscale.max_frac),
+                    f32(autoscale.gain))
+    frac = np.asarray(cfg.small_frac, np.float32)
+    node_mb = np.asarray(cfg.node_mb, np.float32)
+    press = np.zeros((n, 2), np.float32)   # exact small-integer counts
+    fracs_out: list[np.ndarray] = []
+    for i in range(len(trace)):
+        node, out = run_event(i)
+        if out == MISS:
+            press[node, int(trace.cls[i])] += 1.0
+        elif out == DROP:
+            press[node, int(trace.cls[i])] += 2.0
+        if (i + 1) % e:
+            continue
+        # full epoch boundary: pressure -> split delta -> resize, every
+        # scalar op through f32 exactly as the jitted engine computes it
+        press_s, press_l = press[:, 0], press[:, 1]
+        tot = press_s + press_l
+        delta = np.where(tot > 0,
+                         gain * (press_s - press_l)
+                         / np.where(tot > 0, tot, f32(1.0)), f32(0.0))
+        cand = np.minimum(mx, np.maximum(frac + delta, mn))
+        frac = np.where(unified, frac, cand).astype(np.float32)
+        cap_s = node_mb * frac
+        cap_l = node_mb * (f32(1.0) - frac)
+        now = float(trace.t[i])
+        for j in range(n):
+            if unified[j]:
+                continue
+            pools[j][0].resize(now, float(cap_s[j]))
+            pools[j][1].resize(now, float(cap_l[j]))
+            cap_f32[j, 0], cap_f32[j, 1] = cap_s[j], cap_l[j]
+        cap_by_cls = [cap_f32[nodes_idx, t] for t in tgt_by_cls]
+        press[:] = 0.0
+        fracs_out.append(frac.copy())
+    if len(trace) % e:   # trailing partial epoch: no re-split (see Autoscale)
+        fracs_out.append(frac.copy())
+    fracs = (np.stack(fracs_out) if fracs_out
+             else np.zeros((0, n), np.float32))
+    return node_out, outcome_out, fracs
 
 
 # --------------------------------------------------------------------------

@@ -93,6 +93,26 @@ def _gd(clock, freq, cold_cost, size):
     return clock + freq * cold_cost / jnp.maximum(size, 1e-6)
 
 
+def _evict_prefix(p: PoolState, idle: jax.Array, deficit: jax.Array):
+    """The minimal ``(priority, seq)``-ordered prefix of idle slots whose
+    eviction covers ``deficit``: greedy eviction == sort + prefix-sum over
+    freed bytes.  Returns ``(evict bool[S], freed f32)``.  Shared by the
+    miss path of ``pool_step`` and by ``pool_resize`` — JAX<->oracle
+    bit-equivalence depends on both sites evicting in the identical
+    order."""
+    pri = jnp.where(idle, _priority(p), _INF)       # only idle are evictable
+    # order slots by (priority, seq): stable argsort of priority over a
+    # seq-sorted permutation.
+    by_seq = jnp.argsort(p.seq, stable=True)
+    order = by_seq[jnp.argsort(pri[by_seq], stable=True)]
+    sz_ord = jnp.where(idle[order], p.size[order], 0.0)
+    freed_before = jnp.cumsum(sz_ord) - sz_ord
+    evict_ord = idle[order] & (freed_before < deficit - 1e-9)
+    evict = jnp.zeros_like(p.valid).at[order].set(evict_ord)
+    freed = jnp.sum(jnp.where(evict, p.size, 0.0))
+    return evict, freed
+
+
 def pool_step(p: PoolState, ev: Event) -> tuple[PoolState, jax.Array]:
     """Process one invocation.  Returns (new_state, outcome code)."""
     idle = p.valid & (p.busy_until <= ev.t)
@@ -113,16 +133,7 @@ def pool_step(p: PoolState, ev: Event) -> tuple[PoolState, jax.Array]:
 
     # ---- MISS branch: evict minimal (priority, seq)-prefix, then insert ----
     deficit = ev.size - p.free
-    pri = jnp.where(idle, _priority(p), _INF)       # only idle are evictable
-    # order slots by (priority, seq): stable argsort of priority over a
-    # seq-sorted permutation.
-    by_seq = jnp.argsort(p.seq, stable=True)
-    order = by_seq[jnp.argsort(pri[by_seq], stable=True)]
-    sz_ord = jnp.where(idle[order], p.size[order], 0.0)
-    freed_before = jnp.cumsum(sz_ord) - sz_ord
-    evict_ord = idle[order] & (freed_before < deficit - 1e-9)
-    evict = jnp.zeros_like(p.valid).at[order].set(evict_ord)
-    freed = jnp.sum(jnp.where(evict, p.size, 0.0))
+    evict, freed = _evict_prefix(p, idle, deficit)
     total_evictable = jnp.sum(jnp.where(idle, p.size, 0.0))
 
     valid_after = p.valid & ~evict
@@ -163,3 +174,27 @@ def pool_step(p: PoolState, ev: Event) -> tuple[PoolState, jax.Array]:
 
     new_state = pick(hit_state, miss_state, p)
     return new_state, outcome
+
+
+def pool_resize(p: PoolState, now: jax.Array,
+                new_capacity: jax.Array) -> PoolState:
+    """Change pool capacity between autoscaler epochs.
+
+    Evicts lowest-priority *idle* containers (same ``(priority, seq)``
+    order as ``pool_step``) until the new capacity is respected; busy
+    containers are never killed, so a hard shrink can leave ``free``
+    negative, which naturally blocks admissions until they drain.  Unlike
+    the miss path of ``pool_step``, eviction here does not inflate the
+    GreedyDual clock.  ``now`` is the epoch-boundary time.  Pure per-pool:
+    the cluster engine vmaps it over the stacked ``[pools, slots]`` axes,
+    and ``WarmPool.resize`` is its sequential float32-mirrored twin.
+    """
+    used = jnp.sum(jnp.where(p.valid, p.size, 0.0))
+    deficit = used - new_capacity
+    idle = p.valid & (p.busy_until <= now)
+    evict, freed = _evict_prefix(p, idle, deficit)
+    return p._replace(
+        valid=p.valid & ~evict,
+        capacity=new_capacity,
+        free=new_capacity - (used - freed),
+    )

@@ -151,6 +151,37 @@ class WarmPool:
         metrics.exec_time = _f32(_f32(metrics.exec_time) + _f32(cold_dur))
         return "miss"
 
+    # -- capacity changes (autoscaling) -------------------------------------
+    def resize(self, now: float, new_capacity_mb: float) -> list[Container]:
+        """Change the pool capacity between epochs; the sequential twin of
+        ``pool_jax.pool_resize`` (float32-mirrored step by step).
+
+        Evicts lowest-``(priority, uid)`` *idle* containers until the new
+        capacity is respected; busy containers survive, so a hard shrink
+        can leave ``free_mb`` negative, which blocks admissions until the
+        busy containers drain.  Unlike ``access()``, eviction here does not
+        inflate the GreedyDual clock (matching ``pool_resize``).  Returns
+        the victims (``last_victims`` is set too, for the serving runtime).
+        """
+        used = sum(c.size_mb for c in self.containers)
+        deficit = float(_f32(_f32(used) - _f32(new_capacity_mb)))
+        victims: list[Container] = []
+        freed = 0.0
+        for c in sorted((c for c in self.containers if c.busy_until <= now),
+                        key=lambda c: (self._priority(c), c.uid)):
+            if freed >= deficit - 1e-9:
+                break
+            victims.append(c)
+            freed += c.size_mb
+        for c in victims:
+            self.containers.remove(c)
+        self.cfg = dataclasses.replace(self.cfg,
+                                       capacity_mb=float(new_capacity_mb))
+        self.free_mb = float(_f32(
+            _f32(new_capacity_mb) - _f32(_f32(used) - _f32(freed))))
+        self.last_victims = victims
+        return victims
+
     # -- introspection ------------------------------------------------------
     @property
     def used_mb(self) -> float:

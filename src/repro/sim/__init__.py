@@ -14,6 +14,11 @@ package is the single front door for it::
     results = sweep(trace, [Scenario.kiss(gb * 1024.0)       # one vmapped
                             for gb in (2, 4, 8, 16)])        # program
 
+    adaptive = simulate(Scenario.kiss(                       # per-epoch
+        4 * 1024.0, autoscale=Autoscale(epoch_events=512)),  # re-splitting
+        trace)
+    adaptive.fracs                                   # f32[epochs, nodes]
+
 Routing and replacement policies are open registries
 (``repro.core.registry``): registering a pure function makes it available
 to the jitted JAX engine (a ``lax.switch`` branch built at trace time),
@@ -33,6 +38,7 @@ The historical entrypoints (``simulate_kiss_jax``, ``sweep_cluster``,
 ...) still work as deprecation shims and are equivalence-tested against
 this API.
 """
+from ..core.continuum import Autoscale
 from ..core.registry import (REPLACEMENT, ROUTING, PolicySpec, RouteCtx,
                              SlotStats, register_replacement,
                              register_routing, replacement_policies,
@@ -43,8 +49,8 @@ from .scenario import Scenario
 from . import policies  # registers cost_model et al.  # noqa: F401
 
 __all__ = [
-    "REPLACEMENT", "ROUTING", "PolicySpec", "Result", "RouteCtx",
-    "SUMMARY_KEYS", "Scenario", "SlotStats", "register_replacement",
-    "register_routing", "replacement_policies", "routing_policies",
-    "simulate", "sweep",
+    "Autoscale", "REPLACEMENT", "ROUTING", "PolicySpec", "Result",
+    "RouteCtx", "SUMMARY_KEYS", "Scenario", "SlotStats",
+    "register_replacement", "register_routing", "replacement_policies",
+    "routing_policies", "simulate", "sweep",
 ]

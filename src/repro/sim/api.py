@@ -14,8 +14,11 @@ from __future__ import annotations
 
 from typing import Iterable, Sequence
 
-from ..cluster.engine import (_simulate_cluster_jax, _simulate_cluster_ref,
-                              _sweep_cluster, check_step_mode)
+from ..cluster.engine import (_simulate_cluster_autoscale_jax,
+                              _simulate_cluster_autoscale_ref,
+                              _simulate_cluster_jax, _simulate_cluster_ref,
+                              _sweep_cluster, _sweep_cluster_autoscale,
+                              check_step_mode)
 from ..core.types import Trace
 from .result import Result
 from .scenario import Scenario
@@ -37,15 +40,28 @@ def simulate(scenario: Scenario, trace: Trace, *, engine: str = "jax",
     ``"vmap"``); it is ignored by the reference engine.  ``rng_seed``
     fixes the cloud cold-start draws (common random numbers: both engines
     and every scenario of a sweep price offloads identically).
+
+    An autoscaled scenario (``scenario.autoscale`` set) runs the epoch
+    re-splitting engines instead; the returned :class:`Result` then
+    carries the per-epoch split trajectory in ``.fracs``.
     """
     _check_engine(engine)
     check_step_mode(mode)
     cfg = scenario.to_cluster_config()
+    asc = scenario.autoscale
+    if asc is None:
+        if engine == "jax":
+            raw = _simulate_cluster_jax(cfg, trace, rng_seed, mode)
+        else:
+            raw = _simulate_cluster_ref(cfg, trace, rng_seed)
+        return Result(scenario=scenario, raw=raw)
     if engine == "jax":
-        raw = _simulate_cluster_jax(cfg, trace, rng_seed, mode)
+        raw, fracs = _simulate_cluster_autoscale_jax(cfg, asc, trace,
+                                                     rng_seed, mode)
     else:
-        raw = _simulate_cluster_ref(cfg, trace, rng_seed)
-    return Result(scenario=scenario, raw=raw)
+        raw, fracs = _simulate_cluster_autoscale_ref(cfg, asc, trace,
+                                                     rng_seed)
+    return Result(scenario=scenario, raw=raw, epoch_fracs=fracs)
 
 
 def sweep(trace: Trace, scenarios: Iterable[Scenario], *,
@@ -53,10 +69,13 @@ def sweep(trace: Trace, scenarios: Iterable[Scenario], *,
           rng_seed: int = 0) -> list[Result]:
     """Evaluate many scenarios on one trace; results in input order.
 
-    Scenarios sharing stacked shapes (``n_nodes``, ``max_slots``) are
-    batched into ONE vmapped ``lax.scan`` program; mixed shapes simply
-    split into one program per group — callers no longer need to
-    hand-partition their grids the way ``sweep_cluster`` required.
+    Scenarios sharing stacked shapes (``n_nodes``, ``max_slots``, and —
+    for autoscaled scenarios — the epoch length) are batched into ONE
+    vmapped ``lax.scan`` program; mixed shapes simply split into one
+    program per group — callers no longer need to hand-partition their
+    grids the way ``sweep_cluster`` required.  Static and autoscaled
+    scenarios mix freely; autoscaled lanes vmap their (min_frac, max_frac,
+    gain) as data.
     """
     _check_engine(engine)
     check_step_mode(mode)
@@ -66,14 +85,22 @@ def sweep(trace: Trace, scenarios: Iterable[Scenario], *,
     if engine == "ref":
         return [simulate(s, trace, engine="ref", rng_seed=rng_seed)
                 for s in scenarios]
-    groups: dict[tuple[int, int], list[int]] = {}
+    groups: dict[tuple[int, int, int | None], list[int]] = {}
     for i, s in enumerate(scenarios):
-        groups.setdefault((s.n_nodes, s.max_slots), []).append(i)
+        epoch = s.autoscale.epoch_events if s.autoscale else None
+        groups.setdefault((s.n_nodes, s.max_slots, epoch), []).append(i)
     results: list[Result | None] = [None] * len(scenarios)
-    for idxs in groups.values():
-        raws = _sweep_cluster(
-            trace, [scenarios[i].to_cluster_config() for i in idxs],
-            rng_seed=rng_seed, mode=mode)
-        for i, raw in zip(idxs, raws):
-            results[i] = Result(scenario=scenarios[i], raw=raw)
+    for (_, _, epoch), idxs in groups.items():
+        cfgs = [scenarios[i].to_cluster_config() for i in idxs]
+        if epoch is None:
+            raws = _sweep_cluster(trace, cfgs, rng_seed=rng_seed, mode=mode)
+            for i, raw in zip(idxs, raws):
+                results[i] = Result(scenario=scenarios[i], raw=raw)
+        else:
+            pairs = _sweep_cluster_autoscale(
+                trace, cfgs, [scenarios[i].autoscale for i in idxs],
+                rng_seed=rng_seed, mode=mode)
+            for i, (raw, fracs) in zip(idxs, pairs):
+                results[i] = Result(scenario=scenarios[i], raw=raw,
+                                    epoch_fracs=fracs)
     return results

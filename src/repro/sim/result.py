@@ -18,8 +18,11 @@ from ..core.continuum import ContinuumResult
 from ..core.types import ClassMetrics, SimResult
 from .scenario import Scenario
 
-#: The keys ``summary()`` always returns, in order.  ``SimResult.summary``
-#: produces the first eleven; the rest are the cluster/latency extras.
+#: The keys ``summary()`` always returns, in order — the single source of
+#: truth for the benchmark-stable contract.  ``SimResult.summary`` produces
+#: the first eleven; then the cluster/latency extras; then the per-epoch
+#: split-fraction extras (static scenarios report their one implicit
+#: epoch).
 SUMMARY_KEYS = (
     "cold_start_pct", "drop_pct", "hit_rate",
     "small_cold_start_pct", "large_cold_start_pct",
@@ -27,6 +30,7 @@ SUMMARY_KEYS = (
     "serviceable", "total", "exec_time_s", "serviceable_mean_s",
     "n_nodes", "offload_pct",
     "latency_mean_s", "latency_p50_s", "latency_p95_s", "latency_p99_s",
+    "n_epochs", "frac_final_mean", "frac_min", "frac_max",
 )
 
 
@@ -40,11 +44,16 @@ class Result:
     * ``latencies`` — f64[T] end-to-end seconds (drops pay the cloud
       round trip);
     * ``per_node`` — f64[N, 2, 4] (hits, misses, drops, edge exec time)
-      per (node, size class).
+      per (node, size class);
+    * ``fracs`` — f32[E, N] small-pool split per (epoch, node): the
+      autoscaler's trajectory, or one static row.
     """
 
     scenario: Scenario
     raw: ClusterResult
+    #: f32[E, N] per-epoch small-pool fractions from the autoscaler
+    #: (``None`` for static scenarios — ``fracs`` derives the one-row view)
+    epoch_fracs: np.ndarray | None = None
 
     # -- per-event arrays --------------------------------------------------
     @property
@@ -65,6 +74,18 @@ class Result:
 
     def __len__(self) -> int:
         return len(self.raw.latencies)
+
+    @property
+    def fracs(self) -> np.ndarray:
+        """f32[E, N] small-pool fraction in effect after each epoch.
+
+        For an autoscaled scenario this is the split trajectory the
+        engines emitted (one row per epoch, unified nodes pinned at their
+        starting value); a static scenario is one epoch spanning the whole
+        trace, so the view is its ``small_frac`` as a single row."""
+        if self.epoch_fracs is not None and len(self.epoch_fracs):
+            return self.epoch_fracs
+        return np.asarray([self.scenario.small_frac], np.float32)
 
     # -- per-class view (subsumes SimResult) -------------------------------
     def per_class(self) -> SimResult:
@@ -104,10 +125,16 @@ class Result:
 
     # -- the benchmark-stable summary --------------------------------------
     def summary(self) -> dict:
-        """Every ``SimResult.summary()`` key plus the cluster/latency
-        extras, always in :data:`SUMMARY_KEYS` order."""
+        """Every ``SimResult.summary()`` key plus the cluster/latency and
+        per-epoch split extras, always in :data:`SUMMARY_KEYS` order."""
         s = self.per_class().summary()
         lat = self.latency_stats()
+        fr = self.fracs
+        # frac stats describe the split trajectory, which only KiSS nodes
+        # have — a unified node's inert small_frac must not dilute them
+        # (all-unified scenarios keep the full view: every column is inert)
+        kiss = [i for i, u in enumerate(self.scenario.unified) if not u]
+        fr = fr[:, kiss] if kiss else fr
         s.update({
             "n_nodes": self.scenario.n_nodes,
             "offload_pct": self.offload_pct,
@@ -115,6 +142,15 @@ class Result:
             "latency_p50_s": lat["p50_s"],
             "latency_p95_s": lat["p95_s"],
             "latency_p99_s": lat["p99_s"],
+            "n_epochs": int(fr.shape[0]),
+            "frac_final_mean": float(fr[-1].mean()),
+            "frac_min": float(fr.min()),
+            "frac_max": float(fr.max()),
         })
-        assert tuple(s) == SUMMARY_KEYS
+        # the key contract must hold even under `python -O` (a bare assert
+        # would let key drift ship silently into results/BENCH_*.json)
+        if tuple(s) != SUMMARY_KEYS:
+            raise RuntimeError(
+                f"Result.summary() drifted from SUMMARY_KEYS: "
+                f"{tuple(s)} != {SUMMARY_KEYS}")
         return s

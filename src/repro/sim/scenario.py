@@ -10,6 +10,8 @@ Constructors cover the paper's configurations::
     Scenario.baseline(4 * 1024.0)              # one unified-pool node
     Scenario.cluster((1024.0,) * 8 + (6144.0,) * 4,
                      routing="size_aware")     # heterogeneous cluster
+    Scenario.kiss(4 * 1024.0,                  # per-epoch adaptive split
+                  autoscale=Autoscale(epoch_events=512))
 
 Policies are *names* resolved against the registries in
 ``repro.core.registry`` — any ``@register_routing`` /
@@ -19,16 +21,29 @@ cheap to fan out over a grid for :func:`repro.sim.sweep`.
 """
 from __future__ import annotations
 
+import collections.abc
 import dataclasses
 from typing import Sequence
 
-from ..core.continuum import ClusterConfig
+import numpy as np
+
+from ..core.continuum import Autoscale, ClusterConfig
 from ..core.registry import REPLACEMENT, ROUTING
+
+
+def _is_seq(x) -> bool:
+    """Any per-node sequence: list/tuple, 1-d+ numpy array, or other
+    non-string ``Sequence`` — a bare ``np.ndarray`` must not be mistaken
+    for a scalar and die (or silently broadcast) in ``float()``.  A 0-d
+    array IS a scalar and broadcasts."""
+    return ((isinstance(x, np.ndarray) and x.ndim > 0) or
+            (isinstance(x, collections.abc.Sequence)
+             and not isinstance(x, (str, bytes))))
 
 
 def _tuple_of(x, n: int, cast, what: str) -> tuple:
     """Broadcast a scalar (or pass a length-``n`` sequence) to a tuple."""
-    if isinstance(x, (list, tuple)):
+    if _is_seq(x):
         if len(x) != n:
             raise ValueError(f"{what} must have {n} entries, got {len(x)}")
         return tuple(cast(v) for v in x)
@@ -45,6 +60,11 @@ class Scenario:
     single-node scenario is just a cluster of one: drops are priced
     against the cloud tier either way, and the per-class metrics of a
     1-node scenario match the historical single-node simulators exactly.
+
+    ``autoscale`` (an :class:`Autoscale`, or a kwargs dict for one;
+    ``None`` = the paper's static split) makes every KiSS node re-tune its
+    small/large split each epoch from observed per-class pressure —
+    ``small_frac`` then only sets the starting split.
     """
 
     node_mb: tuple[float, ...]
@@ -55,11 +75,12 @@ class Scenario:
     cloud_rtt_s: float = 0.25
     cloud_cold_prob: float = 0.05
     max_slots: int = 1024
+    autoscale: Autoscale | None = None
     name: str = ""
 
     def __post_init__(self):
         nm = self.node_mb
-        if not isinstance(nm, (list, tuple)):
+        if not _is_seq(nm):
             nm = (nm,)
         n = len(nm)
         if n == 0:
@@ -78,6 +99,25 @@ class Scenario:
             raise ValueError("max_slots must be >= 1")
         if not 0.0 <= self.cloud_cold_prob <= 1.0:
             raise ValueError("cloud_cold_prob must be in [0, 1]")
+        if self.autoscale is not None:
+            asc = self.autoscale
+            if isinstance(asc, dict):
+                asc = Autoscale(**asc)
+            if not isinstance(asc, Autoscale):
+                raise ValueError("autoscale must be an Autoscale, a kwargs "
+                                 f"dict, or None, got {asc!r}")
+            if all(self.unified):
+                raise ValueError(
+                    "autoscale needs at least one KiSS node to re-split")
+            # a start outside the bounds would be silently clamped (and
+            # pools resized) at the first epoch — surface it here instead
+            if any(not asc.min_frac <= f <= asc.max_frac
+                   for f, u in zip(self.small_frac, self.unified) if not u):
+                raise ValueError(
+                    "small_frac of every KiSS node must start inside "
+                    f"[min_frac, max_frac] = [{asc.min_frac}, "
+                    f"{asc.max_frac}]")
+            object.__setattr__(self, "autoscale", asc)
         # canonicalize policies to registered names (raises on unknown)
         object.__setattr__(
             self, "replacement",
@@ -134,7 +174,9 @@ class Scenario:
             return self.name
         kind = ("baseline" if all(self.unified)
                 else "kiss" if self.n_nodes == 1 else "cluster")
-        return f"{kind}-{self.n_nodes}n-{self.routing}-{self.replacement}"
+        asc = "-autoscaled" if self.autoscale is not None else ""
+        return (f"{kind}-{self.n_nodes}n-{self.routing}"
+                f"-{self.replacement}{asc}")
 
     def to_cluster_config(self) -> ClusterConfig:
         """The engine-level config both engines consume."""

@@ -1,11 +1,20 @@
-"""Beyond-paper adaptive partitioning tests."""
+"""Beyond-paper adaptive partitioning, via the legacy entrypoint.
+
+``simulate_kiss_adaptive`` is now a deprecation shim over a 1-node
+autoscaled ``Scenario`` (see ``tests/test_autoscale.py`` for the
+engine-level coverage); these tests pin the shim's historical behavior, so
+its warnings are silenced module-wide.
+"""
 import numpy as np
+import pytest
 
 from repro.core import KissConfig, Policy
 from repro.core.adaptive import AdaptiveConfig, simulate_kiss_adaptive
 from repro.sim import Scenario, simulate
 
 from conftest import quantized_trace
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
 
 
 def test_fractions_bounded_and_metrics_consistent(rng):

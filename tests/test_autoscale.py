@@ -1,0 +1,251 @@
+"""Autoscaled scenarios: exact JAX<->oracle equivalence (both step modes),
+the `simulate_kiss_adaptive` shim, frac trajectory bounds, sweep batching,
+and the padding-bias regression (a trailing partial epoch must never feed
+pad events into the split decision)."""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.types import Trace
+from repro.sim import Autoscale, Scenario, simulate, sweep
+
+from conftest import quantized_trace
+
+ASC = Autoscale(epoch_events=100, min_frac=0.4, max_frac=0.9, gain=0.2)
+
+
+def het4(routing="sticky", asc=ASC):
+    """Heterogeneous cluster with a unified node mixed in — the unified
+    node must ride along unresized."""
+    return Scenario.cluster((1024.0, 1024.0, 2048.0, 4096.0),
+                            small_frac=(0.8, 0.8, 0.8, 0.5),
+                            unified=(False, True, False, False),
+                            routing=routing, max_slots=64, autoscale=asc)
+
+
+def kiss1(total_mb=1024.0, e=128, **kw):
+    return Scenario.kiss(total_mb, max_slots=96,
+                         autoscale=Autoscale(epoch_events=e, **kw))
+
+
+# ---------------------------------------------------------------------------
+# engine equivalence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["gather", "vmap"])
+@pytest.mark.parametrize("routing",
+                         ["sticky", "least_loaded", "size_aware",
+                          "power_of_two", "cost_model"])
+def test_autoscaled_jax_matches_oracle(routing, mode):
+    """Exact per-event equivalence (routed node, outcome, per-node
+    metrics) AND bit-identical frac trajectories, for both scan-step
+    formulations.  The oracle never pads, so agreement on traces that are
+    not a multiple of epoch_events also proves the engine's padding is
+    invisible."""
+    for seed in (0, 1):
+        tr = quantized_trace(np.random.default_rng(seed), 450)
+        assert len(tr) % ASC.epoch_events != 0   # partial epoch exercised
+        sc = het4(routing)
+        j = simulate(sc, tr, engine="jax", mode=mode)
+        r = simulate(sc, tr, engine="ref")
+        assert (j.node == r.node).all(), routing
+        assert (j.outcome == r.outcome).all(), routing
+        assert (j.per_node == r.per_node).all()
+        assert (j.fracs == r.fracs).all()
+        assert np.allclose(j.latencies, r.latencies)
+
+
+def test_autoscaled_single_node_exact_epoch_multiple():
+    """No-padding case (trace length a multiple of epoch_events)."""
+    tr = quantized_trace(np.random.default_rng(2), 512)
+    sc = kiss1(e=128)
+    j = simulate(sc, tr, engine="jax")
+    r = simulate(sc, tr, engine="ref")
+    assert (j.outcome == r.outcome).all()
+    assert j.fracs.shape == (4, 1) and (j.fracs == r.fracs).all()
+
+
+# ---------------------------------------------------------------------------
+# the padding-bias regression (the headline bugfix)
+# ---------------------------------------------------------------------------
+
+def test_partial_epoch_padding_does_not_bias_final_frac():
+    """A trace whose length is 1 mod epoch_events must end on the same
+    split as its unpadded full-epoch prefix: the engine pads the trailing
+    partial epoch with guaranteed-drop events, and those pads used to leak
+    into the pressure signal (press_s += 2*pad) and pull the final frac
+    toward the small pool."""
+    e = 128
+    tr = quantized_trace(np.random.default_rng(0), 4 * e + 1)
+    prefix = Trace(*(a[:4 * e] for a in tr))
+    f_full = simulate(kiss1(e=e), tr).fracs
+    f_prefix = simulate(kiss1(e=e), prefix).fracs
+    assert f_full.shape == (5, 1) and f_prefix.shape == (4, 1)
+    assert (f_full[-1] == f_prefix[-1]).all()
+    assert (f_full[:4] == f_prefix).all()
+    # under the old bias the pads (127 small-class drops) forced max_frac:
+    # the real trajectory of this large-pressured trace sits well below it
+    assert f_full[-1, 0] < 0.9
+
+
+def test_outcomes_unaffected_by_epoch_padding():
+    """Pad events are drop no-ops: real outcomes must match a static run
+    with gain=0 (which never moves any capacity)."""
+    tr = quantized_trace(np.random.default_rng(5), 300)
+    frozen = simulate(kiss1(e=64, gain=0.0, min_frac=0.5, max_frac=0.9), tr)
+    static = simulate(Scenario.kiss(1024.0, max_slots=96), tr)
+    assert (frozen.outcome == static.outcome).all()
+    assert (frozen.fracs == np.float32(0.8)).all()
+
+
+# ---------------------------------------------------------------------------
+# trajectory semantics
+# ---------------------------------------------------------------------------
+
+def test_frac_trajectories_bounded_and_shaped(rng):
+    tr = quantized_trace(rng, 600)
+    res = simulate(het4(), tr)
+    e = ASC.epoch_events
+    assert res.fracs.shape == (-(-len(tr) // e), 4)
+    assert (res.fracs >= ASC.min_frac).all()
+    assert (res.fracs <= ASC.max_frac).all()
+    s = res.summary()
+    assert s["n_epochs"] == res.fracs.shape[0]
+    assert s["frac_min"] >= ASC.min_frac and s["frac_max"] <= ASC.max_frac
+
+
+def test_unified_node_is_never_resized(rng):
+    tr = quantized_trace(rng, 600)
+    res = simulate(het4(), tr)
+    assert (res.fracs[:, 1] == np.float32(0.8)).all()   # the unified node
+    assert (res.fracs[:, 0] != np.float32(0.8)).any()   # a KiSS node moved
+    # and its inert 0.8 does not dilute the summary's frac stats
+    kiss_cols = res.fracs[:, [0, 2, 3]]
+    s = res.summary()
+    assert s["frac_min"] == float(kiss_cols.min())
+    assert s["frac_max"] == float(kiss_cols.max())
+    assert s["frac_final_mean"] == pytest.approx(float(kiss_cols[-1].mean()))
+
+
+def test_adapts_toward_pressured_class(rng):
+    """A large-heavy workload must pull the split below the 0.8 start —
+    the regression the paper's static 80-20 concedes in §7."""
+    tr = quantized_trace(rng, 600, large_frac=0.6)
+    res = simulate(kiss1(2048.0, e=128), tr)
+    assert res.fracs[-1, 0] < 0.8
+
+
+def test_static_result_exposes_single_epoch_view(rng):
+    tr = quantized_trace(rng, 200)
+    res = simulate(Scenario.kiss(1024.0, max_slots=64), tr)
+    assert res.epoch_fracs is None
+    assert res.fracs.shape == (1, 1) and res.fracs[0, 0] == np.float32(0.8)
+    s = res.summary()
+    assert s["n_epochs"] == 1
+    assert s["frac_final_mean"] == pytest.approx(0.8)
+
+
+# ---------------------------------------------------------------------------
+# sweep batching
+# ---------------------------------------------------------------------------
+
+def test_sweep_mixes_static_and_autoscaled(rng):
+    """Static lanes, autoscaled lanes sharing an epoch shape, and an
+    odd-epoch lane must all bucket correctly and match pointwise runs."""
+    tr = quantized_trace(rng, 450)
+    scs = [het4(asc=None), het4(), het4("size_aware"),
+           het4(asc=Autoscale(epoch_events=64)),
+           kiss1(e=128), Scenario.kiss(1024.0, max_slots=96)]
+    got = sweep(tr, scs)
+    for sc, g in zip(scs, got):
+        one = simulate(sc, tr)
+        assert (g.node == one.node).all()
+        assert (g.outcome == one.outcome).all()
+        assert (g.fracs == one.fracs).all()
+    ref = sweep(tr, scs, engine="ref")
+    for g, r in zip(got, ref):
+        assert (g.outcome == r.outcome).all()
+        assert (g.fracs == r.fracs).all()
+
+
+def test_sweep_vmaps_autoscale_params_as_data(rng):
+    """Same epoch shape, different min/max/gain: one vmapped program."""
+    tr = quantized_trace(rng, 400)
+    scs = [dataclasses.replace(kiss1(e=100), autoscale=Autoscale(
+               epoch_events=100, min_frac=mn, max_frac=mx, gain=g))
+           for mn, mx, g in ((0.4, 0.9, 0.1), (0.6, 0.8, 0.3),
+                             (0.5, 0.9, 0.0))]
+    for sc, g in zip(scs, sweep(tr, scs)):
+        one = simulate(sc, tr)
+        assert (g.outcome == one.outcome).all()
+        assert (g.fracs == one.fracs).all()
+
+
+# ---------------------------------------------------------------------------
+# the simulate_kiss_adaptive shim
+# ---------------------------------------------------------------------------
+
+def test_adaptive_shim_forwards_to_autoscaled_scenario(rng):
+    from repro.core import KissConfig
+    from repro.core.adaptive import AdaptiveConfig, simulate_kiss_adaptive
+    tr = quantized_trace(rng, 600)
+    cfg = AdaptiveConfig(base=KissConfig(total_mb=1024.0, max_slots=96),
+                         epoch_events=128, min_frac=0.5, max_frac=0.9)
+    with pytest.warns(DeprecationWarning, match="simulate_kiss_adaptive"):
+        res, fracs = simulate_kiss_adaptive(cfg, tr)
+    direct = simulate(
+        Scenario.kiss(1024.0, max_slots=96,
+                      autoscale=Autoscale(epoch_events=128, min_frac=0.5,
+                                          max_frac=0.9)), tr)
+    assert res.summary() == direct.per_class().summary()
+    assert fracs.ndim == 1 and (fracs == direct.fracs[:, 0]).all()
+    assert simulate_kiss_adaptive.__deprecated__.startswith("repro.sim")
+
+
+def test_adaptive_shim_rejects_per_pool_policy_overrides(rng):
+    from repro.core import KissConfig, Policy
+    from repro.core.adaptive import AdaptiveConfig, simulate_kiss_adaptive
+    tr = quantized_trace(rng, 50)
+    cfg = AdaptiveConfig(base=KissConfig(total_mb=1024.0,
+                                         small_policy=Policy.FREQ))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        with pytest.raises(ValueError, match="per-pool"):
+            simulate_kiss_adaptive(cfg, tr)
+        # a start outside the clip bounds used to be silently clipped at
+        # the first epoch; the scenario path rejects it, in legacy terms
+        bad = AdaptiveConfig(base=KissConfig(total_mb=1024.0,
+                                             small_frac=0.3))
+        with pytest.raises(ValueError, match="AdaptiveConfig"):
+            simulate_kiss_adaptive(bad, tr)
+
+
+# ---------------------------------------------------------------------------
+# Scenario validation
+# ---------------------------------------------------------------------------
+
+def test_autoscale_validation():
+    with pytest.raises(ValueError):
+        Autoscale(epoch_events=0)
+    with pytest.raises(ValueError):
+        Autoscale(min_frac=0.9, max_frac=0.5)
+    with pytest.raises(ValueError):
+        Autoscale(gain=-0.1)
+    with pytest.raises(ValueError, match="KiSS node"):
+        Scenario.baseline(1024.0, autoscale=Autoscale())
+    with pytest.raises(ValueError, match="autoscale"):
+        Scenario.kiss(1024.0, autoscale="yes please")
+    # a start outside [min_frac, max_frac] would be silently clamped (and
+    # pools resized) at the first epoch boundary
+    with pytest.raises(ValueError, match="min_frac"):
+        Scenario.kiss(1024.0, small_frac=0.95, autoscale=Autoscale())
+    # ...but only KiSS nodes are checked: a unified node's frac is inert
+    Scenario.cluster((1024.0, 2048.0), small_frac=(0.95, 0.8),
+                     unified=(True, False), autoscale=Autoscale())
+    # dict sugar normalizes, scenarios stay frozen + hashable
+    sc = Scenario.kiss(1024.0, autoscale={"epoch_events": 64})
+    assert sc.autoscale == Autoscale(epoch_events=64)
+    assert hash(sc) != hash(Scenario.kiss(1024.0))
+    assert sc.label.endswith("-autoscaled")

@@ -77,6 +77,24 @@ def test_scenario_constructors_normalize():
         k.max_slots = 7
 
 
+def test_scenario_accepts_numpy_arrays():
+    """Satellite: a numpy array for node_mb/small_frac is a per-node
+    sequence, not a scalar (it used to die in float(ndarray) or silently
+    broadcast a 1-element array)."""
+    sc = Scenario.cluster(np.array([1024.0, 6144.0]),
+                          small_frac=np.array([0.8, 0.5]))
+    assert sc.node_mb == (1024.0, 6144.0)
+    assert sc.small_frac == (0.8, 0.5)
+    direct = Scenario(node_mb=np.array([1024.0, 6144.0]),
+                      small_frac=np.array([0.8, 0.5]))
+    assert direct == sc
+    with pytest.raises(ValueError, match="small_frac"):
+        Scenario(node_mb=(1024.0, 2048.0), small_frac=np.array([0.8]))
+    # 0-d arrays are scalars: broadcast, don't die in len()
+    zd = Scenario(node_mb=(1024.0, 2048.0), small_frac=np.array(0.7))
+    assert zd.small_frac == (0.7, 0.7)
+
+
 def test_scenario_rejects_bad_specs():
     with pytest.raises(KeyError):
         Scenario.kiss(1024.0, replacement="no_such_policy")
@@ -315,6 +333,19 @@ def test_result_summary_stable_keys_and_views():
         # legacy projections still available
         assert res.as_cluster().cfg.n_nodes == sc.n_nodes
         assert res.as_continuum().cloud_offloads == res.cloud_offloads
+
+
+def test_summary_key_drift_raises_even_under_O(monkeypatch):
+    """Satellite: the benchmark-stable key contract is enforced with a
+    real RuntimeError, not a bare assert that `python -O` strips."""
+    import repro.sim.result as result_mod
+    tr = quantized_trace(np.random.default_rng(0), 50)
+    res = simulate(Scenario.kiss(1024.0, max_slots=32), tr)
+    assert tuple(res.summary()) == SUMMARY_KEYS
+    monkeypatch.setattr(result_mod, "SUMMARY_KEYS",
+                        SUMMARY_KEYS + ("made_up_key",))
+    with pytest.raises(RuntimeError, match="SUMMARY_KEYS"):
+        res.summary()
 
 
 def test_summary_exec_keys_match_legacy_simresult():

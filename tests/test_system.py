@@ -7,7 +7,7 @@ validation lives in benchmarks/)."""
 import numpy as np
 import pytest
 
-from repro.core import KissConfig, Policy
+from repro.core import Policy
 from repro.sim import Scenario, simulate, sweep
 from repro.workloads import edge_trace
 
@@ -40,14 +40,15 @@ def test_kiss_reduces_drops_when_most_constrained(trace):
 
 def test_adaptive_recovers_midband_drop_regression(trace):
     """Static 80-20 pays a drop penalty mid-band (the paper observes the
-    same trade-off at its low end, §7); the beyond-paper adaptive
-    partitioner must recover most of it while keeping the cold-start win."""
-    from repro.core.adaptive import AdaptiveConfig, simulate_kiss_adaptive
+    same trade-off at its low end, §7); the autoscaled scenario mode must
+    recover most of it while keeping the cold-start win."""
+    from repro.sim import Autoscale
     total = 6 * 1024.0
     base, kiss = _pair(trace, total)
-    ada, _ = simulate_kiss_adaptive(
-        AdaptiveConfig(base=KissConfig(total_mb=total, max_slots=512),
-                       epoch_events=512), trace)
+    ada = simulate(
+        Scenario.kiss(total, max_slots=512,
+                      autoscale=Autoscale(epoch_events=512)),
+        trace).per_class()
     assert ada.overall.drop_pct < kiss.overall.drop_pct * 0.7
     assert ada.overall.cold_start_pct < base.overall.cold_start_pct
 
