@@ -38,8 +38,13 @@ def _load(dirname: str) -> dict[str, dict]:
         return docs
     for name in sorted(os.listdir(dirname)):
         if name.startswith("BENCH_") and name.endswith(".json"):
-            with open(os.path.join(dirname, name)) as f:
-                docs[name] = json.load(f)
+            # a hand-edited or truncated-at-write file must not take the
+            # whole gate down — skip it loudly instead
+            try:
+                with open(os.path.join(dirname, name)) as f:
+                    docs[name] = json.load(f)
+            except (OSError, json.JSONDecodeError) as e:
+                print(f"WARNING: skipping unreadable {name}: {e}")
     return docs
 
 
@@ -75,6 +80,10 @@ def compare() -> int:
             continue
         bw, fw = bdoc.get("wall_s"), fdoc.get("wall_s")
         if not bw or not fw:
+            # a doc without wall_s (hand-edited, or pinned before the
+            # field existed) can't be judged — warn, never crash or fail
+            side = "baseline" if not bw else "fresh"
+            print(f"{name:42s} WARNING: no wall_s in {side} doc; skipped")
             continue
         rel = (fw - bw) / bw
         flag = ""

@@ -1,0 +1,95 @@
+"""Beyond-paper: fault tolerance under node churn.
+
+KiSS targets edge clusters where node churn is the norm; this benchmark
+quantifies what an outage actually costs.  An 8-node heterogeneous
+cluster takes a staggered two-node failure schedule (one small node, one
+big node, overlapping mid-trace windows), and EVERY registered routing
+policy runs the same trace with and without the schedule in ONE vmapped
+sweep — failure lanes carry their compiled up/recover masks as data.
+Reported per policy:
+
+* ``drop`` delta — requests the re-steered cluster could no longer place
+  (mask-aware policies absorb most of the outage; the gap between
+  policies is the re-steering quality);
+* ``cold`` delta — the *re-warm cost*: recovered nodes come back empty,
+  so previously warm functions cold-start again (``invalidated`` counts
+  the residents killed);
+* p95 end-to-end latency delta (drops are priced as cloud offloads).
+
+A final lane composes the schedule with node-scaled autoscaling
+(``Autoscale(spawn_drop_frac=...)``): the cluster spawns spare capacity
+under the outage-induced drop pressure and retires it afterwards.
+
+Returns ``(csv_lines, payload)`` with the stable-keyed summaries.
+"""
+from __future__ import annotations
+
+from repro.sim import Autoscale, Failures, Scenario, routing_policies, sweep
+
+from .common import csv_line, paper_trace, timed
+
+NODE_MB = (1024.0, 1024.0, 2048.0, 6144.0) * 2
+
+
+def failure_schedule(duration_s: float) -> Failures:
+    """Two staggered mid-trace outages: a small node and a big node."""
+    return Failures(windows=(
+        (0.25 * duration_s, 0.55 * duration_s, 0),   # 1 GB node
+        (0.40 * duration_s, 0.70 * duration_s, 3),   # 6 GB node
+    ))
+
+
+def run():
+    duration_s = 1800.0
+    tr = paper_trace(duration_s=duration_s)
+    fails = failure_schedule(duration_s)
+    names = routing_policies()
+
+    def lane(routing, failures=None, autoscale=None, tag=""):
+        return Scenario.cluster(NODE_MB, routing=routing, max_slots=256,
+                                failures=failures, autoscale=autoscale,
+                                name=f"{routing}{tag}")
+
+    scenarios = ([lane(n) for n in names]
+                 + [lane(n, failures=fails, tag="+fail") for n in names])
+    asc = Autoscale(epoch_events=2048, spawn_drop_frac=0.08,
+                    retire_drop_frac=0.02, init_active=6)
+    scenarios.append(lane("size_aware", failures=fails, autoscale=asc,
+                          tag="+fail+nodescale"))
+    results, dt = timed(sweep, tr, scenarios)
+    by_name = {r.scenario.name: r for r in results}
+
+    out, payload = [], {}
+    us = dt * 1e6 / (len(scenarios) * len(tr))
+    for n in names:
+        ok, bad = by_name[n], by_name[f"{n}+fail"]
+        s0, s1 = ok.summary(), bad.summary()
+        payload[f"failures_{n}"] = s1
+        payload[f"failures_{n}_baseline"] = s0
+        out.append(csv_line(
+            f"failures_{n}", us,
+            f"drop={s0['drop_pct']:.1f}%->{s1['drop_pct']:.1f}% "
+            f"cold={s0['cold_start_pct']:.1f}%->{s1['cold_start_pct']:.1f}%"
+            f" p95={s0['latency_p95_s']:.2f}s->{s1['latency_p95_s']:.2f}s "
+            f"downtime={s1['downtime_pct']:.1f}% "
+            f"rewarm_kills={s1['n_invalidated']}"))
+
+    # which policy re-steers best: smallest outage-induced p95 inflation
+    def p95_delta(n):
+        return (by_name[f"{n}+fail"].summary()["latency_p95_s"]
+                - by_name[n].summary()["latency_p95_s"])
+    best, worst = min(names, key=p95_delta), max(names, key=p95_delta)
+    out.append(csv_line(
+        "failures_best_resteer", 0.0,
+        f"{best} absorbs the outage best ({p95_delta(best):+.2f}s p95; "
+        f"worst {worst} {p95_delta(worst):+.2f}s)"))
+
+    ns = by_name["size_aware+fail+nodescale"]
+    s = ns.summary()
+    payload["failures_nodescale"] = s
+    out.append(csv_line(
+        "failures_nodescale", us,
+        f"drop={s['drop_pct']:.1f}% n_active="
+        f"{ns.n_active.min()}..{ns.n_active.max()} "
+        f"(spawns under outage pressure, retires after)"))
+    return out, payload

@@ -40,7 +40,7 @@ def _write_json(suite_key: str, doc: dict) -> None:
 
 
 def main() -> None:
-    from . import (cold_start, continuum_bench, drops, fairness,
+    from . import (cold_start, continuum_bench, drops, failures, fairness,
                    policy_independence, roofline, serving_bench, stress,
                    sweep_speed, workload_analysis)
 
@@ -54,6 +54,7 @@ def main() -> None:
         ("serving_integration", serving_bench.run),
         ("sweep_speed(beyond-paper)", sweep_speed.run),
         ("continuum+cluster+chains(beyond-paper)", continuum_bench.run),
+        ("failures(beyond-paper)", failures.run),
         ("roofline(dry-run)", roofline.run),
     ]
     filters = sys.argv[1:]

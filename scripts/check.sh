@@ -9,10 +9,12 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 # the public API surface must import (and the registries must hold the
 # four built-in routings plus cost_model) before anything else runs; the
-# autoscale smoke pins the Scenario knob end to end on a tiny trace
+# autoscale smoke pins the Scenario knob end to end on a tiny trace, and
+# the failure smoke pins outage -> re-steer -> empty-pool recovery
 python - <<'EOF'
 import numpy as np
-from repro.sim import Autoscale, Scenario, simulate, sweep, routing_policies
+from repro.sim import (Autoscale, Failures, Scenario, simulate, sweep,
+                       routing_policies)
 from repro.core.types import Trace
 assert {"sticky", "least_loaded", "size_aware", "power_of_two",
         "cost_model"} <= set(routing_policies()), routing_policies()
@@ -26,12 +28,21 @@ res = simulate(Scenario.kiss(256.0, max_slots=16,
                              autoscale=Autoscale(epoch_events=32)), tr)
 assert res.fracs.shape == (3, 1), res.fracs.shape
 assert res.summary()["n_epochs"] == 3
+fail = simulate(Scenario.cluster((256.0, 256.0), max_slots=16,
+                                 routing="least_loaded",
+                                 failures=((20.0, 50.0, 0),)), tr)
+assert fail.node_up.shape == (n, 2) and not fail.node_up.all()
+assert (fail.node[~fail.node_up[:, 0]] == 1).all()   # re-steered
+assert fail.n_invalidated > 0                        # recovery re-warms
+assert fail.summary()["downtime_pct"] > 0.0
 EOF
 exec python -m pytest -q -m "not slow" \
     tests/test_simulator.py \
     tests/test_sim_api.py \
     tests/test_cluster.py \
     tests/test_autoscale.py \
+    tests/test_failures.py \
     tests/test_continuum.py \
+    tests/test_compare.py \
     tests/test_workloads.py \
     "$@"

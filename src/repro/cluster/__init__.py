@@ -39,9 +39,10 @@ Cloud tier: a drop executes in the cloud at ``cloud_rtt_s`` plus the
 cold/warm execution time, cold with probability ``cloud_cold_prob``
 (pre-drawn, common random numbers across engines and sweep lanes).
 """
-from ..core.continuum import (Autoscale, ClusterConfig, RoutingPolicy,
-                              cloud_cold_draws, cluster_outcomes_ref,
-                              continuum_latencies, route_hashes)
+from ..core.continuum import (Autoscale, ClusterConfig, Failures,
+                              RoutingPolicy, cloud_cold_draws,
+                              cluster_outcomes_ref, continuum_latencies,
+                              route_hashes)
 from .engine import (ClusterEvent, check_step_mode, cluster_events,
                      init_cluster, simulate_cluster_jax,
                      simulate_cluster_ref, sweep_cluster)
@@ -49,8 +50,8 @@ from .metrics import ClusterResult, build_result
 from .presets import het16_cluster
 
 __all__ = [
-    "Autoscale", "ClusterConfig", "RoutingPolicy", "ClusterEvent",
-    "ClusterResult",
+    "Autoscale", "ClusterConfig", "Failures", "RoutingPolicy",
+    "ClusterEvent", "ClusterResult",
     "build_result", "check_step_mode", "cloud_cold_draws",
     "cluster_events", "cluster_outcomes_ref", "continuum_latencies",
     "het16_cluster", "init_cluster", "route_hashes",

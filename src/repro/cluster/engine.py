@@ -33,9 +33,20 @@ Autoscaled scenarios (``Scenario(..., autoscale=Autoscale(...))``) run the
 same per-event step inside an outer scan over fixed-length epochs
 (``_run_autoscale_impl``): each full epoch ends with every KiSS node
 re-splitting its small/large pools from the per-class pressure observed on
-that node (``pool_resize`` vmapped over the stacked pool axis).  The trace
-is padded to a whole number of epochs with guaranteed-drop no-op events
-that are masked out of the pressure signal and sliced off the outputs.
+that node (``pool_resize`` vmapped over the stacked pool axis), and — when
+node scaling is enabled — one node spawning or retiring from the
+cluster-wide drop fraction (the membership mask rides in the carry).  The
+trace is padded to a whole number of epochs with guaranteed-drop no-op
+events that are masked out of the pressure signal and sliced off the
+outputs.
+
+Failure schedules (``Scenario(..., failures=Failures(...))``) compile
+host-side into per-event ``up``/``recover`` bool[T, N] masks that ride
+into the scan as data (``_run_failures_impl``; shared verbatim with the
+oracle): routing sees ``RouteCtx.node_up``, a request routed to a down
+node drops to the cloud without touching any pool, and a recovering
+node's pools are cleared first (``_invalidate_nodes``) so the re-warm
+cost is observable.
 """
 from __future__ import annotations
 
@@ -47,8 +58,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.compat import deprecated
-from ..core.continuum import (Autoscale, ClusterConfig, cloud_cold_draws,
-                              cluster_outcomes_ref, route_hashes)
+from ..core.continuum import (Autoscale, ClusterConfig, Failures,
+                              cloud_cold_draws, cluster_outcomes_ref,
+                              route_hashes)
 from ..core.pool_jax import (Event, PoolState, init_pool, pool_resize,
                              pool_step)
 from ..core.registry import ROUTING, RouteCtx
@@ -99,13 +111,15 @@ def init_cluster(cfg: ClusterConfig) -> PoolState:
 
 
 def _route(routing: jax.Array, ev: ClusterEvent, free_t: jax.Array,
-           cap_t: jax.Array, cloud: jax.Array) -> jax.Array:
+           cap_t: jax.Array, cloud: jax.Array,
+           node_up: jax.Array) -> jax.Array:
     """The in-scan routing decision: a ``lax.switch`` over every policy in
     the routing registry (same pure functions the numpy oracle dispatches),
     indexed by the ``routing`` code carried as data."""
     ctx = RouteCtx(h1=ev.h1, h2=ev.h2, size=ev.size, cls=ev.cls,
                    warm=ev.warm, cold=ev.cold, free=free_t, cap=cap_t,
-                   cloud_rtt_s=cloud[0], cloud_cold_prob=cloud[1])
+                   cloud_rtt_s=cloud[0], cloud_cold_prob=cloud[1],
+                   node_up=node_up)
     branches = [
         (lambda _, fn=spec.fn: jnp.asarray(fn(jnp, ctx)).astype(jnp.int32))
         for spec in ROUTING.specs()
@@ -113,35 +127,61 @@ def _route(routing: jax.Array, ev: ClusterEvent, free_t: jax.Array,
     return jax.lax.switch(routing, branches, None)
 
 
+def _invalidate_nodes(pools: PoolState, mask_n: jax.Array, n_nodes: int):
+    """Kill every resident of the masked nodes (failure recovery / node
+    retirement): pools restart empty at their current capacity with a
+    reset GreedyDual clock — ``WarmPool.invalidate`` is the sequential
+    twin.  Returns ``(count i32[N] residents killed, cleared pools)``."""
+    cnt2 = jnp.sum(pools.valid, axis=-1).astype(jnp.int32)       # i32[2N]
+    cnt = jnp.where(mask_n, cnt2.reshape(n_nodes, 2).sum(axis=1), 0)
+    m2 = jnp.repeat(mask_n, 2)                                   # bool[2N]
+    pools = pools._replace(
+        valid=jnp.where(m2[:, None], False, pools.valid),
+        func_id=jnp.where(m2[:, None], jnp.int32(-1), pools.func_id),
+        free=jnp.where(m2, pools.capacity, pools.free),
+        clock=jnp.where(m2, jnp.float32(0.0), pools.clock))
+    return cnt, pools
+
+
 def _make_step(routing: jax.Array, unified: jax.Array, cloud: jax.Array,
                n_nodes: int, mode: str):
     """Build the per-event scan step (route, then step the routed pool) —
-    shared by the static whole-trace scan and the autoscaled epoch scan."""
+    shared by the static whole-trace scan, the failure-injected scan, and
+    the autoscaled epoch scan.  ``up_n`` (bool[N], optional) is the
+    live-node mask: routing policies read it via ``RouteCtx.node_up`` and
+    a request still routed to a down node drops to the cloud without
+    touching any pool (down pools are frozen)."""
     n = n_nodes
     tree = jax.tree_util.tree_map
+    all_up = jnp.ones((n,), bool)
 
-    def step(pools, ev):
+    def step(pools, ev, up_n=None):
         free2 = pools.free.reshape(n, 2)
         cap2 = pools.capacity.reshape(n, 2)
         tgt = jnp.where(unified, 0, ev.cls)          # i32[N] pool per node
         lanes = jnp.arange(n)
         node = _route(routing, ev, free2[lanes, tgt], cap2[lanes, tgt],
-                      cloud)
+                      cloud, all_up if up_n is None else up_n)
+        ok = jnp.bool_(True) if up_n is None else up_n[node]
         p = node * 2 + tgt[node]
         core_ev = Event(ev.t, ev.func_id, ev.size, ev.cls, ev.warm, ev.cold)
         if mode == "gather":
             one = tree(lambda a: a[p], pools)
             new_one, outcome = pool_step(one, core_ev)
+            if up_n is not None:
+                new_one = tree(lambda nw, old: jnp.where(ok, nw, old),
+                               new_one, one)
             pools = tree(lambda a, b: a.at[p].set(b), pools, new_one)
         else:  # "vmap": step every pool, keep only the routed one
             stepped, outs = jax.vmap(pool_step, in_axes=(0, None))(
                 pools, core_ev)
-            sel = jnp.arange(2 * n) == p
+            sel = (jnp.arange(2 * n) == p) & ok
             pools = tree(
                 lambda a, b: jnp.where(
                     sel.reshape((-1,) + (1,) * (a.ndim - 1)), b, a),
                 pools, stepped)
             outcome = outs[p]
+        outcome = jnp.where(ok, outcome, DROP)
         return pools, (node, outcome)
 
     return step
@@ -156,47 +196,92 @@ def _run_cluster_impl(pools: PoolState, events: ClusterEvent,
     return nodes, outcomes
 
 
+def _run_failures_impl(pools: PoolState, events: ClusterEvent,
+                       up: jax.Array, recover: jax.Array,
+                       routing: jax.Array, unified: jax.Array,
+                       cloud: jax.Array, n_nodes: int, mode: str):
+    """The failure-injected trace in one scan: ``up``/``recover`` are the
+    bool[T, N] masks compiled host-side from the ``Failures`` schedule
+    (shared verbatim with the oracle).  Each event first clears the pools
+    of any node recovering at it (counting the invalidated residents —
+    the re-warm debt), then routes with ``RouteCtx.node_up = up[t]``.
+    Returns (node i32[T], outcome i32[T], invalidated i32[N])."""
+    step = _make_step(routing, unified, cloud, n_nodes, mode)
+
+    def s(carry, x):
+        pools, inval = carry
+        ev, u, r = x
+        cnt, pools = _invalidate_nodes(pools, r, n_nodes)
+        pools, (node, outcome) = step(pools, ev, u)
+        return (pools, inval + cnt), (node, outcome)
+
+    (_, inval), (nodes, outcomes) = jax.lax.scan(
+        s, (pools, jnp.zeros((n_nodes,), jnp.int32)), (events, up, recover))
+    return nodes, outcomes, inval
+
+
 def _run_autoscale_impl(pools: PoolState, events: ClusterEvent,
-                        valid: jax.Array, routing: jax.Array,
-                        unified: jax.Array, cloud: jax.Array,
-                        frac: jax.Array, node_mb: jax.Array, asc: jax.Array,
-                        n_nodes: int, mode: str):
+                        valid: jax.Array, up: jax.Array, recover: jax.Array,
+                        routing: jax.Array, unified: jax.Array,
+                        cloud: jax.Array, frac: jax.Array,
+                        node_mb: jax.Array, asc: jax.Array,
+                        active0: jax.Array, n_nodes: int, mode: str,
+                        masked: bool = True):
     """The autoscaled trace: an outer scan over epochs, the existing event
-    scan inside each epoch, and a per-node re-split between epochs.
+    scan inside each epoch, and a per-node re-split plus a node
+    spawn/retire decision between epochs.
 
     ``events`` leaves are shaped ``[E, epoch_events, ...]`` (trace padded
     with guaranteed-drop no-ops); ``valid`` is f32[E, e] marking real
     events.  Pad events never touch pool state (a drop is a no-op
     transition) and are masked out of the pressure signal here — the
     padding bias that skewed the legacy ``core.adaptive`` split decision
-    cannot arise.  ``frac`` is the running f32[N] small-pool fraction,
-    ``asc`` packs (min_frac, max_frac, gain) as data so sweeps can vmap
-    over them.  Returns (node i32[E, e], outcome i32[E, e], fracs
-    f32[E, N]).
+    cannot arise.  ``up``/``recover`` are the epoch-shaped bool[E, e, N]
+    failure masks; ``masked`` is static so a scenario *without* a failure
+    schedule passes ``None`` masks and compiles a program with zero
+    per-event invalidation work (node scaling alone only reads the
+    membership carry — on all-up masks the masked program computes the
+    identical results, just slower).  ``frac`` is the running f32[N]
+    small-pool fraction, ``asc`` packs (min_frac, max_frac, gain,
+    spawn_drop_frac, retire_drop_frac) as data so sweeps can vmap over
+    them (+/-inf thresholds = node scaling off), and ``active0`` (bool[N])
+    is the starting membership.  Returns (node i32[E, e], outcome
+    i32[E, e], fracs f32[E, N], actives bool[E, N], invalidated i32[N]).
     """
     step = _make_step(routing, unified, cloud, n_nodes, mode)
     tree = jax.tree_util.tree_map
-    mn, mx, gain = asc[0], asc[1], asc[2]
+    n = n_nodes
+    mn, mx, gain, spawn_th, retire_th = (asc[0], asc[1], asc[2], asc[3],
+                                         asc[4])
     pool_unified = jnp.repeat(unified, 2)            # bool[2N]
 
     def epoch(carry, inp):
-        pools, frac = carry
-        evs, val = inp
+        pools, frac, active, inval = carry
+        evs, val = inp[0], inp[1]
 
         def inner(c, x):
-            pools, press = c
-            ev, v = x
-            pools, (node, outcome) = step(pools, ev)
+            pools, press, dropw, inval = c
+            if masked:
+                ev, v, u, r = x
+                cnt, pools = _invalidate_nodes(pools, r, n)
+                inval = inval + cnt
+                eff = u & active
+            else:
+                ev, v = x
+                eff = active
+            pools, (node, outcome) = step(pools, ev, eff)
             # pressure = misses + 2x drops, per (routed node, size class);
             # pad events carry v == 0 and contribute nothing
             w = v * jnp.where(outcome == MISS, 1.0,
                               jnp.where(outcome == DROP, 2.0, 0.0))
             press = press.at[node, ev.cls].add(w)
-            return (pools, press), (node, outcome)
+            dropw = dropw + v * jnp.where(outcome == DROP, 1.0, 0.0)
+            return (pools, press, dropw, inval), (node, outcome)
 
-        (pools, press), (nodes, outcomes) = jax.lax.scan(
-            inner, (pools, jnp.zeros((n_nodes, 2), jnp.float32)),
-            (evs, val))
+        (pools, press, dropw, inval), (nodes, outcomes) = jax.lax.scan(
+            inner, (pools, jnp.zeros((n, 2), jnp.float32),
+                    jnp.float32(0.0), inval),
+            inp)
         press_s, press_l = press[:, 0], press[:, 1]
         tot = press_s + press_l
         delta = jnp.where(tot > 0,
@@ -219,18 +304,40 @@ def _run_autoscale_impl(pools: PoolState, events: ClusterEvent,
             lambda r, o: jnp.where(
                 keep.reshape((-1,) + (1,) * (r.ndim - 1)), r, o),
             resized, pools)
-        return (pools, new_frac), (nodes, outcomes, new_frac)
+        # node add/remove from the cluster-wide drop fraction (post-resize
+        # residency decides "emptiest"; at most one node moves per epoch)
+        drop_frac = dropw / jnp.maximum(jnp.sum(val), jnp.float32(1.0))
+        n_active = jnp.sum(active.astype(jnp.int32))
+        can_spawn = is_full & (drop_frac > spawn_th) & (n_active < n)
+        can_retire = (is_full & ~can_spawn & (drop_frac < retire_th)
+                      & (n_active > 1))
+        used_n = (pools.capacity - pools.free).reshape(n, 2).sum(axis=1)
+        cand_spawn = jnp.argmax(~active)
+        cand_retire = jnp.argmin(
+            jnp.where(active, used_n, jnp.float32(jnp.inf)))
+        new_active = jnp.where(
+            can_spawn, active.at[cand_spawn].set(True),
+            jnp.where(can_retire, active.at[cand_retire].set(False),
+                      active))
+        retire_mask = jnp.zeros((n,), bool).at[cand_retire].set(can_retire)
+        cnt, pools = _invalidate_nodes(pools, retire_mask, n)
+        return ((pools, new_frac, new_active, inval + cnt),
+                (nodes, outcomes, new_frac, new_active))
 
-    _, (nodes, outcomes, fracs) = jax.lax.scan(epoch, (pools, frac),
-                                               (events, valid))
-    return nodes, outcomes, fracs
+    xs = (events, valid, up, recover) if masked else (events, valid)
+    (_, _, _, inval), (nodes, outcomes, fracs, actives) = jax.lax.scan(
+        epoch, (pools, frac, active0, jnp.zeros((n,), jnp.int32)), xs)
+    return nodes, outcomes, fracs, actives, inval
 
 
 _run_cluster = jax.jit(_run_cluster_impl,
                        static_argnames=("n_nodes", "mode"))
 
+_run_failures = jax.jit(_run_failures_impl,
+                        static_argnames=("n_nodes", "mode"))
+
 _run_autoscale = jax.jit(_run_autoscale_impl,
-                         static_argnames=("n_nodes", "mode"))
+                         static_argnames=("n_nodes", "mode", "masked"))
 
 
 @functools.lru_cache(maxsize=None)
@@ -244,13 +351,27 @@ def _sweep_runner(n_nodes: int, mode: str):
 
 
 @functools.lru_cache(maxsize=None)
-def _sweep_autoscale_runner(n_nodes: int, mode: str):
-    """Autoscale analogue of ``_sweep_runner``: configs (pools, routing,
-    unified, cloud, frac, node_mb, asc) vmap as data; the epoch grid and
-    validity mask are shared across lanes."""
+def _sweep_failures_runner(n_nodes: int, mode: str):
+    """Failure analogue of ``_sweep_runner``: every lane carries its own
+    compiled up/recover masks as data (same [T, N] shape — lanes bucket by
+    mask shape), so mixed failure schedules sweep in one program."""
     return jax.jit(jax.vmap(
-        functools.partial(_run_autoscale_impl, n_nodes=n_nodes, mode=mode),
-        in_axes=(0, None, None, 0, 0, 0, 0, 0, 0)))
+        functools.partial(_run_failures_impl, n_nodes=n_nodes, mode=mode),
+        in_axes=(0, None, 0, 0, 0, 0, 0)))
+
+
+@functools.lru_cache(maxsize=None)
+def _sweep_autoscale_runner(n_nodes: int, mode: str, masked: bool):
+    """Autoscale analogue of ``_sweep_runner``: configs (pools, masks,
+    routing, unified, cloud, frac, node_mb, asc thresholds, active0) vmap
+    as data; the epoch grid and validity mask are shared across lanes.
+    ``masked`` lanes carry per-lane failure masks; unmasked lanes pass
+    ``None`` masks and compile the cheap no-invalidation program."""
+    return jax.jit(jax.vmap(
+        functools.partial(_run_autoscale_impl, n_nodes=n_nodes, mode=mode,
+                          masked=masked),
+        in_axes=(0, None, None, 0 if masked else None,
+                 0 if masked else None, 0, 0, 0, 0, 0, 0, 0)))
 
 
 def _epoch_grid(events: ClusterEvent, n_events: int, epoch_events: int,
@@ -283,11 +404,44 @@ def _epoch_grid(events: ClusterEvent, n_events: int, epoch_events: int,
 
 def _autoscale_inputs(cfg: ClusterConfig, asc: Autoscale):
     """The per-config data the autoscaled scan consumes beyond the static
-    scan's (routing, unified, cloud): initial fracs, node capacities, and
-    the (min_frac, max_frac, gain) triple — all f32, all vmappable."""
+    scan's (routing, unified, cloud): initial fracs, node capacities, the
+    (min_frac, max_frac, gain, spawn, retire) vector (+/-inf thresholds
+    encode "node scaling off" — the decision arithmetic runs identically
+    and never fires), and the initial membership — all vmappable data."""
+    n = cfg.n_nodes
+    spawn = asc.spawn_drop_frac if asc.node_scaled else np.inf
+    retire = asc.retire_drop_frac if asc.node_scaled else -np.inf
+    k = asc.init_active if asc.init_active is not None else n
     return (jnp.asarray(cfg.small_frac, jnp.float32),
             jnp.asarray(cfg.node_mb, jnp.float32),
-            jnp.asarray([asc.min_frac, asc.max_frac, asc.gain], jnp.float32))
+            jnp.asarray([asc.min_frac, asc.max_frac, asc.gain,
+                         spawn, retire], jnp.float32),
+            jnp.asarray(np.arange(n) < k, bool))
+
+
+def _failure_masks(failures: Failures | None, trace: Trace, n_nodes: int):
+    """Per-event up/recover bool[T, N] masks — all-up/none when the
+    scenario has no failure schedule (the masked scan is arithmetic-
+    identical to the unmasked one on an all-up mask)."""
+    if failures is None:
+        t = len(trace)
+        return (np.ones((t, n_nodes), bool),
+                np.zeros((t, n_nodes), bool))
+    return failures.masks(np.asarray(trace.t), n_nodes)
+
+
+def _mask_grid(mask: np.ndarray, n_events: int, epoch_events: int,
+               fill: bool):
+    """Pad a per-event [T, N] mask to whole epochs and reshape to
+    [E, e, N] — the mask analogue of :func:`_epoch_grid` (pad rows are
+    all-up / never-recovering so pad events stay no-ops)."""
+    e = epoch_events
+    n_epochs = -(-n_events // e)
+    pad = n_epochs * e - n_events
+    if pad:
+        mask = np.concatenate(
+            [mask, np.full((pad, mask.shape[1]), fill, bool)])
+    return jnp.asarray(mask.reshape(n_epochs, e, mask.shape[1]))
 
 
 def _cloud_vec(cfg: ClusterConfig) -> jnp.ndarray:
@@ -359,67 +513,167 @@ def _drop_size(cfg: ClusterConfig) -> float:
     return float(max(cfg.node_mb)) * 10.0
 
 
+def _simulate_cluster_failures_jax(
+        cfg: ClusterConfig, failures: Failures, trace: Trace,
+        rng_seed: int = 0, mode: str = "gather"
+        ) -> tuple[ClusterResult, dict]:
+    """Failure-injected twin of :func:`_simulate_cluster_jax`: returns
+    (ClusterResult, extras) with the compiled ``node_up`` mask and the
+    per-node ``invalidated`` resident counts."""
+    check_step_mode(mode)
+    up, recover = _failure_masks(failures, trace, cfg.n_nodes)
+    node, outcome, inval = _run_failures(
+        init_cluster(cfg), cluster_events(trace, cfg.n_nodes),
+        jnp.asarray(up), jnp.asarray(recover), jnp.int32(int(cfg.routing)),
+        jnp.asarray(cfg.unified, bool), _cloud_vec(cfg),
+        n_nodes=cfg.n_nodes, mode=mode)
+    cloud_cold = cloud_cold_draws(len(trace), cfg.cloud_cold_prob, rng_seed)
+    return (build_result(cfg, trace, np.asarray(node), np.asarray(outcome),
+                         cloud_cold),
+            {"invalidated": np.asarray(inval, np.int64), "node_up": up})
+
+
+def _simulate_cluster_failures_ref(
+        cfg: ClusterConfig, failures: Failures, trace: Trace,
+        rng_seed: int = 0) -> tuple[ClusterResult, dict]:
+    node, outcome, extras = cluster_outcomes_ref(cfg, trace,
+                                                 failures=failures)
+    cloud_cold = cloud_cold_draws(len(trace), cfg.cloud_cold_prob, rng_seed)
+    return build_result(cfg, trace, node, outcome, cloud_cold), extras
+
+
+def _sweep_cluster_failures(
+        trace: Trace, configs, failures, rng_seed: int = 0,
+        mode: str = "gather") -> list[tuple[ClusterResult, dict]]:
+    """Vmapped sweep over failure-injected configs: each lane's compiled
+    up/recover masks ride as data (lanes bucket by mask shape, which the
+    shared trace and ``n_nodes`` pin)."""
+    check_step_mode(mode)
+    failures = list(failures)
+    configs, n, pools, routing, unified, cloud = _stack_configs(
+        configs, "failure sweep")
+    if len(configs) != len(failures):
+        raise ValueError("failure sweep: need one Failures per config")
+    masks = [_failure_masks(f, trace, n) for f in failures]
+    up = np.stack([m[0] for m in masks])
+    recover = np.stack([m[1] for m in masks])
+    nodes, outcomes, invals = _sweep_failures_runner(n, mode)(
+        pools, cluster_events(trace, n), jnp.asarray(up),
+        jnp.asarray(recover), routing, unified, cloud)
+    nodes, outcomes = np.asarray(nodes), np.asarray(outcomes)
+    invals = np.asarray(invals, np.int64)
+    return [(build_result(c, trace, nodes[g], outcomes[g],
+                          cloud_cold_draws(len(trace), c.cloud_cold_prob,
+                                           rng_seed)),
+             {"invalidated": invals[g], "node_up": up[g]})
+            for g, c in enumerate(configs)]
+
+
+def _autoscale_extras(actives, inval, up, failures) -> dict:
+    return {"invalidated": np.asarray(inval, np.int64),
+            "node_up": up if failures is not None else None,
+            "active": np.asarray(actives, bool)}
+
+
 def _simulate_cluster_autoscale_jax(
         cfg: ClusterConfig, asc: Autoscale, trace: Trace, rng_seed: int = 0,
-        mode: str = "gather") -> tuple[ClusterResult, np.ndarray]:
+        mode: str = "gather", failures: Failures | None = None
+        ) -> tuple[ClusterResult, np.ndarray, dict]:
     """Autoscaled twin of :func:`_simulate_cluster_jax`: returns
-    (ClusterResult, fracs f32[E, N])."""
+    (ClusterResult, fracs f32[E, N], extras) — extras carries the
+    membership trajectory (``active`` bool[E, N]), per-node
+    ``invalidated`` resident counts, and the ``node_up`` failure mask
+    (None without a schedule)."""
     check_step_mode(mode)
     n_events = len(trace)
+    e = asc.epoch_events
     epochs, valid = _epoch_grid(cluster_events(trace, cfg.n_nodes),
-                                n_events, asc.epoch_events, _drop_size(cfg))
-    frac0, node_mb, asc_vec = _autoscale_inputs(cfg, asc)
-    node, outcome, fracs = _run_autoscale(
-        init_cluster(cfg), epochs, valid, jnp.int32(int(cfg.routing)),
-        jnp.asarray(cfg.unified, bool), _cloud_vec(cfg), frac0, node_mb,
-        asc_vec, n_nodes=cfg.n_nodes, mode=mode)
+                                n_events, e, _drop_size(cfg))
+    masked = failures is not None
+    up = up_g = rec_g = None
+    if masked:
+        up, recover = _failure_masks(failures, trace, cfg.n_nodes)
+        up_g = _mask_grid(up, n_events, e, True)
+        rec_g = _mask_grid(recover, n_events, e, False)
+    frac0, node_mb, asc_vec, active0 = _autoscale_inputs(cfg, asc)
+    node, outcome, fracs, actives, inval = _run_autoscale(
+        init_cluster(cfg), epochs, valid, up_g, rec_g,
+        jnp.int32(int(cfg.routing)), jnp.asarray(cfg.unified, bool),
+        _cloud_vec(cfg), frac0, node_mb, asc_vec, active0,
+        n_nodes=cfg.n_nodes, mode=mode, masked=masked)
     node = np.asarray(node).reshape(-1)[:n_events]
     outcome = np.asarray(outcome).reshape(-1)[:n_events]
     cloud_cold = cloud_cold_draws(n_events, cfg.cloud_cold_prob, rng_seed)
     return (build_result(cfg, trace, node, outcome, cloud_cold),
-            np.asarray(fracs))
+            np.asarray(fracs), _autoscale_extras(actives, inval, up,
+                                                 failures))
 
 
 def _simulate_cluster_autoscale_ref(
         cfg: ClusterConfig, asc: Autoscale, trace: Trace,
-        rng_seed: int = 0) -> tuple[ClusterResult, np.ndarray]:
-    node, outcome, fracs = cluster_outcomes_ref(cfg, trace, autoscale=asc)
+        rng_seed: int = 0, failures: Failures | None = None
+        ) -> tuple[ClusterResult, np.ndarray, dict]:
+    node, outcome, fracs, extras = cluster_outcomes_ref(
+        cfg, trace, autoscale=asc, failures=failures)
     cloud_cold = cloud_cold_draws(len(trace), cfg.cloud_cold_prob, rng_seed)
-    return build_result(cfg, trace, node, outcome, cloud_cold), fracs
+    return build_result(cfg, trace, node, outcome, cloud_cold), fracs, extras
 
 
 def _sweep_cluster_autoscale(
-        trace: Trace, configs, autoscales, rng_seed: int = 0,
-        mode: str = "gather") -> list[tuple[ClusterResult, np.ndarray]]:
+        trace: Trace, configs, autoscales, failures=None, rng_seed: int = 0,
+        mode: str = "gather"
+        ) -> list[tuple[ClusterResult, np.ndarray, dict]]:
     """Vmapped sweep over autoscaled configs.  All configs must share
     ``n_nodes``/``max_slots`` AND all autoscales ``epoch_events`` (the
-    stacked shapes); min/max/gain, fracs and capacities vary as data."""
+    stacked shapes); min/max/gain, node-scaling thresholds, initial
+    membership, fracs, capacities, and per-lane failure masks vary as
+    data."""
     check_step_mode(mode)
     autoscales = list(autoscales)
     configs, n, pools, routing, unified, cloud = _stack_configs(
         configs, "autoscale sweep")
     if len(configs) != len(autoscales):
         raise ValueError("autoscale sweep: need one Autoscale per config")
+    failures = (list(failures) if failures is not None
+                else [None] * len(configs))
+    if len(configs) != len(failures):
+        raise ValueError("autoscale sweep: need one Failures (or None) "
+                         "per config")
     e = autoscales[0].epoch_events
     if any(a.epoch_events != e for a in autoscales):
         raise ValueError("autoscale sweep: configs must share epoch_events"
                          " (sweep() buckets mixed epoch shapes for you)")
     per_cfg = [_autoscale_inputs(c, a) for c, a in zip(configs, autoscales)]
-    frac0, node_mb, asc_vec = (jnp.stack([p[i] for p in per_cfg])
-                               for i in range(3))
+    frac0, node_mb, asc_vec, active0 = (jnp.stack([p[i] for p in per_cfg])
+                                        for i in range(4))
     n_events = len(trace)
     drop_size = max(_drop_size(c) for c in configs)
     epochs, valid = _epoch_grid(cluster_events(trace, n), n_events, e,
                                 drop_size)
-    nodes, outcomes, fracs = _sweep_autoscale_runner(n, mode)(
-        pools, epochs, valid, routing, unified, cloud, frac0, node_mb,
-        asc_vec)
+    # any lane with a schedule forces the masked program for the group
+    # (lanes without one ride along on all-up masks — same arithmetic);
+    # repro.sim.sweep buckets failure-free lanes separately
+    masked = any(f is not None for f in failures)
+    up = [None] * len(configs)
+    up_g = rec_g = None
+    if masked:
+        masks = [_failure_masks(f, trace, n) for f in failures]
+        up = np.stack([m[0] for m in masks])
+        up_g = jnp.stack([_mask_grid(m[0], n_events, e, True)
+                          for m in masks])
+        rec_g = jnp.stack([_mask_grid(m[1], n_events, e, False)
+                           for m in masks])
+    nodes, outcomes, fracs, actives, invals = _sweep_autoscale_runner(
+        n, mode, masked)(pools, epochs, valid, up_g, rec_g, routing,
+                         unified, cloud, frac0, node_mb, asc_vec, active0)
     nodes = np.asarray(nodes).reshape(len(configs), -1)[:, :n_events]
     outcomes = np.asarray(outcomes).reshape(len(configs), -1)[:, :n_events]
     fracs = np.asarray(fracs)
     return [(build_result(c, trace, nodes[g], outcomes[g],
                           cloud_cold_draws(n_events, c.cloud_cold_prob,
-                                           rng_seed)), fracs[g])
+                                           rng_seed)),
+             fracs[g], _autoscale_extras(actives[g], invals[g], up[g],
+                                         failures[g]))
             for g, c in enumerate(configs)]
 
 

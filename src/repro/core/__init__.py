@@ -28,11 +28,11 @@ from .simulator_jax import (metrics_to_result, simulate_baseline_jax,
                             simulate_kiss_jax, sweep_baseline, sweep_kiss)
 from .analyzer import WorkloadProfile, analyze, classify
 from .continuum import (Autoscale, ClusterConfig, ContinuumConfig,
-                        ContinuumResult, RoutingPolicy,
+                        ContinuumResult, Failures, RoutingPolicy,
                         cluster_outcomes_ref, simulate_continuum)
 
 __all__ = [
-    "Autoscale",
+    "Autoscale", "Failures",
     "LARGE", "SMALL", "ClassMetrics", "ClusterConfig", "KissConfig",
     "Policy", "PolicySpec", "PoolConfig", "REPLACEMENT", "ROUTING",
     "RouteCtx", "RoutingPolicy", "SimResult", "SlotStats", "Trace",

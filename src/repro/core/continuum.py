@@ -77,15 +77,32 @@ class Autoscale:
     signal (the historical ``core.adaptive`` loop let its padded
     guaranteed-drop events bias the final split).
 
+    **Node add/remove** (``spawn_drop_frac`` set): the autoscaler also
+    carries a per-node *active* mask.  A full epoch whose cluster-wide
+    drop fraction exceeds ``spawn_drop_frac`` spawns the lowest-index
+    inactive node (empty pools — it joins cold); one whose drop fraction
+    falls below ``retire_drop_frac`` retires the emptiest active node
+    (lowest resident MB; its residents are invalidated, counted in the
+    ``invalidated`` metric).  At most one node moves per epoch and the
+    cluster never shrinks below one active node.  ``init_active`` starts
+    only the first k nodes (default: all).  Inactive nodes are invisible
+    to routing (``RouteCtx.node_up``) and requests a mask-blind policy
+    still sends there drop to the cloud.
+
     Frozen and hashable: rides inside :class:`repro.sim.Scenario`, and
-    ``min_frac``/``max_frac``/``gain`` are vmapped as data in sweeps
-    (scenarios sharing ``epoch_events`` batch into one program).
+    ``min_frac``/``max_frac``/``gain`` plus the spawn/retire thresholds
+    are vmapped as data in sweeps (scenarios sharing ``epoch_events``
+    batch into one program).
     """
 
     epoch_events: int = 512
     min_frac: float = 0.5
     max_frac: float = 0.9
     gain: float = 0.15   # fraction step per epoch toward the pressured class
+    # -- node add/remove (None = fixed membership) -------------------------
+    spawn_drop_frac: float | None = None  # spawn when epoch drop frac >
+    retire_drop_frac: float = 0.0         # retire emptiest when drop frac <
+    init_active: int | None = None        # start with the first k nodes only
 
     def __post_init__(self):
         if int(self.epoch_events) != self.epoch_events or \
@@ -96,6 +113,99 @@ class Autoscale:
             raise ValueError("need 0 < min_frac <= max_frac < 1")
         if self.gain < 0.0:
             raise ValueError("gain must be >= 0")
+        if self.spawn_drop_frac is None:
+            if self.retire_drop_frac != 0.0 or self.init_active is not None:
+                raise ValueError(
+                    "retire_drop_frac/init_active require node scaling — "
+                    "set spawn_drop_frac to enable it")
+        else:
+            if not 0.0 < self.spawn_drop_frac <= 1.0:
+                raise ValueError("spawn_drop_frac must be in (0, 1]")
+            if not 0.0 <= self.retire_drop_frac < self.spawn_drop_frac:
+                raise ValueError(
+                    "need 0 <= retire_drop_frac < spawn_drop_frac")
+            if self.init_active is not None:
+                if int(self.init_active) != self.init_active or \
+                        self.init_active < 1:
+                    raise ValueError("init_active must be a positive "
+                                     "integer (or None for all nodes)")
+                object.__setattr__(self, "init_active",
+                                   int(self.init_active))
+
+    @property
+    def node_scaled(self) -> bool:
+        """Whether this autoscaler also spawns/retires whole nodes."""
+        return self.spawn_drop_frac is not None
+
+
+@dataclasses.dataclass(frozen=True)
+class Failures:
+    """A node-failure schedule: ``(t_down, t_up, node)`` outage windows.
+
+    A node is *down* for every event with ``t_down <= t < t_up``: its
+    pools are frozen (no event touches them), routing policies see it
+    masked out of ``RouteCtx.node_up``, and any request still routed to it
+    drops to the cloud tier.  At the first event at/after ``t_up`` the
+    node *recovers with empty pools* — its residents are invalidated (the
+    container state died with the node) so the metrics expose the re-warm
+    cost: previously-warm functions cold-start again.
+
+    The schedule is compiled host-side (:meth:`masks`) into per-event
+    ``up``/``recover`` boolean masks that both engines consume verbatim,
+    so the JAX scan and the numpy oracle see bit-identical mask
+    trajectories by construction.  Frozen and hashable: rides inside
+    :class:`repro.sim.Scenario`; sweep lanes sharing a trace stack their
+    masks and vmap them as data.
+    """
+
+    windows: tuple[tuple[float, float, int], ...]
+
+    def __post_init__(self):
+        wins = []
+        for w in self.windows:
+            if len(w) != 3:
+                raise ValueError(
+                    f"each failure window must be (t_down, t_up, node), "
+                    f"got {w!r}")
+            t_down, t_up, node = float(w[0]), float(w[1]), int(w[2])
+            if not t_down < t_up:
+                raise ValueError(
+                    f"failure window needs t_down < t_up, got {w!r}")
+            if node < 0:
+                raise ValueError(f"failure window node must be >= 0: {w!r}")
+            wins.append((t_down, t_up, node))
+        if not wins:
+            raise ValueError("Failures needs at least one window")
+        object.__setattr__(self, "windows", tuple(wins))
+
+    @property
+    def max_node(self) -> int:
+        return max(n for _, _, n in self.windows)
+
+    def masks(self, t: np.ndarray, n_nodes: int):
+        """Compile the schedule against event times ``t`` (sorted).
+
+        Returns ``(up, recover)``, both bool[T, N]: ``up[i, n]`` is
+        whether node ``n`` is live at event ``i``; ``recover[i, n]`` marks
+        the first event at/after an outage's end — the event *before*
+        which the node's pools are invalidated.  A window that opens and
+        closes entirely between two events still invalidates (the node
+        did die), and overlapping windows only fire the clear once the
+        node is actually back up.
+        """
+        t = np.asarray(t)
+        up = np.ones((len(t), n_nodes), bool)
+        recover = np.zeros((len(t), n_nodes), bool)
+        for t_down, t_up, node in self.windows:
+            if node >= n_nodes:
+                raise ValueError(
+                    f"failure window node {node} out of range for "
+                    f"{n_nodes} nodes")
+            up[(t >= t_down) & (t < t_up), node] = False
+            after = np.nonzero(t >= t_up)[0]
+            if len(after):
+                recover[after[0], node] = True
+        return up, recover & up
 
 
 @dataclasses.dataclass(frozen=True)
@@ -207,18 +317,26 @@ def continuum_latencies(trace: Trace, outcome: np.ndarray,
 # --------------------------------------------------------------------------
 
 def cluster_outcomes_ref(cfg: ClusterConfig, trace: Trace,
-                         autoscale: Autoscale | None = None):
+                         autoscale: Autoscale | None = None,
+                         failures: "Failures | None" = None):
     """Sequential oracle for the cluster: returns ``(node, outcome)`` as
-    i32[T] arrays (outcome: 0 hit, 1 miss, 2 drop/offload) — plus a
-    per-epoch ``fracs`` f32[E, N] array when ``autoscale`` is given.
+    i32[T] arrays (outcome: 0 hit, 1 miss, 2 drop/offload).  With
+    ``failures`` an *extras* dict is appended; with ``autoscale`` a
+    per-epoch ``fracs`` f32[E, N] array and the extras dict are appended
+    (``(node, outcome, fracs, extras)``).  ``extras`` carries
+    ``invalidated`` (i64[N] residents killed by recovery/retirement),
+    ``node_up`` (the compiled bool[T, N] failure mask, or None) and — on
+    the autoscaled path — ``active`` (bool[E, N] membership trajectory).
 
     The routing decision calls the registered policy function with numpy
     float32 inputs — the same pure function the JAX engine compiles — so
     any policy added via ``@register_routing`` runs here unchanged.  With
     ``autoscale``, every full epoch of ``epoch_events`` invocations ends by
     re-splitting each KiSS node from its observed per-class pressure
-    (``WarmPool.resize``), with every scalar step mirrored through float32
-    so the jitted engine's re-splits are reproduced bit-for-bit.
+    (``WarmPool.resize``) and — when node scaling is on — spawning or
+    retiring one node from the cluster-wide drop fraction, with every
+    scalar step mirrored through float32 so the jitted engine's decisions
+    are reproduced bit-for-bit.
     """
     n = cfg.n_nodes
     caps = cfg.pool_caps()
@@ -239,8 +357,18 @@ def cluster_outcomes_ref(cfg: ClusterConfig, trace: Trace,
     spec = ROUTING.spec(cfg.routing)
     rtt = np.float32(cfg.cloud_rtt_s)
     ccp = np.float32(cfg.cloud_cold_prob)
+    up_mask = recover = None
+    if failures is not None:
+        up_mask, recover = failures.masks(trace.t, n)
+    all_up = np.ones(n, bool)
+    invalidated = np.zeros(n, np.int64)
 
-    def run_event(i: int) -> tuple[int, int]:
+    def run_event(i: int, eff_up: np.ndarray) -> tuple[int, int]:
+        # recovery first: a node coming back up re-joins with empty pools
+        if recover is not None and recover[i].any():
+            for j in np.nonzero(recover[i])[0]:
+                invalidated[j] += (pools[j][0].invalidate()
+                                   + pools[j][1].invalidate())
         cls = int(trace.cls[i])
         tgt = tgt_by_cls[cls]
         # only load-sensitive policies read pool occupancy; skip the
@@ -254,36 +382,55 @@ def cluster_outcomes_ref(cfg: ClusterConfig, trace: Trace,
             warm=np.float32(trace.warm_dur[i]),
             cold=np.float32(trace.cold_dur[i]),
             free=free_t, cap=cap_by_cls[cls],
-            cloud_rtt_s=rtt, cloud_cold_prob=ccp)
+            cloud_rtt_s=rtt, cloud_cold_prob=ccp, node_up=eff_up)
         node = int(spec.fn(np, ctx))
-        out = pools[node][int(tgt[node])].access(
-            float(trace.t[i]), int(trace.func_id[i]),
-            float(trace.size_mb[i]),
-            float(trace.warm_dur[i]), float(trace.cold_dur[i]), sink)
-        node_out[i] = node
-        outcome_out[i] = _OUT_CODE[out]
-        return node, outcome_out[i]
+        if eff_up[node]:
+            out = _OUT_CODE[pools[node][int(tgt[node])].access(
+                float(trace.t[i]), int(trace.func_id[i]),
+                float(trace.size_mb[i]),
+                float(trace.warm_dur[i]), float(trace.cold_dur[i]), sink)]
+        else:
+            out = DROP          # routed to a dead node: offload, pools
+        node_out[i] = node      # untouched (they are frozen/absent)
+        outcome_out[i] = out
+        return node, out
 
     if autoscale is None:
         for i in range(len(trace)):
-            run_event(i)
-        return node_out, outcome_out
+            run_event(i, all_up if up_mask is None else up_mask[i])
+        if failures is None:
+            return node_out, outcome_out
+        return node_out, outcome_out, {
+            "invalidated": invalidated, "node_up": up_mask}
 
     # -- autoscaled path: epoch loop with float32-mirrored re-splitting ----
     f32 = np.float32
     e = autoscale.epoch_events
     mn, mx, gain = (f32(autoscale.min_frac), f32(autoscale.max_frac),
                     f32(autoscale.gain))
+    # node-scaling thresholds as data: +/-inf when disabled, so the same
+    # decision arithmetic runs (and never fires) — mirroring the engine
+    scaled = autoscale.node_scaled
+    spawn_th = f32(autoscale.spawn_drop_frac) if scaled else f32(np.inf)
+    retire_th = f32(autoscale.retire_drop_frac) if scaled else f32(-np.inf)
+    active = np.zeros(n, bool)
+    active[:autoscale.init_active if autoscale.init_active is not None
+           else n] = True
     frac = np.asarray(cfg.small_frac, np.float32)
     node_mb = np.asarray(cfg.node_mb, np.float32)
     press = np.zeros((n, 2), np.float32)   # exact small-integer counts
+    dropw = 0
     fracs_out: list[np.ndarray] = []
+    actives_out: list[np.ndarray] = []
     for i in range(len(trace)):
-        node, out = run_event(i)
+        eff = (active if up_mask is None
+               else up_mask[i] & active)
+        node, out = run_event(i, eff)
         if out == MISS:
             press[node, int(trace.cls[i])] += 1.0
         elif out == DROP:
             press[node, int(trace.cls[i])] += 2.0
+            dropw += 1
         if (i + 1) % e:
             continue
         # full epoch boundary: pressure -> split delta -> resize, every
@@ -305,13 +452,34 @@ def cluster_outcomes_ref(cfg: ClusterConfig, trace: Trace,
             pools[j][1].resize(now, float(cap_l[j]))
             cap_f32[j, 0], cap_f32[j, 1] = cap_s[j], cap_l[j]
         cap_by_cls = [cap_f32[nodes_idx, t] for t in tgt_by_cls]
+        # node add/remove from the cluster-wide drop fraction (post-resize
+        # residency decides "emptiest"; at most one node moves per epoch)
+        drop_frac = f32(dropw) / np.maximum(f32(e), f32(1.0))
+        n_active = int(active.sum())
+        if drop_frac > spawn_th and n_active < n:
+            active[int(np.argmax(~active))] = True
+        elif drop_frac < retire_th and n_active > 1:
+            used_n = np.array(
+                [f32(cap_f32[j, 0] - f32(pools[j][0].free_mb))
+                 + f32(cap_f32[j, 1] - f32(pools[j][1].free_mb))
+                 for j in range(n)], np.float32)
+            j = int(np.argmin(np.where(active, used_n, f32(np.inf))))
+            active[j] = False
+            invalidated[j] += (pools[j][0].invalidate()
+                               + pools[j][1].invalidate())
         press[:] = 0.0
+        dropw = 0
         fracs_out.append(frac.copy())
+        actives_out.append(active.copy())
     if len(trace) % e:   # trailing partial epoch: no re-split (see Autoscale)
         fracs_out.append(frac.copy())
+        actives_out.append(active.copy())
     fracs = (np.stack(fracs_out) if fracs_out
              else np.zeros((0, n), np.float32))
-    return node_out, outcome_out, fracs
+    actives = (np.stack(actives_out) if actives_out
+               else np.zeros((0, n), bool))
+    return node_out, outcome_out, fracs, {
+        "invalidated": invalidated, "node_up": up_mask, "active": actives}
 
 
 # --------------------------------------------------------------------------

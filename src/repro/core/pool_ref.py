@@ -182,6 +182,19 @@ class WarmPool:
         self.last_victims = victims
         return victims
 
+    def invalidate(self) -> int:
+        """Kill every resident (node failure recovery / node retirement):
+        the container state died with the node, so the pool restarts empty
+        at full capacity with a reset GreedyDual clock.  The sequential
+        twin of the JAX engine's ``_invalidate_nodes``.  Returns the
+        resident count — the re-warm debt the metrics expose."""
+        n = len(self.containers)
+        self.containers.clear()
+        self.free_mb = float(self.cfg.capacity_mb)
+        self.clock = 0.0
+        self.last_victims = []
+        return n
+
     # -- introspection ------------------------------------------------------
     @property
     def used_mb(self) -> float:

@@ -46,6 +46,14 @@ class RouteCtx(NamedTuple):
     for policies registered with ``needs_free=True`` (the oracle skips the
     O(n_nodes) occupancy scan otherwise; the JAX engine always provides
     it).
+
+    ``node_up`` is the live-node mask: False entries are nodes that are
+    currently failed (``Scenario(..., failures=...)``) or not spawned by
+    the node autoscaler.  Both engines always populate it (all-True when
+    the cluster is fully static), so a policy that respects it re-steers
+    around dead nodes with no engine edits.  A request routed to a down
+    node is dropped to the cloud tier by the engine without touching any
+    pool, so policies that ignore the mask stay correct — just lossier.
     """
 
     h1: object            # i32  sticky hash: func_id % n_nodes
@@ -58,6 +66,7 @@ class RouteCtx(NamedTuple):
     cap: object           # f32[N] capacity MB of each node's target pool
     cloud_rtt_s: object   # f32  edge->cloud round trip (s)
     cloud_cold_prob: object  # f32  cloud cold-start probability
+    node_up: object = None   # bool[N] live-node mask (engines populate)
 
 
 class SlotStats(NamedTuple):
@@ -187,40 +196,62 @@ def replacement_policies() -> list[str]:
 # built-in routing policies (codes 0-3 == the historical RoutingPolicy enum)
 # --------------------------------------------------------------------------
 # All load comparisons are float32 so the numpy oracle and the JAX engine
-# take bit-identical decisions on exact-f32 traces.
+# take bit-identical decisions on exact-f32 traces.  Every built-in
+# respects ``ctx.node_up`` — on an all-up mask each reduces to its
+# historical decision bit-for-bit (the masking selects the unmasked
+# values exactly), so static scenarios are unchanged.
 
 def _free_frac(xp, ctx: RouteCtx):
     return ctx.free / xp.maximum(ctx.cap, xp.float32(1e-6))
 
 
+def _nth_masked(xp, mask, j):
+    """Index of the ``j``-th True entry of ``mask`` (0-based); the shared
+    re-steer helper: hash-over-survivors keeps assignments deterministic
+    and as sticky as the mask allows."""
+    return xp.argmax(xp.cumsum(mask.astype(xp.int32)) == j + 1)
+
+
 @register_routing("sticky", needs_free=False)
 def _sticky(xp, ctx: RouteCtx):
     """Per-function hash (``func_id % n_nodes``): maximum temporal
-    locality — the property KiSS protects."""
-    return ctx.h1
+    locality — the property KiSS protects.  While the home node is down
+    the hash re-steers over the up nodes only (and snaps back on
+    recovery); with no node up it returns the home node, which the engine
+    drops to the cloud."""
+    up = ctx.node_up
+    k = xp.sum(up.astype(xp.int32))
+    j = xp.mod(ctx.h1, xp.maximum(k, 1))
+    cand = _nth_masked(xp, up, j)
+    return xp.where(up[ctx.h1], ctx.h1, xp.where(k == 0, ctx.h1, cand))
 
 
 @register_routing("least_loaded")
 def _least_loaded(xp, ctx: RouteCtx):
-    """Highest instantaneous free fraction of the target pool wins."""
-    return xp.argmax(_free_frac(xp, ctx))
+    """Highest instantaneous free fraction among the *up* nodes wins."""
+    frac = xp.where(ctx.node_up, _free_frac(xp, ctx), xp.float32(-xp.inf))
+    return xp.argmax(frac)
 
 
 @register_routing("size_aware", needs_free=False)
 def _size_aware(xp, ctx: RouteCtx):
-    """Sticky-hash over the nodes whose target pool can *ever* host this
-    container (falls back to plain sticky when none can)."""
-    elig = (ctx.cap >= ctx.size - xp.float32(1e-9)).astype(xp.int32)
+    """Sticky-hash over the *up* nodes whose target pool can ever host
+    this container (falls back to plain sticky when none can — the engine
+    then drops to the cloud if that node is down or too small)."""
+    can_host = ctx.cap >= ctx.size - xp.float32(1e-9)
+    elig = (can_host & ctx.node_up).astype(xp.int32)
     k = xp.sum(elig)
     j = xp.mod(ctx.h1, xp.maximum(k, 1))
-    cand = xp.argmax(xp.cumsum(elig) == j + 1)
+    cand = _nth_masked(xp, elig, j)
     return xp.where(k == 0, ctx.h1, cand)
 
 
 @register_routing("power_of_two")
 def _power_of_two(xp, ctx: RouteCtx):
-    """Two hashes nominate two candidates; the less loaded one wins."""
-    frac = _free_frac(xp, ctx)
+    """Two hashes nominate two candidates; the less loaded *up* one wins
+    (a down candidate scores -inf; both down falls back to ``h1`` and the
+    engine drops to the cloud)."""
+    frac = xp.where(ctx.node_up, _free_frac(xp, ctx), xp.float32(-xp.inf))
     return xp.where(frac[ctx.h1] >= frac[ctx.h2], ctx.h1, ctx.h2)
 
 

@@ -38,7 +38,7 @@ The historical entrypoints (``simulate_kiss_jax``, ``sweep_cluster``,
 ...) still work as deprecation shims and are equivalence-tested against
 this API.
 """
-from ..core.continuum import Autoscale
+from ..core.continuum import Autoscale, Failures
 from ..core.registry import (REPLACEMENT, ROUTING, PolicySpec, RouteCtx,
                              SlotStats, register_replacement,
                              register_routing, replacement_policies,
@@ -49,8 +49,8 @@ from .scenario import Scenario
 from . import policies  # registers cost_model et al.  # noqa: F401
 
 __all__ = [
-    "Autoscale", "REPLACEMENT", "ROUTING", "PolicySpec", "Result",
-    "RouteCtx", "SUMMARY_KEYS", "Scenario", "SlotStats",
+    "Autoscale", "Failures", "REPLACEMENT", "ROUTING", "PolicySpec",
+    "Result", "RouteCtx", "SUMMARY_KEYS", "Scenario", "SlotStats",
     "register_replacement", "register_routing", "replacement_policies",
     "routing_policies", "simulate", "sweep",
 ]

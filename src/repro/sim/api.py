@@ -1,7 +1,8 @@
 """The front door: ``simulate(scenario, trace)`` and ``sweep``.
 
 One entrypoint for every configuration (single node, heterogeneous
-cluster, any registered policy) and both engines:
+cluster, any registered policy, failure schedules, node add/remove) and
+both engines:
 
 * ``engine="jax"`` — the whole trace as one jitted ``lax.scan``
   (``repro.cluster``); sweeps run vmapped, one device program per group
@@ -12,13 +13,15 @@ cluster, any registered policy) and both engines:
 """
 from __future__ import annotations
 
-from typing import Iterable, Sequence
+from typing import Iterable
 
 from ..cluster.engine import (_simulate_cluster_autoscale_jax,
                               _simulate_cluster_autoscale_ref,
+                              _simulate_cluster_failures_jax,
+                              _simulate_cluster_failures_ref,
                               _simulate_cluster_jax, _simulate_cluster_ref,
                               _sweep_cluster, _sweep_cluster_autoscale,
-                              check_step_mode)
+                              _sweep_cluster_failures, check_step_mode)
 from ..core.types import Trace
 from .result import Result
 from .scenario import Scenario
@@ -43,25 +46,42 @@ def simulate(scenario: Scenario, trace: Trace, *, engine: str = "jax",
 
     An autoscaled scenario (``scenario.autoscale`` set) runs the epoch
     re-splitting engines instead; the returned :class:`Result` then
-    carries the per-epoch split trajectory in ``.fracs``.
+    carries the per-epoch split trajectory in ``.fracs`` (and, with node
+    scaling, the membership trajectory in ``.active``).  A failure
+    schedule (``scenario.failures``) composes with either path: the
+    result additionally exposes ``.node_up``, ``.node_downtime_pct`` and
+    ``.invalidated``.
     """
     _check_engine(engine)
     check_step_mode(mode)
     cfg = scenario.to_cluster_config()
-    asc = scenario.autoscale
+    asc, fails = scenario.autoscale, scenario.failures
     if asc is None:
+        if fails is None:
+            if engine == "jax":
+                raw = _simulate_cluster_jax(cfg, trace, rng_seed, mode)
+            else:
+                raw = _simulate_cluster_ref(cfg, trace, rng_seed)
+            return Result(scenario=scenario, raw=raw)
         if engine == "jax":
-            raw = _simulate_cluster_jax(cfg, trace, rng_seed, mode)
+            raw, extras = _simulate_cluster_failures_jax(
+                cfg, fails, trace, rng_seed, mode)
         else:
-            raw = _simulate_cluster_ref(cfg, trace, rng_seed)
-        return Result(scenario=scenario, raw=raw)
+            raw, extras = _simulate_cluster_failures_ref(
+                cfg, fails, trace, rng_seed)
+        return Result(scenario=scenario, raw=raw,
+                      node_up=extras["node_up"],
+                      invalidated=extras["invalidated"])
     if engine == "jax":
-        raw, fracs = _simulate_cluster_autoscale_jax(cfg, asc, trace,
-                                                     rng_seed, mode)
+        raw, fracs, extras = _simulate_cluster_autoscale_jax(
+            cfg, asc, trace, rng_seed, mode, failures=fails)
     else:
-        raw, fracs = _simulate_cluster_autoscale_ref(cfg, asc, trace,
-                                                     rng_seed)
-    return Result(scenario=scenario, raw=raw, epoch_fracs=fracs)
+        raw, fracs, extras = _simulate_cluster_autoscale_ref(
+            cfg, asc, trace, rng_seed, failures=fails)
+    return Result(scenario=scenario, raw=raw, epoch_fracs=fracs,
+                  epoch_active=extras["active"],
+                  node_up=extras["node_up"],
+                  invalidated=extras["invalidated"])
 
 
 def sweep(trace: Trace, scenarios: Iterable[Scenario], *,
@@ -73,9 +93,12 @@ def sweep(trace: Trace, scenarios: Iterable[Scenario], *,
     for autoscaled scenarios — the epoch length) are batched into ONE
     vmapped ``lax.scan`` program; mixed shapes simply split into one
     program per group — callers no longer need to hand-partition their
-    grids the way ``sweep_cluster`` required.  Static and autoscaled
-    scenarios mix freely; autoscaled lanes vmap their (min_frac, max_frac,
-    gain) as data.
+    grids the way ``sweep_cluster`` required.  Static, failure-injected,
+    and autoscaled scenarios mix freely: failure lanes bucket by mask
+    shape (pinned by the shared trace and ``n_nodes``) with their
+    compiled masks vmapped as data, and autoscaled lanes vmap (min_frac,
+    max_frac, gain), the node-scaling thresholds, initial membership, and
+    any failure masks as data.
     """
     _check_engine(engine)
     check_step_mode(mode)
@@ -85,22 +108,39 @@ def sweep(trace: Trace, scenarios: Iterable[Scenario], *,
     if engine == "ref":
         return [simulate(s, trace, engine="ref", rng_seed=rng_seed)
                 for s in scenarios]
-    groups: dict[tuple[int, int, int | None], list[int]] = {}
+    groups: dict[tuple[int, int, int | None, bool], list[int]] = {}
     for i, s in enumerate(scenarios):
         epoch = s.autoscale.epoch_events if s.autoscale else None
-        groups.setdefault((s.n_nodes, s.max_slots, epoch), []).append(i)
+        # failure-free lanes keep the cheap unmasked programs (static and
+        # autoscaled alike); failure lanes compile the masked twin and
+        # vmap their schedules as data
+        failing = s.failures is not None
+        groups.setdefault((s.n_nodes, s.max_slots, epoch, failing),
+                          []).append(i)
     results: list[Result | None] = [None] * len(scenarios)
-    for (_, _, epoch), idxs in groups.items():
+    for (_, _, epoch, failing), idxs in groups.items():
         cfgs = [scenarios[i].to_cluster_config() for i in idxs]
-        if epoch is None:
+        if epoch is None and not failing:
             raws = _sweep_cluster(trace, cfgs, rng_seed=rng_seed, mode=mode)
             for i, raw in zip(idxs, raws):
                 results[i] = Result(scenario=scenarios[i], raw=raw)
-        else:
-            pairs = _sweep_cluster_autoscale(
-                trace, cfgs, [scenarios[i].autoscale for i in idxs],
+        elif epoch is None:
+            pairs = _sweep_cluster_failures(
+                trace, cfgs, [scenarios[i].failures for i in idxs],
                 rng_seed=rng_seed, mode=mode)
-            for i, (raw, fracs) in zip(idxs, pairs):
+            for i, (raw, extras) in zip(idxs, pairs):
                 results[i] = Result(scenario=scenarios[i], raw=raw,
-                                    epoch_fracs=fracs)
+                                    node_up=extras["node_up"],
+                                    invalidated=extras["invalidated"])
+        else:
+            triples = _sweep_cluster_autoscale(
+                trace, cfgs, [scenarios[i].autoscale for i in idxs],
+                [scenarios[i].failures for i in idxs],
+                rng_seed=rng_seed, mode=mode)
+            for i, (raw, fracs, extras) in zip(idxs, triples):
+                results[i] = Result(scenario=scenarios[i], raw=raw,
+                                    epoch_fracs=fracs,
+                                    epoch_active=extras["active"],
+                                    node_up=extras["node_up"],
+                                    invalidated=extras["invalidated"])
     return results

@@ -22,9 +22,10 @@ def cost_model(xp, ctx: RouteCtx):
       ``p_cold * cold_cost``, with the pool's occupancy (1 - free
       fraction) as the cold-start-probability estimate: an empty pool has
       room to keep containers warm, a full one will be evicting.
-    * A node that can *never* host it will drop to the cloud, which is
-      predicted to pay the round trip plus the cloud's own cold-start
-      probability times the cold cost.
+    * A node that can *never* host it — or that is currently down
+      (``ctx.node_up``) — will drop to the cloud, which is predicted to
+      pay the round trip plus the cloud's own cold-start probability
+      times the cold cost.
 
     Ties (e.g. several idle nodes predicting zero) resolve to the lowest
     node index in both engines (``argmin`` takes the first minimum).
@@ -34,5 +35,5 @@ def cost_model(xp, ctx: RouteCtx):
     p_cold = xp.float32(1.0) - frac
     edge_pred = p_cold * cold_cost
     cloud_pred = ctx.cloud_rtt_s + ctx.cloud_cold_prob * cold_cost
-    feasible = ctx.cap >= ctx.size - xp.float32(1e-9)
+    feasible = (ctx.cap >= ctx.size - xp.float32(1e-9)) & ctx.node_up
     return xp.argmin(xp.where(feasible, edge_pred, cloud_pred))

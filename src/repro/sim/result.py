@@ -22,7 +22,9 @@ from .scenario import Scenario
 #: truth for the benchmark-stable contract.  ``SimResult.summary`` produces
 #: the first eleven; then the cluster/latency extras; then the per-epoch
 #: split-fraction extras (static scenarios report their one implicit
-#: epoch).
+#: epoch); then the fault-tolerance extras (downtime/invalidation from
+#: ``failures=``, membership from node-scaled autoscaling — inert zeros /
+#: full membership for scenarios without either).
 SUMMARY_KEYS = (
     "cold_start_pct", "drop_pct", "hit_rate",
     "small_cold_start_pct", "large_cold_start_pct",
@@ -31,6 +33,7 @@ SUMMARY_KEYS = (
     "n_nodes", "offload_pct",
     "latency_mean_s", "latency_p50_s", "latency_p95_s", "latency_p99_s",
     "n_epochs", "frac_final_mean", "frac_min", "frac_max",
+    "downtime_pct", "n_invalidated", "n_active_final", "n_active_min",
 )
 
 
@@ -46,7 +49,13 @@ class Result:
     * ``per_node`` — f64[N, 2, 4] (hits, misses, drops, edge exec time)
       per (node, size class);
     * ``fracs`` — f32[E, N] small-pool split per (epoch, node): the
-      autoscaler's trajectory, or one static row.
+      autoscaler's trajectory, or one static row;
+    * ``active`` — bool[E, N] cluster membership per epoch (node
+      add/remove trajectory), or one all-True row;
+    * ``node_up`` — bool[T, N] per-event live mask from the failure
+      schedule (``None`` without one);
+    * ``invalidated`` — i64[N] residents killed per node by failure
+      recovery or retirement: the re-warm debt.
     """
 
     scenario: Scenario
@@ -54,6 +63,14 @@ class Result:
     #: f32[E, N] per-epoch small-pool fractions from the autoscaler
     #: (``None`` for static scenarios — ``fracs`` derives the one-row view)
     epoch_fracs: np.ndarray | None = None
+    #: bool[E, N] per-epoch membership from the node autoscaler (``None``
+    #: for non-autoscaled scenarios — ``active`` derives the one-row view)
+    epoch_active: np.ndarray | None = None
+    #: bool[T, N] per-event live mask (``None`` without a failure schedule)
+    node_up: np.ndarray | None = None
+    #: i64[N] residents invalidated per node (``None`` = no failures and
+    #: no node scaling ran; views report zeros)
+    invalidated: np.ndarray | None = None
 
     # -- per-event arrays --------------------------------------------------
     @property
@@ -86,6 +103,38 @@ class Result:
         if self.epoch_fracs is not None and len(self.epoch_fracs):
             return self.epoch_fracs
         return np.asarray([self.scenario.small_frac], np.float32)
+
+    @property
+    def active(self) -> np.ndarray:
+        """bool[E, N] cluster membership after each epoch.
+
+        The node autoscaler's add/remove trajectory; scenarios without
+        node scaling (including static ones) expose one all-True row —
+        membership is orthogonal to *failures*, which ``node_up``
+        tracks per event."""
+        if self.epoch_active is not None and len(self.epoch_active):
+            return self.epoch_active
+        return np.ones((1, self.scenario.n_nodes), bool)
+
+    @property
+    def n_active(self) -> np.ndarray:
+        """i64[E] active-node count per epoch."""
+        return self.active.sum(axis=1)
+
+    @property
+    def node_downtime_pct(self) -> np.ndarray:
+        """f64[N] percent of events each node spent down (failures)."""
+        n = self.scenario.n_nodes
+        if self.node_up is None or not len(self.node_up):
+            return np.zeros(n)
+        return 100.0 * (1.0 - self.node_up.mean(axis=0))
+
+    @property
+    def n_invalidated(self) -> int:
+        """Total residents killed by recovery/retirement: every one is a
+        warm container some function must cold-start again (re-warm)."""
+        return (int(self.invalidated.sum())
+                if self.invalidated is not None else 0)
 
     # -- per-class view (subsumes SimResult) -------------------------------
     def per_class(self) -> SimResult:
@@ -146,6 +195,10 @@ class Result:
             "frac_final_mean": float(fr[-1].mean()),
             "frac_min": float(fr.min()),
             "frac_max": float(fr.max()),
+            "downtime_pct": float(self.node_downtime_pct.mean()),
+            "n_invalidated": self.n_invalidated,
+            "n_active_final": int(self.active[-1].sum()),
+            "n_active_min": int(self.n_active.min()),
         })
         # the key contract must hold even under `python -O` (a bare assert
         # would let key drift ship silently into results/BENCH_*.json)

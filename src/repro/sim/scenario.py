@@ -27,7 +27,7 @@ from typing import Sequence
 
 import numpy as np
 
-from ..core.continuum import Autoscale, ClusterConfig
+from ..core.continuum import Autoscale, ClusterConfig, Failures
 from ..core.registry import REPLACEMENT, ROUTING
 
 
@@ -64,7 +64,16 @@ class Scenario:
     ``autoscale`` (an :class:`Autoscale`, or a kwargs dict for one;
     ``None`` = the paper's static split) makes every KiSS node re-tune its
     small/large split each epoch from observed per-class pressure —
-    ``small_frac`` then only sets the starting split.
+    ``small_frac`` then only sets the starting split.  With
+    ``Autoscale(spawn_drop_frac=...)`` the autoscaler also spawns/retires
+    whole nodes from the cluster-wide drop fraction.
+
+    ``failures`` (a :class:`Failures`, or an iterable of ``(t_down, t_up,
+    node)`` windows; ``None`` = every node stays up) injects node
+    outages: a down node is invisible to routing (``RouteCtx.node_up``),
+    its pools are frozen, and it recovers *empty* — previously warm
+    functions cold-start again, which the ``invalidated``/``downtime``
+    metrics expose.
     """
 
     node_mb: tuple[float, ...]
@@ -76,6 +85,7 @@ class Scenario:
     cloud_cold_prob: float = 0.05
     max_slots: int = 1024
     autoscale: Autoscale | None = None
+    failures: Failures | None = None
     name: str = ""
 
     def __post_init__(self):
@@ -99,6 +109,21 @@ class Scenario:
             raise ValueError("max_slots must be >= 1")
         if not 0.0 <= self.cloud_cold_prob <= 1.0:
             raise ValueError("cloud_cold_prob must be in [0, 1]")
+        if self.failures is not None:
+            f = self.failures
+            if not isinstance(f, Failures):
+                try:
+                    f = Failures(windows=tuple(f))
+                except TypeError:
+                    raise ValueError(
+                        "failures must be a Failures, an iterable of "
+                        f"(t_down, t_up, node) windows, or None, got "
+                        f"{f!r}") from None
+            if f.max_node >= n:
+                raise ValueError(
+                    f"failures references node {f.max_node} but the "
+                    f"scenario has {n} nodes")
+            object.__setattr__(self, "failures", f)
         if self.autoscale is not None:
             asc = self.autoscale
             if isinstance(asc, dict):
@@ -106,9 +131,15 @@ class Scenario:
             if not isinstance(asc, Autoscale):
                 raise ValueError("autoscale must be an Autoscale, a kwargs "
                                  f"dict, or None, got {asc!r}")
-            if all(self.unified):
+            # an all-unified cluster has no split to re-tune, but node
+            # add/remove is still meaningful there
+            if all(self.unified) and not asc.node_scaled:
                 raise ValueError(
                     "autoscale needs at least one KiSS node to re-split")
+            if asc.init_active is not None and asc.init_active > n:
+                raise ValueError(
+                    f"init_active={asc.init_active} exceeds the "
+                    f"scenario's {n} nodes")
             # a start outside the bounds would be silently clamped (and
             # pools resized) at the first epoch — surface it here instead
             if any(not asc.min_frac <= f <= asc.max_frac
@@ -175,8 +206,9 @@ class Scenario:
         kind = ("baseline" if all(self.unified)
                 else "kiss" if self.n_nodes == 1 else "cluster")
         asc = "-autoscaled" if self.autoscale is not None else ""
+        fail = "-failures" if self.failures is not None else ""
         return (f"{kind}-{self.n_nodes}n-{self.routing}"
-                f"-{self.replacement}{asc}")
+                f"-{self.replacement}{asc}{fail}")
 
     def to_cluster_config(self) -> ClusterConfig:
         """The engine-level config both engines consume."""

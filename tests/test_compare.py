@@ -1,0 +1,116 @@
+"""The perf-trajectory gate (``benchmarks/compare.py``): the >20%-AND->1s
+regression rule, ``--update`` re-pinning, one-sided suites warning without
+failing, and robustness against docs missing ``wall_s`` or truncated JSON
+— the gate itself was previously untested."""
+import json
+import os
+
+import pytest
+
+from benchmarks import compare
+
+
+@pytest.fixture
+def dirs(tmp_path, monkeypatch):
+    """Point the gate at throwaway baseline/results dirs."""
+    base = tmp_path / "baselines"
+    res = tmp_path / "results"
+    base.mkdir()
+    res.mkdir()
+    monkeypatch.setattr(compare, "BASELINE_DIR", str(base))
+    monkeypatch.setattr(compare, "RESULTS_DIR", str(res))
+    return base, res
+
+
+def _write(dirname, suite, doc):
+    with open(os.path.join(dirname, f"BENCH_{suite}.json"), "w") as f:
+        json.dump(doc, f)
+
+
+def test_pass_within_threshold(dirs, capsys):
+    base, res = dirs
+    _write(base, "a", {"wall_s": 10.0})
+    _write(res, "a", {"wall_s": 11.0})     # +10% — fine
+    assert compare.compare() == 0
+    assert "perf trajectory OK" in capsys.readouterr().out
+
+
+def test_regression_needs_both_relative_and_absolute(dirs, capsys):
+    base, res = dirs
+    # +50% but only +0.3s: under the absolute floor — scheduler noise
+    _write(base, "small", {"wall_s": 0.6})
+    _write(res, "small", {"wall_s": 0.9})
+    # +2s but only +10%: under the relative threshold
+    _write(base, "big", {"wall_s": 20.0})
+    _write(res, "big", {"wall_s": 22.0})
+    assert compare.compare() == 0
+    # both conditions met -> gate fails
+    _write(base, "bad", {"wall_s": 10.0})
+    _write(res, "bad", {"wall_s": 13.0})   # +30% and +3s
+    assert compare.compare() == 1
+    out = capsys.readouterr().out
+    assert "REGRESSION" in out and "BENCH_bad.json" in out
+
+
+def test_errored_suite_fails_gate(dirs):
+    base, res = dirs
+    _write(base, "a", {"wall_s": 1.0})
+    _write(res, "a", {"wall_s": 1.0, "error": "boom"})
+    assert compare.compare() == 1
+
+
+def test_one_sided_suites_warn_but_never_fail(dirs, capsys):
+    base, res = dirs
+    _write(base, "gone", {"wall_s": 5.0})  # baseline only
+    _write(res, "new", {"wall_s": 5.0})    # fresh only
+    assert compare.compare() == 0
+    out = capsys.readouterr().out
+    assert "missing" in out
+    assert "no baseline" in out
+
+
+def test_no_baselines_is_a_noop(dirs, capsys):
+    _, res = dirs
+    _write(res, "a", {"wall_s": 1.0})
+    assert compare.compare() == 0
+    assert "--update" in capsys.readouterr().out
+
+
+def test_missing_wall_s_skips_with_warning(dirs, capsys):
+    base, res = dirs
+    # a hand-edited fresh doc without wall_s must not crash or fail even
+    # when the wall-clock would scream regression
+    _write(base, "a", {"wall_s": 1.0})
+    _write(res, "a", {"rows": []})
+    _write(base, "b", {"note": "pinned before wall_s existed"})
+    _write(res, "b", {"wall_s": 99.0})
+    assert compare.compare() == 0
+    out = capsys.readouterr().out
+    assert "no wall_s in fresh doc" in out
+    assert "no wall_s in baseline doc" in out
+
+
+def test_truncated_json_skips_with_warning(dirs, capsys):
+    base, res = dirs
+    _write(base, "a", {"wall_s": 1.0})
+    _write(res, "a", {"wall_s": 1.0})
+    with open(os.path.join(res, "BENCH_cut.json"), "w") as f:
+        f.write('{"wall_s": 1.')           # truncated write
+    assert compare.compare() == 0
+    assert "skipping unreadable BENCH_cut.json" in capsys.readouterr().out
+
+
+def test_update_repins_baselines(dirs, capsys):
+    base, res = dirs
+    _write(base, "a", {"wall_s": 1.0})
+    _write(res, "a", {"wall_s": 5.0})      # would regress...
+    compare.update()
+    assert "pinned BENCH_a.json" in capsys.readouterr().out
+    with open(os.path.join(base, "BENCH_a.json")) as f:
+        assert json.load(f)["wall_s"] == 5.0
+    assert compare.compare() == 0          # ...now the new normal
+
+
+def test_update_without_results_exits(dirs):
+    with pytest.raises(SystemExit):
+        compare.update()

@@ -1,0 +1,371 @@
+"""Fault-tolerant clusters: node failure injection and epoch-level node
+add/remove.
+
+The heart is exact JAX<->oracle equivalence (both step modes, every
+registered routing policy) for failure-injected, node-scaled, and
+combined scenarios — including bit-identical active-mask trajectories and
+invalidation counts — plus the semantics: down nodes are frozen and
+invisible to mask-aware routing, recovery re-warms from empty pools, the
+cluster spawns under drop pressure and retires its emptiest node when
+pressure collapses."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.types import DROP, HIT, MISS, Trace
+from repro.sim import (Autoscale, Failures, Scenario, routing_policies,
+                       simulate, sweep)
+
+from conftest import quantized_trace
+
+BUILTIN_ROUTINGS = ["sticky", "least_loaded", "size_aware", "power_of_two",
+                    "cost_model"]
+
+
+def mid_windows(tr, frac_lo=0.25, frac_hi=0.6, nodes=(0, 2)):
+    """Outage windows covering the middle chunk of the trace."""
+    t0 = float(tr.t[int(len(tr) * frac_lo)])
+    t1 = float(tr.t[int(len(tr) * frac_hi)])
+    return Failures(windows=tuple((t0 + 3 * i, t1 + 11 * i, n)
+                                  for i, n in enumerate(nodes)))
+
+
+def het4(routing="sticky", failures=None, autoscale=None):
+    return Scenario.cluster((1024.0, 1024.0, 2048.0, 4096.0),
+                            small_frac=(0.8, 0.8, 0.8, 0.5),
+                            unified=(False, True, False, False),
+                            routing=routing, max_slots=64,
+                            failures=failures, autoscale=autoscale)
+
+
+NODE_ASC = Autoscale(epoch_events=100, min_frac=0.4, max_frac=0.9,
+                     gain=0.2, spawn_drop_frac=0.05, retire_drop_frac=0.01,
+                     init_active=2)
+
+
+def uniform_trace(n, n_funcs=6, size=64.0, gap=1.0, warm=0.5, cold=3.0):
+    """Deterministic round-robin trace on exact-f32 values."""
+    i = np.arange(n)
+    return Trace(t=(i * gap).astype(np.float32),
+                 func_id=(i % n_funcs).astype(np.int32),
+                 size_mb=np.full(n, size, np.float32),
+                 cls=np.zeros(n, np.int32),
+                 warm_dur=np.full(n, warm, np.float32),
+                 cold_dur=np.full(n, cold, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# engine equivalence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["gather", "vmap"])
+@pytest.mark.parametrize("routing", BUILTIN_ROUTINGS)
+def test_failures_jax_matches_oracle(routing, mode):
+    """Exact per-event equivalence (routed node, outcome, per-node
+    metrics) plus identical invalidation counts under a failure
+    schedule, for both scan-step formulations."""
+    tr = quantized_trace(np.random.default_rng(0), 450)
+    sc = het4(routing, failures=mid_windows(tr))
+    j = simulate(sc, tr, engine="jax", mode=mode)
+    r = simulate(sc, tr, engine="ref")
+    assert (j.node == r.node).all(), routing
+    assert (j.outcome == r.outcome).all(), routing
+    assert (j.per_node == r.per_node).all()
+    assert (j.invalidated == r.invalidated).all()
+    assert (j.node_up == r.node_up).all()
+    assert np.allclose(j.latencies, r.latencies)
+
+
+@pytest.mark.parametrize("mode", ["gather", "vmap"])
+@pytest.mark.parametrize("routing", BUILTIN_ROUTINGS)
+def test_node_scaled_autoscale_jax_matches_oracle(routing, mode):
+    """Node add/remove composed with per-node re-splitting AND a failure
+    schedule: outcomes, frac trajectories, and the active-mask
+    trajectories must all be bit-identical across engines."""
+    tr = quantized_trace(np.random.default_rng(1), 450)
+    sc = het4(routing, failures=mid_windows(tr), autoscale=NODE_ASC)
+    j = simulate(sc, tr, engine="jax", mode=mode)
+    r = simulate(sc, tr, engine="ref")
+    assert (j.node == r.node).all(), routing
+    assert (j.outcome == r.outcome).all(), routing
+    assert (j.per_node == r.per_node).all()
+    assert (j.fracs == r.fracs).all()
+    assert j.active.dtype == r.active.dtype == bool
+    assert (j.active == r.active).all(), routing
+    assert (j.invalidated == r.invalidated).all()
+
+
+def test_every_registered_routing_policy_survives_failures():
+    """Whatever is registered right now — built-ins, cost_model, policies
+    other test modules registered — must agree across engines under
+    failure injection; mask-blind policies simply drop to the cloud."""
+    tr = quantized_trace(np.random.default_rng(2), 300)
+    fails = mid_windows(tr)
+    for name in routing_policies():
+        sc = het4(name, failures=fails)
+        j = simulate(sc, tr, engine="jax")
+        r = simulate(sc, tr, engine="ref")
+        assert (j.node == r.node).all(), name
+        assert (j.outcome == r.outcome).all(), name
+        assert (j.invalidated == r.invalidated).all(), name
+
+
+def test_node_scaling_without_failures_matches_oracle():
+    tr = quantized_trace(np.random.default_rng(3), 400)
+    sc = het4("size_aware", autoscale=NODE_ASC)
+    j = simulate(sc, tr)
+    r = simulate(sc, tr, engine="ref")
+    assert (j.outcome == r.outcome).all()
+    assert (j.active == r.active).all()
+    assert j.node_up is None and r.node_up is None
+
+
+# ---------------------------------------------------------------------------
+# failure semantics
+# ---------------------------------------------------------------------------
+
+def test_down_node_is_frozen_and_invisible():
+    """Mask-aware routing sends nothing to a down node, and a schedule
+    that touches no event leaves the run identical to the static one."""
+    tr = quantized_trace(np.random.default_rng(4), 400)
+    fails = mid_windows(tr, nodes=(0,))
+    res = simulate(het4("least_loaded", failures=fails), tr)
+    down = ~res.node_up[:, 0]
+    assert down.any()
+    assert (res.node[down] != 0).all()          # re-steered around node 0
+    before = Failures(windows=(((-10.0, -1.0, 0),)))
+    static = simulate(het4("least_loaded"), tr)
+    harmless = simulate(het4("least_loaded", failures=before), tr)
+    assert (harmless.outcome == static.outcome).all()
+    assert harmless.n_invalidated == 0
+    assert harmless.summary()["downtime_pct"] == 0.0
+
+
+def test_all_nodes_down_falls_to_cloud():
+    """With every node down the whole window offloads; pools are frozen,
+    so the post-window stream continues exactly like a paused run."""
+    tr = uniform_trace(60)
+    fails = Failures(windows=((20.0, 40.0, 0),))
+    res = simulate(Scenario.kiss(1024.0, max_slots=32, failures=fails), tr)
+    win = (tr.t >= 20.0) & (tr.t < 40.0)
+    assert win.any()
+    assert (res.outcome[win] == DROP).all()
+    assert (res.latencies[win] >= 0.25).all()   # priced as cloud offloads
+
+
+def test_recovery_invalidates_residents_and_rewarms():
+    """Functions warm before the outage must cold-start again after it —
+    the re-warm cost the metrics expose."""
+    tr = uniform_trace(60, n_funcs=6)
+    fails = Failures(windows=((20.0, 40.0, 0),))
+    res = simulate(Scenario.kiss(1024.0, max_slots=32, failures=fails), tr)
+    # 6 warm residents died with the node (all six fit in 1024 MB)
+    assert res.invalidated.tolist() == [6]
+    assert res.n_invalidated == 6
+    first = int(np.argmax(tr.t >= 40.0))
+    assert (res.outcome[first:first + 6] == MISS).all()      # re-warm
+    no_fail = simulate(Scenario.kiss(1024.0, max_slots=32), tr)
+    assert (no_fail.outcome[first:first + 6] == HIT).all()
+    s, s0 = res.summary(), no_fail.summary()
+    assert s["cold_start_pct"] > s0["cold_start_pct"]
+    assert s["downtime_pct"] > 0.0
+    # downtime counts (event, node) samples inside outage windows
+    assert res.node_downtime_pct[0] == pytest.approx(
+        100.0 * ((tr.t >= 20.0) & (tr.t < 40.0)).mean())
+
+
+def test_window_between_events_still_invalidates():
+    """An outage that opens and closes between two events killed the
+    node's state even though no event saw it down."""
+    tr = uniform_trace(10, n_funcs=2, gap=10.0)   # events at t=0,10,20...
+    fails = Failures(windows=((41.0, 44.0, 0),))
+    up, recover = fails.masks(tr.t, 1)
+    assert up.all()                                # never sampled down
+    assert recover[5, 0] and recover.sum() == 1    # first event at t>=44
+    res = simulate(Scenario.kiss(1024.0, max_slots=8, failures=fails), tr)
+    assert res.invalidated.tolist() == [2]
+    assert (res.outcome[5:7] == MISS).all()        # both funcs re-warm
+
+
+def test_overlapping_windows_fire_one_recovery():
+    tr = uniform_trace(40, n_funcs=2)
+    fails = Failures(windows=((10.0, 20.0, 0), (15.0, 30.0, 0)))
+    up, recover = fails.masks(tr.t, 1)
+    assert (~up[:, 0]).sum() == 20                 # down for t in [10, 30)
+    assert recover.sum() == 1                      # single clear, at t>=30
+    res = simulate(Scenario.kiss(1024.0, max_slots=8, failures=fails), tr)
+    assert res.n_invalidated > 0
+    # overlapping windows behave exactly like their merged envelope
+    merged = simulate(Scenario.kiss(
+        1024.0, max_slots=8, failures=((10.0, 30.0, 0),)), tr)
+    assert (res.outcome == merged.outcome).all()
+    assert res.n_invalidated == merged.n_invalidated
+
+
+# ---------------------------------------------------------------------------
+# node add/remove semantics
+# ---------------------------------------------------------------------------
+
+def test_spawns_under_drop_pressure():
+    """A one-active-node cluster drowning in drops must spawn its spare
+    nodes, and membership only ever moves one node per epoch."""
+    rng = np.random.default_rng(5)
+    n = 300
+    tr = Trace(t=np.arange(n, dtype=np.float32) / 8,
+               func_id=np.arange(n, dtype=np.int32),     # never warm
+               size_mb=np.full(n, 200.0, np.float32),
+               cls=np.zeros(n, np.int32),
+               warm_dur=np.ones(n, np.float32),
+               cold_dur=np.full(n, 50.0, np.float32))    # stays busy
+    asc = Autoscale(epoch_events=50, gain=0.0, spawn_drop_frac=0.3,
+                    init_active=1)
+    sc = Scenario.cluster((512.0,) * 4, max_slots=8,
+                          routing="least_loaded", autoscale=asc)
+    res = simulate(sc, tr)
+    na = res.n_active
+    assert na[0] >= 1 and na[-1] > 1               # grew under pressure
+    assert (np.diff(na) >= 0).all()                # never retired (calm
+    assert (np.abs(np.diff(na)) <= 1).all()        # threshold unset)
+    assert res.summary()["n_active_final"] == int(na[-1])
+    assert res.summary()["n_active_min"] == int(na.min())
+    # spawning relieved pressure vs. the pinned 1-node membership
+    pinned = simulate(Scenario.cluster(
+        (512.0,) * 4, max_slots=8, routing="least_loaded",
+        autoscale=dataclasses.replace(asc, spawn_drop_frac=1.0)), tr)
+    assert (pinned.n_active == 1).all()
+    assert res.summary()["drop_pct"] < pinned.summary()["drop_pct"]
+
+
+def test_retires_when_pressure_collapses():
+    """A calm trace on a full cluster retires down to one node, killing
+    the retired nodes' residents (counted as invalidations)."""
+    tr = uniform_trace(400, n_funcs=4, size=32.0)
+    asc = Autoscale(epoch_events=50, gain=0.0, spawn_drop_frac=0.9,
+                    retire_drop_frac=0.05)
+    sc = Scenario.cluster((1024.0,) * 3, max_slots=16,
+                          routing="least_loaded", autoscale=asc)
+    res = simulate(sc, tr)
+    ref = simulate(sc, tr, engine="ref")
+    assert (res.active == ref.active).all()
+    na = res.n_active
+    assert na[-1] == 1 and na[0] < 3               # shrank, one per epoch...
+    assert na.min() == 1                           # ...but never below 1
+    assert (np.diff(na) <= 0).all()
+    assert res.n_invalidated > 0                   # retirement kills state
+
+
+def test_membership_fixed_without_node_scaling():
+    tr = quantized_trace(np.random.default_rng(6), 300)
+    res = simulate(het4(autoscale=Autoscale(epoch_events=100)), tr)
+    assert (res.active == True).all()              # noqa: E712
+    assert res.summary()["n_active_min"] == 4
+    static = simulate(het4(), tr)
+    assert static.epoch_active is None
+    assert static.active.shape == (1, 4) and static.active.all()
+    assert static.summary()["n_active_final"] == 4
+
+
+def test_init_active_starts_a_prefix():
+    tr = uniform_trace(120)
+    asc = Autoscale(epoch_events=40, gain=0.0, spawn_drop_frac=0.99,
+                    init_active=2)
+    res = simulate(Scenario.cluster((1024.0,) * 4, max_slots=16,
+                                    autoscale=asc), tr)
+    assert (res.active == [True, True, False, False]).all()
+    assert (res.node < 2).all()                    # sticky re-steers
+
+
+# ---------------------------------------------------------------------------
+# sweep bucketing
+# ---------------------------------------------------------------------------
+
+def test_sweep_mixes_static_failure_and_scaled_lanes(rng):
+    """Static, failure-injected (two different schedules), autoscaled,
+    node-scaled, and combined lanes must bucket correctly and match both
+    pointwise JAX runs and the oracle."""
+    tr = quantized_trace(rng, 400)
+    f1, f2 = mid_windows(tr, nodes=(0,)), mid_windows(tr, nodes=(2, 3))
+    scs = [het4(),
+           het4("size_aware", failures=f1),
+           het4("least_loaded", failures=f2),
+           het4(autoscale=Autoscale(epoch_events=100)),
+           het4("power_of_two", failures=f1, autoscale=NODE_ASC),
+           het4(autoscale=NODE_ASC)]
+    got = sweep(tr, scs)
+    for sc, g in zip(scs, got):
+        one = simulate(sc, tr)
+        assert (g.node == one.node).all(), sc.label
+        assert (g.outcome == one.outcome).all(), sc.label
+        assert (g.fracs == one.fracs).all()
+        assert (g.active == one.active).all()
+        assert g.n_invalidated == one.n_invalidated
+    ref = sweep(tr, scs, engine="ref")
+    for g, r in zip(got, ref):
+        assert (g.outcome == r.outcome).all()
+        assert (g.active == r.active).all()
+        assert g.n_invalidated == r.n_invalidated
+
+
+def test_sweep_vmaps_node_scale_thresholds_as_data(rng):
+    """Same epoch shape, different spawn/retire thresholds and initial
+    membership: one vmapped program, distinct trajectories."""
+    tr = quantized_trace(rng, 300)
+    base = Autoscale(epoch_events=100, spawn_drop_frac=0.05,
+                     retire_drop_frac=0.01, init_active=2)
+    scs = [het4(autoscale=a) for a in
+           (base, dataclasses.replace(base, spawn_drop_frac=1.0),
+            dataclasses.replace(base, init_active=1),
+            Autoscale(epoch_events=100))]
+    for sc, g in zip(scs, sweep(tr, scs)):
+        one = simulate(sc, tr)
+        assert (g.outcome == one.outcome).all()
+        assert (g.active == one.active).all()
+
+
+# ---------------------------------------------------------------------------
+# validation + construction
+# ---------------------------------------------------------------------------
+
+def test_failures_validation():
+    with pytest.raises(ValueError, match="t_down < t_up"):
+        Failures(windows=((5.0, 5.0, 0),))
+    with pytest.raises(ValueError, match="at least one"):
+        Failures(windows=())
+    with pytest.raises(ValueError, match="t_down, t_up, node"):
+        Failures(windows=((1.0, 2.0),))
+    with pytest.raises(ValueError, match=">= 0"):
+        Failures(windows=((1.0, 2.0, -1),))
+    with pytest.raises(ValueError, match="references node"):
+        Scenario.kiss(1024.0, failures=Failures(windows=((1.0, 2.0, 3),)))
+    with pytest.raises(ValueError, match="failures"):
+        Scenario.kiss(1024.0, failures=object())
+    # window-tuple sugar normalizes; scenarios stay frozen + hashable
+    sc = Scenario.cluster((1024.0, 2048.0), failures=((1.0, 2.0, 1),))
+    assert sc.failures == Failures(windows=((1.0, 2.0, 1),))
+    assert hash(sc) != hash(Scenario.cluster((1024.0, 2048.0)))
+    assert sc.label.endswith("-failures")
+
+
+def test_node_scale_validation():
+    with pytest.raises(ValueError, match="spawn_drop_frac"):
+        Autoscale(retire_drop_frac=0.1)            # scaling not enabled
+    with pytest.raises(ValueError, match="spawn_drop_frac"):
+        Autoscale(init_active=2)
+    with pytest.raises(ValueError, match="retire_drop_frac"):
+        Autoscale(spawn_drop_frac=0.2, retire_drop_frac=0.3)
+    with pytest.raises(ValueError, match="spawn_drop_frac"):
+        Autoscale(spawn_drop_frac=1.5)
+    with pytest.raises(ValueError, match="init_active"):
+        Autoscale(spawn_drop_frac=0.2, init_active=0)
+    with pytest.raises(ValueError, match="exceeds"):
+        Scenario.cluster((1024.0,) * 2, autoscale=Autoscale(
+            spawn_drop_frac=0.2, init_active=3))
+    # an all-unified cluster cannot re-split, but node scaling is fine
+    with pytest.raises(ValueError, match="KiSS node"):
+        Scenario.cluster((1024.0,) * 2, unified=True,
+                         autoscale=Autoscale())
+    sc = Scenario.cluster((1024.0,) * 2, unified=True,
+                          autoscale=Autoscale(spawn_drop_frac=0.2))
+    assert sc.autoscale.node_scaled
+    assert not Autoscale().node_scaled
