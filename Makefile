@@ -3,10 +3,13 @@
 # benchmark suites AND gates the wall-clock trajectory against the pinned
 # snapshots in benchmarks/baselines/ (re-pin with `make bench-baseline`).
 
-.PHONY: check test bench bench-baseline figures
+.PHONY: check test bench bench-baseline figures docs-check
 
 check:
 	bash scripts/check.sh
+
+docs-check:
+	bash scripts/check_docs.sh
 
 test:
 	PYTHONPATH=src python -m pytest -q

@@ -1,0 +1,95 @@
+"""Azure-2019 replay at cluster scale (the ROADMAP's replay tentpole).
+
+The paper evaluates KiSS against millions of Azure Functions invocations;
+this suite replays a **1M-event schema-faithful trace** (the public
+dataset is not redistributable, so :func:`synthesize_azure_schema`
+generates tables in the exact public format and the full ingest path —
+minute buckets -> percentile sampling -> quantized ``Trace`` — runs end
+to end) through the chunked-scan execution mode:
+
+* ``replay_ingest``     — table synthesis + ingest throughput (events/sec
+  of trace construction, the host-side cost of a replay);
+* ``replay_throughput`` — simulator events/sec for a 4-node KiSS cluster
+  replaying the trace via ``simulate(..., chunk_events=65536)``;
+* ``replay_kiss_vs_baseline`` — the paper's headline comparison on the
+  replayed workload: KiSS-vs-unified cold-start and drop deltas, both
+  lanes swept in ONE chunked vmapped program;
+* ``replay_prefix_exact`` — sanity pin: the chunked run's first 100k
+  outcomes equal the monolithic scan of the 100k-event prefix (the
+  acceptance contract; the full bit-equivalence matrix lives in
+  tests/test_replay.py).
+
+Returns ``(csv_lines, payload)`` with stable-keyed summaries so the
+baseline in ``benchmarks/baselines/BENCH_replay.json`` pins the replay
+trajectory across commits.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.sim import Scenario, simulate, sweep
+from repro.workloads import SchemaConfig, synthesize_azure_schema, \
+    trace_from_tables
+
+from .common import csv_line, timed
+
+CHUNK = 65536
+PREFIX = 100_000
+NODE_MB = (2048.0, 2048.0, 4096.0, 8192.0)
+
+# ~1M invocations: 600 functions over a simulated day at ~700/min
+SCHEMA = SchemaConfig(n_funcs=600, n_minutes=1440, rpm_total=700.0,
+                      seed=0)
+
+
+def run():
+    tables, dt_syn = timed(synthesize_azure_schema, SCHEMA)
+    tr, dt_ingest = timed(trace_from_tables, tables)
+    t_len = len(tr)
+    out, payload = [], {}
+    out.append(csv_line(
+        "replay_ingest", (dt_syn + dt_ingest) * 1e6 / t_len,
+        f"{t_len} events from {tables.n_functions} funcs/"
+        f"{tables.n_minutes} min (synth {dt_syn:.1f}s + "
+        f"ingest {dt_ingest:.1f}s)"))
+    payload["replay_n_events"] = t_len
+
+    kiss = Scenario.cluster(NODE_MB, routing="size_aware", max_slots=256,
+                            name="kiss")
+    base = Scenario.cluster(NODE_MB, unified=True, routing="size_aware",
+                            max_slots=256, name="baseline")
+
+    # warm the compile cache on one chunk so the throughput row measures
+    # steady-state replay, not XLA compilation
+    simulate(kiss, tr.head(CHUNK), chunk_events=CHUNK)
+    res, dt = timed(simulate, kiss, tr, chunk_events=CHUNK)
+    eps = t_len / dt
+    out.append(csv_line(
+        "replay_throughput", dt * 1e6 / t_len,
+        f"{eps:,.0f} events/s ({t_len} events, chunk={CHUNK}, "
+        f"{-(-t_len // CHUNK)} chunks)"))
+    payload["replay_events_per_sec"] = eps
+    payload["replay_kiss"] = res.summary()
+
+    pair, dt2 = timed(sweep, tr, [kiss, base], chunk_events=CHUNK)
+    s_k, s_b = pair[0].summary(), pair[1].summary()
+    payload["replay_baseline"] = s_b
+    out.append(csv_line(
+        "replay_kiss_vs_baseline", dt2 * 1e6 / (2 * t_len),
+        f"cold={s_b['cold_start_pct']:.1f}%->{s_k['cold_start_pct']:.1f}% "
+        f"drop={s_b['drop_pct']:.1f}%->{s_k['drop_pct']:.1f}% "
+        f"p95={s_b['latency_p95_s']:.2f}s->{s_k['latency_p95_s']:.2f}s"))
+
+    prefix = tr.head(PREFIX)
+    mono = simulate(kiss, prefix)
+    exact = bool(
+        np.array_equal(mono.outcome, res.outcome[:len(prefix)])
+        and np.array_equal(mono.node, res.node[:len(prefix)]))
+    payload["replay_prefix_exact"] = exact
+    out.append(csv_line(
+        "replay_prefix_exact", 0.0,
+        f"chunked[:{len(prefix)}] == monolithic prefix: {exact}"))
+    if not exact:
+        raise AssertionError(
+            "chunked replay diverged from the monolithic scan")
+    return out, payload

@@ -41,8 +41,8 @@ def _write_json(suite_key: str, doc: dict) -> None:
 
 def main() -> None:
     from . import (cold_start, continuum_bench, drops, failures, fairness,
-                   policy_independence, roofline, serving_bench, stress,
-                   sweep_speed, workload_analysis)
+                   policy_independence, replay, roofline, serving_bench,
+                   stress, sweep_speed, workload_analysis)
 
     suites = [
         ("workload_analysis(Figs2-5)", workload_analysis.run),
@@ -55,6 +55,7 @@ def main() -> None:
         ("sweep_speed(beyond-paper)", sweep_speed.run),
         ("continuum+cluster+chains(beyond-paper)", continuum_bench.run),
         ("failures(beyond-paper)", failures.run),
+        ("replay(azure-2019)", replay.run),
         ("roofline(dry-run)", roofline.run),
     ]
     filters = sys.argv[1:]

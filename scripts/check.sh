@@ -9,13 +9,16 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 # the public API surface must import (and the registries must hold the
 # four built-in routings plus cost_model) before anything else runs; the
-# autoscale smoke pins the Scenario knob end to end on a tiny trace, and
-# the failure smoke pins outage -> re-steer -> empty-pool recovery
+# autoscale smoke pins the Scenario knob end to end on a tiny trace, the
+# failure smoke pins outage -> re-steer -> empty-pool recovery, and the
+# replay smoke pins schema ingest -> chunked scan == monolithic scan
 python - <<'EOF'
 import numpy as np
 from repro.sim import (Autoscale, Failures, Scenario, simulate, sweep,
                        routing_policies)
 from repro.core.types import Trace
+from repro.workloads import (SchemaConfig, synthesize_azure_schema,
+                             trace_from_tables)
 assert {"sticky", "least_loaded", "size_aware", "power_of_two",
         "cost_model"} <= set(routing_policies()), routing_policies()
 n = 96
@@ -35,6 +38,14 @@ assert fail.node_up.shape == (n, 2) and not fail.node_up.all()
 assert (fail.node[~fail.node_up[:, 0]] == 1).all()   # re-steered
 assert fail.n_invalidated > 0                        # recovery re-warms
 assert fail.summary()["downtime_pct"] > 0.0
+rp = trace_from_tables(synthesize_azure_schema(
+    SchemaConfig(n_funcs=24, n_minutes=10, rpm_total=60, seed=0)))
+assert len(rp) and len(rp.head(50)) == 50
+scn = Scenario.cluster((256.0, 512.0), routing="size_aware", max_slots=16)
+mono, chunked = (simulate(scn, rp),
+                 simulate(scn, rp, chunk_events=128))   # non-dividing chunk
+assert (mono.outcome == chunked.outcome).all()
+assert (mono.node == chunked.node).all()
 EOF
 exec python -m pytest -q -m "not slow" \
     tests/test_simulator.py \
@@ -45,4 +56,5 @@ exec python -m pytest -q -m "not slow" \
     tests/test_continuum.py \
     tests/test_compare.py \
     tests/test_workloads.py \
+    tests/test_replay.py \
     "$@"

@@ -1,0 +1,64 @@
+#!/usr/bin/env bash
+# Docs gate, run by the CI `docs` job (and `make docs-check`):
+#   1. every relative markdown link in *.md resolves to a real file;
+#   2. every ```python block in docs/scenarios.md actually runs (each
+#      block is self-contained by convention — see the file's preamble).
+# External http(s) links are NOT fetched (CI must not depend on the
+# network); they are only checked for obvious malformations like the
+# doubled-host typos this script was born from (e.g. user@host@host).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+python - <<'EOF'
+import pathlib
+import re
+import sys
+
+root = pathlib.Path(".")
+fail = 0
+
+md_files = sorted(p for p in root.rglob("*.md")
+                  if not any(part.startswith(".") or part == "results"
+                             for part in p.parts)
+                  and p.name != "ISSUE.md")   # quotes typos by design
+link_re = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+for md in md_files:
+    text = md.read_text()
+    for target in link_re.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#")[0]
+        if not rel:
+            continue
+        path = (md.parent / rel).resolve()
+        if root.resolve() not in path.parents and path != root.resolve():
+            continue   # escapes the repo (e.g. GitHub's ../../actions badge)
+        if not path.exists():
+            print(f"BROKEN LINK {md}: {target}")
+            fail += 1
+    # typo-class sweeps: doubled email hosts, doubled words in prose
+    for m in re.finditer(r"\b[\w.+-]+@[\w.-]+@[\w.-]+", text):
+        print(f"DOUBLED EMAIL {md}: {m.group(0)}")
+        fail += 1
+
+if fail:
+    sys.exit(f"{fail} markdown problem(s)")
+print(f"markdown links OK across {len(md_files)} files")
+EOF
+
+python - <<'EOF'
+import pathlib
+import re
+import sys
+
+src = pathlib.Path("docs/scenarios.md").read_text()
+blocks = re.findall(r"```python\n(.*?)```", src, re.DOTALL)
+if not blocks:
+    sys.exit("docs/scenarios.md: no python snippets found?")
+for i, block in enumerate(blocks, 1):
+    print(f"--- snippet {i}/{len(blocks)} ---", flush=True)
+    # each snippet is self-contained: fresh namespace per block
+    exec(compile(block, f"docs/scenarios.md[{i}]", "exec"), {})
+print(f"all {len(blocks)} docs/scenarios.md snippets ran")
+EOF

@@ -75,6 +75,21 @@ def check_step_mode(mode: str) -> None:
         raise ValueError(f"mode must be 'gather' or 'vmap', got {mode!r}")
 
 
+def check_chunk_events(chunk_events) -> int | None:
+    """Validate (and normalize) a ``chunk_events`` argument — shared by
+    the cluster entrypoints and the ``repro.sim`` front door."""
+    if chunk_events is None:
+        return None
+    try:
+        ok = int(chunk_events) == chunk_events and chunk_events >= 1
+    except (TypeError, ValueError):
+        ok = False
+    if not ok:
+        raise ValueError("chunk_events must be a positive integer or None, "
+                         f"got {chunk_events!r}")
+    return int(chunk_events)
+
+
 class ClusterEvent(NamedTuple):
     """One invocation + its precomputed node hashes."""
 
@@ -567,6 +582,232 @@ def _sweep_cluster_failures(
                                            rng_seed)),
              {"invalidated": invals[g], "node_up": up[g]})
             for g, c in enumerate(configs)]
+
+
+# --------------------------------------------------------------------------
+# chunked-scan execution mode: million-invocation replays, bounded memory
+# --------------------------------------------------------------------------
+# ``simulate(..., chunk_events=...)`` splits the trace host-side into
+# fixed-size chunks and runs each through the SAME per-event scan step,
+# threading the pool state (and, with failures, the invalidation counters)
+# between chunks as a donated carry.  ``lax.scan`` is sequential, so a
+# chunked run is bit-identical to the monolithic scan by construction —
+# regression-tested in tests/test_replay.py — while peak device memory is
+# bounded by one chunk of events + outputs instead of the whole trace.
+# The final partial chunk is padded with the same guaranteed-drop no-op
+# events the autoscale epoch grid uses (they never touch pool state) so
+# every chunk runs the one compiled program.
+
+def _run_cluster_chunk_impl(pools: PoolState, events: ClusterEvent,
+                            routing: jax.Array, unified: jax.Array,
+                            cloud: jax.Array, n_nodes: int, mode: str):
+    """One chunk of the static trace — ``_run_cluster_impl`` that also
+    returns the final pool state so the next chunk can pick it up."""
+    step = _make_step(routing, unified, cloud, n_nodes, mode)
+    pools, (nodes, outcomes) = jax.lax.scan(step, pools, events)
+    return pools, nodes, outcomes
+
+
+def _run_failures_chunk_impl(carry, events: ClusterEvent, up: jax.Array,
+                             recover: jax.Array, routing: jax.Array,
+                             unified: jax.Array, cloud: jax.Array,
+                             n_nodes: int, mode: str):
+    """One chunk of the failure-injected trace; the carry is
+    ``(pools, invalidated i32[N])``."""
+    step = _make_step(routing, unified, cloud, n_nodes, mode)
+
+    def s(c, x):
+        pools, inval = c
+        ev, u, r = x
+        cnt, pools = _invalidate_nodes(pools, r, n_nodes)
+        pools, (node, outcome) = step(pools, ev, u)
+        return (pools, inval + cnt), (node, outcome)
+
+    carry, (nodes, outcomes) = jax.lax.scan(s, carry, (events, up, recover))
+    return carry, nodes, outcomes
+
+
+@functools.lru_cache(maxsize=None)
+def _chunk_runner(n_nodes: int, mode: str):
+    """Jitted chunk step with the carry donated: the previous chunk's pool
+    buffers are reused in place, so a replay's footprint stays flat no
+    matter how many chunks it spans."""
+    return jax.jit(functools.partial(_run_cluster_chunk_impl,
+                                     n_nodes=n_nodes, mode=mode),
+                   donate_argnums=(0,))
+
+
+@functools.lru_cache(maxsize=None)
+def _failures_chunk_runner(n_nodes: int, mode: str):
+    return jax.jit(functools.partial(_run_failures_chunk_impl,
+                                     n_nodes=n_nodes, mode=mode),
+                   donate_argnums=(0,))
+
+
+@functools.lru_cache(maxsize=None)
+def _sweep_chunk_runner(n_nodes: int, mode: str):
+    """Vmapped chunk step for sweeps: lanes stack on the carry/config axes,
+    the chunk's events are shared, and the stacked carry is donated."""
+    return jax.jit(jax.vmap(
+        functools.partial(_run_cluster_chunk_impl, n_nodes=n_nodes,
+                          mode=mode),
+        in_axes=(0, None, 0, 0, 0)), donate_argnums=(0,))
+
+
+@functools.lru_cache(maxsize=None)
+def _sweep_failures_chunk_runner(n_nodes: int, mode: str):
+    return jax.jit(jax.vmap(
+        functools.partial(_run_failures_chunk_impl, n_nodes=n_nodes,
+                          mode=mode),
+        in_axes=((0, 0), None, 0, 0, 0, 0, 0)), donate_argnums=(0,))
+
+
+def _host_events(trace: Trace, n_nodes: int) -> ClusterEvent:
+    """Numpy twin of :func:`cluster_events`: the whole trace stays host-
+    side and chunked replay uploads one slice at a time."""
+    h1, h2 = route_hashes(trace.func_id, n_nodes)
+    return ClusterEvent(
+        t=np.asarray(trace.t, np.float32),
+        func_id=np.asarray(trace.func_id, np.int32),
+        size=np.asarray(trace.size_mb, np.float32),
+        cls=np.asarray(trace.cls, np.int32),
+        warm=np.asarray(trace.warm_dur, np.float32),
+        cold=np.asarray(trace.cold_dur, np.float32),
+        h1=h1, h2=h2)
+
+
+def _chunk_slice(ev: ClusterEvent, s: int, e: int, chunk: int,
+                 drop_size: float) -> ClusterEvent:
+    """Slice ``[s, e)`` out of host-side events, padding a final partial
+    chunk to ``chunk`` with guaranteed-drop no-ops (same fill rule as
+    :func:`_epoch_grid`)."""
+    sl = jax.tree_util.tree_map(lambda a: a[s:e], ev)
+    pad = chunk - (e - s)
+    if pad:
+        last_t = sl.t[-1] if e > s else np.float32(0.0)
+        fills = ClusterEvent(t=last_t, func_id=-2, size=drop_size, cls=0,
+                             warm=0.0, cold=0.0, h1=0, h2=0)
+        sl = jax.tree_util.tree_map(
+            lambda a, f: np.concatenate([a, np.full(pad, f, a.dtype)]),
+            sl, fills)
+    return sl
+
+
+def _chunk_mask(mask: np.ndarray, s: int, e: int, chunk: int, fill: bool,
+                axis: int = 0) -> np.ndarray:
+    """Chunk-slice a per-event mask along ``axis``, padding like
+    :func:`_chunk_slice` (pad rows all-up / never-recovering)."""
+    sl = np.take(mask, np.arange(s, e), axis=axis)
+    pad = chunk - (e - s)
+    if pad:
+        shape = list(sl.shape)
+        shape[axis] = pad
+        sl = np.concatenate([sl, np.full(shape, fill, bool)], axis=axis)
+    return sl
+
+
+def _simulate_cluster_chunked_jax(
+        cfg: ClusterConfig, trace: Trace, rng_seed: int = 0,
+        mode: str = "gather", chunk_events: int = 65536,
+        failures: Failures | None = None):
+    """Chunked twin of ``_simulate_cluster_jax`` /
+    ``_simulate_cluster_failures_jax`` — same return shapes, bit-identical
+    outcomes, peak memory bounded by one chunk."""
+    check_step_mode(mode)
+    chunk = check_chunk_events(chunk_events)
+    n, t_len = cfg.n_nodes, len(trace)
+    ev_np = _host_events(trace, n)
+    routing = jnp.int32(int(cfg.routing))
+    unified = jnp.asarray(cfg.unified, bool)
+    cloud = _cloud_vec(cfg)
+    drop = _drop_size(cfg)
+    nodes_out = np.empty(t_len, np.int32)
+    outcomes_out = np.empty(t_len, np.int32)
+    if failures is None:
+        run = _chunk_runner(n, mode)
+        carry = init_cluster(cfg)
+    else:
+        run = _failures_chunk_runner(n, mode)
+        up_full, rec_full = _failure_masks(failures, trace, n)
+        carry = (init_cluster(cfg), jnp.zeros((n,), jnp.int32))
+    for s in range(0, t_len, chunk):
+        e = min(s + chunk, t_len)
+        ev = _chunk_slice(ev_np, s, e, chunk, drop)
+        if failures is None:
+            carry, nodes, outcomes = run(carry, ev, routing, unified, cloud)
+        else:
+            carry, nodes, outcomes = run(
+                carry, ev, jnp.asarray(_chunk_mask(up_full, s, e, chunk,
+                                                   True)),
+                jnp.asarray(_chunk_mask(rec_full, s, e, chunk, False)),
+                routing, unified, cloud)
+        nodes_out[s:e] = np.asarray(nodes[:e - s])
+        outcomes_out[s:e] = np.asarray(outcomes[:e - s])
+    cloud_cold = cloud_cold_draws(t_len, cfg.cloud_cold_prob, rng_seed)
+    result = build_result(cfg, trace, nodes_out, outcomes_out, cloud_cold)
+    if failures is None:
+        return result
+    return result, {"invalidated": np.asarray(carry[1], np.int64),
+                    "node_up": up_full}
+
+
+def _sweep_cluster_chunked(trace: Trace, configs, rng_seed: int = 0,
+                           mode: str = "gather",
+                           chunk_events: int = 65536,
+                           failures=None):
+    """Chunked twin of ``_sweep_cluster`` / ``_sweep_cluster_failures``:
+    the chunk loop threads one *stacked* donated carry across all lanes.
+    With ``failures`` (one ``Failures``/None per config) returns
+    ``(result, extras)`` pairs, else plain results."""
+    check_step_mode(mode)
+    chunk = check_chunk_events(chunk_events)
+    failing = failures is not None
+    configs, n, pools, routing, unified, cloud = _stack_configs(
+        configs, "chunked sweep")
+    t_len, lanes = len(trace), len(configs)
+    ev_np = _host_events(trace, n)
+    drop = max(_drop_size(c) for c in configs)
+    nodes_out = np.empty((lanes, t_len), np.int32)
+    outcomes_out = np.empty((lanes, t_len), np.int32)
+    if failing:
+        failures = list(failures)
+        if len(failures) != lanes:
+            raise ValueError("chunked failure sweep: need one Failures "
+                             "(or None) per config")
+        masks = [_failure_masks(f, trace, n) for f in failures]
+        up_full = np.stack([m[0] for m in masks])       # [L, T, N]
+        rec_full = np.stack([m[1] for m in masks])
+        run = _sweep_failures_chunk_runner(n, mode)
+        carry = (pools, jnp.zeros((lanes, n), jnp.int32))
+    else:
+        run = _sweep_chunk_runner(n, mode)
+        carry = pools
+    for s in range(0, t_len, chunk):
+        e = min(s + chunk, t_len)
+        ev = _chunk_slice(ev_np, s, e, chunk, drop)
+        if failing:
+            carry, nodes, outcomes = run(
+                carry, ev,
+                jnp.asarray(_chunk_mask(up_full, s, e, chunk, True, axis=1)),
+                jnp.asarray(_chunk_mask(rec_full, s, e, chunk, False,
+                                        axis=1)),
+                routing, unified, cloud)
+        else:
+            carry, nodes, outcomes = run(carry, ev, routing, unified, cloud)
+        nodes_out[:, s:e] = np.asarray(nodes[:, :e - s])
+        outcomes_out[:, s:e] = np.asarray(outcomes[:, :e - s])
+    out = []
+    invals = (np.asarray(carry[1], np.int64) if failing else None)
+    for g, c in enumerate(configs):
+        res = build_result(c, trace, nodes_out[g], outcomes_out[g],
+                           cloud_cold_draws(t_len, c.cloud_cold_prob,
+                                            rng_seed))
+        if failing:
+            out.append((res, {"invalidated": invals[g],
+                              "node_up": up_full[g]}))
+        else:
+            out.append(res)
+    return out
 
 
 def _autoscale_extras(actives, inval, up, failures) -> dict:

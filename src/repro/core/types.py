@@ -62,6 +62,40 @@ class Trace(NamedTuple):
     def select(self, mask: np.ndarray) -> "Trace":
         return Trace(*(a[mask] for a in self))
 
+    def head(self, n: int) -> "Trace":
+        """The first ``n`` events (all of them when ``n >= len``) — the
+        standard way to carve a CI-sized prefix out of a replayed trace.
+        A prefix of a sorted trace is itself a valid sorted trace, and
+        every engine is prefix-consistent: simulating ``head(n)`` gives
+        bit-identical outcomes to the first ``n`` outcomes of the full
+        run."""
+        if n < 0:
+            raise ValueError(f"head(n) needs n >= 0, got {n}")
+        return Trace(*(a[:n] for a in self))
+
+    def window(self, t0: float, t1: float) -> "Trace":
+        """Events with ``t0 <= t < t1`` (absolute times are preserved —
+        pass the result through :meth:`shifted` to re-zero).  Useful for
+        replaying one slice of a multi-hour trace."""
+        if not t0 <= t1:
+            raise ValueError(f"window needs t0 <= t1, got ({t0}, {t1})")
+        return self.select((self.t >= t0) & (self.t < t1))
+
+    def shifted(self, dt: float | None = None) -> "Trace":
+        """Shift all timestamps by ``dt`` (default: re-zero at the first
+        event).  The shift is applied in the trace's own f32 dtype so a
+        quantized trace stays on its time grid when ``dt`` is grid-
+        aligned."""
+        if len(self) == 0:
+            return self
+        if dt is None:
+            dt = -float(self.t[0])
+        t = (self.t.astype(np.float32) + np.float32(dt)).astype(self.t.dtype)
+        # NOT ``_replace``: ``__len__`` is the event count, which breaks
+        # namedtuple's field-count check inside ``_make``
+        return Trace(t, self.func_id, self.size_mb, self.cls,
+                     self.warm_dur, self.cold_dur)
+
 
 @dataclasses.dataclass(frozen=True)
 class PoolConfig:

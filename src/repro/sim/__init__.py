@@ -19,24 +19,62 @@ package is the single front door for it::
         trace)
     adaptive.fracs                                   # f32[epochs, nodes]
 
+Replay-scale traces (``repro.workloads.replay``) run through the same
+door with ``simulate(..., chunk_events=65536)`` — chunked scans,
+bit-identical to the monolithic run, bounded memory.
+
+Registering a third-party policy — the how-to
+---------------------------------------------
+
 Routing and replacement policies are open registries
-(``repro.core.registry``): registering a pure function makes it available
-to the jitted JAX engine (a ``lax.switch`` branch built at trace time),
-the sequential numpy oracle (same function, numpy scalars), and vmapped
-sweeps (the code is data) — bit-identically, with no engine edits::
+(``repro.core.registry``).  A policy is ONE pure function over an array
+namespace ``xp``: the jitted JAX engine builds a ``lax.switch`` branch
+from it at trace time, the sequential numpy oracle dispatches the very
+same function with numpy float32 scalars, and vmapped sweeps carry its
+registered integer code as data — so it is bit-identical across all
+three with no engine edits::
 
     from repro.sim import register_routing
 
-    @register_routing("my_policy")
-    def my_policy(xp, ctx):            # ctx: RouteCtx
-        return xp.argmax(ctx.free)     # -> node index
+    @register_routing("my_policy")           # name usable anywhere a
+    def my_policy(xp, ctx):                  # routing= is accepted
+        # ctx: RouteCtx — h1/h2 (node hashes), size, cls, warm, cold,
+        # free/cap (f32[N] views of each node's target pool),
+        # cloud_rtt_s, cloud_cold_prob, node_up
+        frac = ctx.free / xp.maximum(ctx.cap, xp.float32(1e-6))
+        score = xp.where(ctx.node_up, frac, xp.float32(-xp.inf))
+        return xp.argmax(score)              # -> node index
 
-``policies`` registers ``cost_model`` (predicted end-to-end latency
-routing) exactly this way — from outside the engines.
+Rules of the road:
+
+* **Pure f32 arithmetic only** — the bit-identity contract holds
+  because both engines run the same float32 ops on the same inputs;
+  no python branching on array values (the JAX side is traced).
+* **Respect ``ctx.node_up``** (the live-node mask, PR 4's contract):
+  False entries are failed or not-yet-spawned nodes.  Both engines
+  always populate it (all-True for fully static scenarios), so masking
+  your scores re-steers around outages for free.  A mask-*blind* policy
+  stays correct — the engine drops any request routed to a down node to
+  the cloud without touching pools — it is just lossier.
+* ``ctx.free`` is only populated for policies registered with
+  ``needs_free=True`` (the default); pass ``needs_free=False`` for
+  hash-style policies so the oracle skips the per-event occupancy scan.
+* Registries are **process-global**: duplicate names raise, and
+  registering invalidates the engines' JIT caches (the switch table is
+  rebuilt on the next trace).
+
+``sim/policies.py`` registers ``cost_model`` (predicted end-to-end
+latency routing) exactly this way — from outside the engines — and
+every registered policy automatically shows up in
+``routing_policies()``-driven sweeps and benchmarks.
+
+Replacement policies work the same with ``@register_replacement`` over
+``SlotStats`` (lower priority = evicted first).
 
 The historical entrypoints (``simulate_kiss_jax``, ``sweep_cluster``,
 ...) still work as deprecation shims and are equivalence-tested against
-this API.
+this API.  See also ``docs/architecture.md`` (engine layering, the
+f32-mirroring contract) and ``docs/scenarios.md`` (runnable cookbook).
 """
 from ..core.continuum import Autoscale, Failures
 from ..core.registry import (REPLACEMENT, ROUTING, PolicySpec, RouteCtx,

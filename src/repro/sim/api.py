@@ -17,11 +17,14 @@ from typing import Iterable
 
 from ..cluster.engine import (_simulate_cluster_autoscale_jax,
                               _simulate_cluster_autoscale_ref,
+                              _simulate_cluster_chunked_jax,
                               _simulate_cluster_failures_jax,
                               _simulate_cluster_failures_ref,
                               _simulate_cluster_jax, _simulate_cluster_ref,
                               _sweep_cluster, _sweep_cluster_autoscale,
-                              _sweep_cluster_failures, check_step_mode)
+                              _sweep_cluster_chunked,
+                              _sweep_cluster_failures, check_chunk_events,
+                              check_step_mode)
 from ..core.types import Trace
 from .result import Result
 from .scenario import Scenario
@@ -34,8 +37,21 @@ def _check_engine(engine: str) -> None:
         raise ValueError(f"engine must be one of {_ENGINES}, got {engine!r}")
 
 
+def _check_chunkable(scenario: Scenario, chunk_events) -> int | None:
+    """Shared ``chunk_events`` validation for simulate/sweep."""
+    chunk = check_chunk_events(chunk_events)
+    if chunk is not None and scenario.autoscale is not None:
+        raise ValueError(
+            "chunk_events does not compose with autoscale yet: the "
+            "autoscaled engines run an outer lax.scan over whole epochs, "
+            "which already bounds per-step work — drop chunk_events or "
+            "the Autoscale")
+    return chunk
+
+
 def simulate(scenario: Scenario, trace: Trace, *, engine: str = "jax",
-             mode: str = "gather", rng_seed: int = 0) -> Result:
+             mode: str = "gather", rng_seed: int = 0,
+             chunk_events: int | None = None) -> Result:
     """Run one scenario over ``trace`` and return the unified
     :class:`Result`.
 
@@ -44,19 +60,41 @@ def simulate(scenario: Scenario, trace: Trace, *, engine: str = "jax",
     fixes the cloud cold-start draws (common random numbers: both engines
     and every scenario of a sweep price offloads identically).
 
+    ``chunk_events`` (a positive int, default ``None`` = monolithic)
+    selects the chunked-scan execution mode for the JAX engine: the trace
+    is split host-side into fixed-size chunks and each chunk runs through
+    the same ``lax.scan`` step with the pool state threaded between
+    chunks as a donated carry.  Outcomes are **bit-identical** to the
+    monolithic scan (``lax.scan`` is sequential either way) but peak
+    device memory is bounded by one chunk — the mode that makes
+    million-invocation Azure-2019 replays practical (see
+    ``repro.workloads.replay``).  The reference engine is already
+    one-event-at-a-time and ignores it (after validation), so the same
+    call runs on both engines.
+
     An autoscaled scenario (``scenario.autoscale`` set) runs the epoch
     re-splitting engines instead; the returned :class:`Result` then
     carries the per-epoch split trajectory in ``.fracs`` (and, with node
     scaling, the membership trajectory in ``.active``).  A failure
-    schedule (``scenario.failures``) composes with either path: the
-    result additionally exposes ``.node_up``, ``.node_downtime_pct`` and
-    ``.invalidated``.
+    schedule (``scenario.failures``) composes with either path — and
+    with ``chunk_events`` — the result additionally exposes
+    ``.node_up``, ``.node_downtime_pct`` and ``.invalidated``.
     """
     _check_engine(engine)
     check_step_mode(mode)
+    chunk = _check_chunkable(scenario, chunk_events)
     cfg = scenario.to_cluster_config()
     asc, fails = scenario.autoscale, scenario.failures
     if asc is None:
+        if chunk is not None and engine == "jax":
+            out = _simulate_cluster_chunked_jax(
+                cfg, trace, rng_seed, mode, chunk, failures=fails)
+            if fails is None:
+                return Result(scenario=scenario, raw=out)
+            raw, extras = out
+            return Result(scenario=scenario, raw=raw,
+                          node_up=extras["node_up"],
+                          invalidated=extras["invalidated"])
         if fails is None:
             if engine == "jax":
                 raw = _simulate_cluster_jax(cfg, trace, rng_seed, mode)
@@ -86,7 +124,8 @@ def simulate(scenario: Scenario, trace: Trace, *, engine: str = "jax",
 
 def sweep(trace: Trace, scenarios: Iterable[Scenario], *,
           engine: str = "jax", mode: str = "gather",
-          rng_seed: int = 0) -> list[Result]:
+          rng_seed: int = 0,
+          chunk_events: int | None = None) -> list[Result]:
     """Evaluate many scenarios on one trace; results in input order.
 
     Scenarios sharing stacked shapes (``n_nodes``, ``max_slots``, and —
@@ -99,12 +138,21 @@ def sweep(trace: Trace, scenarios: Iterable[Scenario], *,
     compiled masks vmapped as data, and autoscaled lanes vmap (min_frac,
     max_frac, gain), the node-scaling thresholds, initial membership, and
     any failure masks as data.
+
+    ``chunk_events`` selects the chunked-scan execution mode for every
+    lane (see :func:`simulate`): each group's chunk loop threads ONE
+    stacked donated carry across all of its lanes, so replay-scale
+    traces sweep with the same bounded footprint as a single run.
+    Autoscaled scenarios do not compose with it (yet) and raise.
     """
     _check_engine(engine)
     check_step_mode(mode)
     scenarios = list(scenarios)
     if not scenarios:
         raise ValueError("sweep: scenarios must be non-empty")
+    chunk = None
+    for s in scenarios:
+        chunk = _check_chunkable(s, chunk_events)
     if engine == "ref":
         return [simulate(s, trace, engine="ref", rng_seed=rng_seed)
                 for s in scenarios]
@@ -121,13 +169,23 @@ def sweep(trace: Trace, scenarios: Iterable[Scenario], *,
     for (_, _, epoch, failing), idxs in groups.items():
         cfgs = [scenarios[i].to_cluster_config() for i in idxs]
         if epoch is None and not failing:
-            raws = _sweep_cluster(trace, cfgs, rng_seed=rng_seed, mode=mode)
+            if chunk is not None:
+                raws = _sweep_cluster_chunked(trace, cfgs, rng_seed=rng_seed,
+                                              mode=mode, chunk_events=chunk)
+            else:
+                raws = _sweep_cluster(trace, cfgs, rng_seed=rng_seed,
+                                      mode=mode)
             for i, raw in zip(idxs, raws):
                 results[i] = Result(scenario=scenarios[i], raw=raw)
         elif epoch is None:
-            pairs = _sweep_cluster_failures(
-                trace, cfgs, [scenarios[i].failures for i in idxs],
-                rng_seed=rng_seed, mode=mode)
+            fails = [scenarios[i].failures for i in idxs]
+            if chunk is not None:
+                pairs = _sweep_cluster_chunked(
+                    trace, cfgs, rng_seed=rng_seed, mode=mode,
+                    chunk_events=chunk, failures=fails)
+            else:
+                pairs = _sweep_cluster_failures(
+                    trace, cfgs, fails, rng_seed=rng_seed, mode=mode)
             for i, (raw, extras) in zip(idxs, pairs):
                 results[i] = Result(scenario=scenarios[i], raw=raw,
                                     node_up=extras["node_up"],

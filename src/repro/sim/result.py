@@ -19,12 +19,43 @@ from ..core.types import ClassMetrics, SimResult
 from .scenario import Scenario
 
 #: The keys ``summary()`` always returns, in order — the single source of
-#: truth for the benchmark-stable contract.  ``SimResult.summary`` produces
-#: the first eleven; then the cluster/latency extras; then the per-epoch
-#: split-fraction extras (static scenarios report their one implicit
-#: epoch); then the fault-tolerance extras (downtime/invalidation from
-#: ``failures=``, membership from node-scaled autoscaling — inert zeros /
-#: full membership for scenarios without either).
+#: truth for the benchmark-stable contract (``results/BENCH_*.json``
+#: payloads are keyed by these; appending is allowed, reordering or
+#: renaming is a breaking change).  Field by field:
+#:
+#: ``SimResult.summary()`` block (cluster-wide, per-class):
+#:
+#: * ``cold_start_pct``       — misses / all accesses, percent (§5.2);
+#: * ``drop_pct``             — drops / all accesses, percent;
+#: * ``hit_rate``             — warm hits / all accesses, percent;
+#: * ``small_cold_start_pct`` / ``large_cold_start_pct`` — per size class;
+#: * ``small_drop_pct`` / ``large_drop_pct``             — per size class;
+#: * ``serviceable``          — hits + misses (ran at the edge);
+#: * ``total``                — all invocations;
+#: * ``exec_time_s``          — summed edge execution seconds;
+#: * ``serviceable_mean_s``   — exec_time_s / serviceable.
+#:
+#: Cluster / latency extras (drops priced as cloud offloads):
+#:
+#: * ``n_nodes``              — scenario's node count;
+#: * ``offload_pct``          — drops sent to the cloud tier, percent;
+#: * ``latency_mean_s`` / ``latency_p50_s`` / ``latency_p95_s`` /
+#:   ``latency_p99_s``        — end-to-end latency stats, seconds.
+#:
+#: Autoscaler split trajectory (static scenarios report their one
+#: implicit epoch; unified nodes' inert ``small_frac`` is masked out):
+#:
+#: * ``n_epochs``             — rows in ``Result.fracs``;
+#: * ``frac_final_mean``      — mean final small-pool fraction;
+#: * ``frac_min`` / ``frac_max`` — trajectory extremes.
+#:
+#: Fault tolerance (inert zeros / full membership without ``failures=``
+#: or node scaling):
+#:
+#: * ``downtime_pct``         — mean per-node percent of events down;
+#: * ``n_invalidated``        — residents killed by recovery/retirement
+#:   (the re-warm debt);
+#: * ``n_active_final`` / ``n_active_min`` — membership trajectory ends.
 SUMMARY_KEYS = (
     "cold_start_pct", "drop_pct", "hit_rate",
     "small_cold_start_pct", "large_cold_start_pct",

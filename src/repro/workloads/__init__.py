@@ -1,10 +1,17 @@
-"""Workload substrate: Azure-2019-like synthetic traces, app populations,
-and chained-invocation workloads."""
+"""Workload substrate: Azure-2019-like synthetic traces, real Azure-2019
+schema replay, app populations, and chained-invocation workloads."""
 from .azure import (TraceConfig, bursty_trace, edge_trace, steady_trace,
                     stress_trace, synthesize)
 from .apps import AppPopulation, synthesize_apps
 from .chains import ChainConfig, chained_trace
+from .replay import (AzureTables, ReplayConfig, SchemaConfig,
+                     load_azure_trace, read_azure_csvs,
+                     synthesize_azure_schema, trace_from_tables,
+                     write_azure_csvs)
 
 __all__ = ["TraceConfig", "bursty_trace", "edge_trace", "steady_trace",
            "stress_trace", "synthesize", "AppPopulation", "synthesize_apps",
-           "ChainConfig", "chained_trace"]
+           "ChainConfig", "chained_trace", "AzureTables", "ReplayConfig",
+           "SchemaConfig", "load_azure_trace", "read_azure_csvs",
+           "synthesize_azure_schema", "trace_from_tables",
+           "write_azure_csvs"]

@@ -39,7 +39,7 @@ class TraceConfig:
     duration_s: float = 4 * 3600.0
     # aggregate invocations/sec across each class; tuned so the small:large
     # ratio lands in the paper's 4-6.5x band.  Calibrated (see
-    # EXPERIMENTS.md §Workload-calibration) so that the baseline's
+    # EXPERIMENTS.md, "Workload calibration") so that the baseline's
     # contention collapse and the KiSS recovery happen inside the 1-24 GB
     # edge band the paper sweeps.
     small_rps: float = 2.5
