@@ -1,0 +1,72 @@
+"""Beyond-paper: what does in-scan telemetry cost?
+
+The windowed time-series (``Scenario(..., telemetry=N)``) rides the
+``lax.scan`` carry, so its cost is a handful of scatter-adds per event
+plus a bigger carry.  This suite prices that against the telemetry-free
+run — same trace, same cluster, monolithic and chunked — and exercises
+the export path end to end (trace-event JSON + run manifest written
+under ``results/``).
+
+Reported:
+
+* ``telemetry_off`` / ``telemetry_on`` — us/event with the knob off vs
+  on (the overhead headline), plus the window count;
+* ``telemetry_chunked`` — the chunked-scan twin (identical windows by
+  construction, bounded memory);
+* ``telemetry_export`` — wall cost of ``to_trace_events()`` +
+  ``manifest()`` and the emitted event count.
+"""
+from __future__ import annotations
+
+import os
+
+from repro.sim import Scenario, simulate
+from repro.sim.telemetry import write_manifest
+
+from .common import csv_line, paper_trace, timed
+from .run import RESULTS_DIR
+
+NODE_MB = (1024.0, 2048.0, 6144.0, 6144.0)
+WINDOW = 2048
+
+
+def run():
+    tr = paper_trace(duration_s=3600.0)
+    base = Scenario.cluster(NODE_MB, routing="size_aware", max_slots=256)
+    teld = Scenario.cluster(NODE_MB, routing="size_aware", max_slots=256,
+                            telemetry=WINDOW)
+
+    # warm the jit caches so compile time does not masquerade as overhead
+    simulate(base, tr)
+    simulate(teld, tr)
+
+    out, payload = [], {}
+    r_off, dt_off = timed(simulate, base, tr)
+    r_on, dt_on = timed(simulate, teld, tr)
+    n = len(tr)
+    out.append(csv_line("telemetry_off", dt_off * 1e6 / n,
+                        f"cold={r_off.summary()['cold_start_pct']:.1f}%"))
+    over = 100.0 * (dt_on - dt_off) / dt_off if dt_off else 0.0
+    out.append(csv_line(
+        "telemetry_on", dt_on * 1e6 / n,
+        f"windows={len(r_on.timeline())} overhead={over:+.0f}%"))
+    payload["telemetry_on"] = r_on.summary()
+
+    simulate(teld, tr, chunk_events=4096)   # warm the chunked program
+    r_ch, dt_ch = timed(simulate, teld, tr, chunk_events=4096)
+    out.append(csv_line("telemetry_chunked", dt_ch * 1e6 / n,
+                        f"windows={len(r_ch.timeline())} chunk=4096"))
+
+    def export():
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        doc = r_on.to_trace_events(
+            os.path.join(RESULTS_DIR, "telemetry_bench.trace.json"))
+        write_manifest(r_on.manifest(),
+                       os.path.join(RESULTS_DIR,
+                                    "telemetry_bench.manifest.json"))
+        return doc
+
+    doc, dt_ex = timed(export)
+    out.append(csv_line("telemetry_export", dt_ex * 1e6 / n,
+                        f"trace_events={len(doc['traceEvents'])}"))
+    return out, payload

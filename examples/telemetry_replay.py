@@ -1,0 +1,80 @@
+"""Watch an outage happen: telemetry over a 100k-event Azure replay.
+
+An Azure-2019-schema trace (synthesized — the dataset itself is not
+redistributable) replays through a heterogeneous edge cluster with a
+staggered two-node outage mid-trace, with in-scan telemetry on.  The run
+emits ``results/telemetry_replay.trace.json`` — open it in
+https://ui.perfetto.dev or ``chrome://tracing`` to see, on one timeline:
+
+* the two outage bars (pid "nodes", one per failed node);
+* the drop burst while capacity is out (the ``outcomes`` counter track);
+* the **re-warm cold-start spike right after recovery** — the recovered
+  nodes come back with empty pools, so previously warm functions
+  cold-start again.  The ``invalidated`` track marks the residents the
+  recovery killed; the ``misses`` series spikes immediately after.
+
+The replay is chunked (bounded memory), which changes nothing: window
+indices are global, so the windows are bit-identical to a monolithic
+scan.  A run manifest lands next to the timeline.
+
+Run:  PYTHONPATH=src python examples/telemetry_replay.py
+"""
+import os
+import tempfile
+
+import numpy as np
+
+from repro.sim import Failures, Scenario, simulate, write_manifest
+from repro.workloads import (SchemaConfig, load_azure_trace,
+                             synthesize_azure_schema, write_azure_csvs)
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results")
+
+
+def main():
+    # --- a ~100k-invocation Azure-schema day, CI-synthesized --------------
+    tables = synthesize_azure_schema(SchemaConfig(
+        n_funcs=300, n_minutes=360, rpm_total=300.0, seed=7))
+    with tempfile.TemporaryDirectory() as d:
+        trace = load_azure_trace(*write_azure_csvs(tables, d)).head(100_000)
+    dur = float(trace.t[-1])
+    print(f"{len(trace)} invocations over {dur / 3600:.1f} h")
+
+    # --- staggered mid-trace outage: two nodes down, overlapping ----------
+    fails = Failures(windows=(
+        (0.35 * dur, 0.55 * dur, 0),    # the 1 GB node
+        (0.45 * dur, 0.65 * dur, 2),    # the 4 GB node
+    ))
+    sc = Scenario.cluster((1024.0, 2048.0, 4096.0), routing="size_aware",
+                          max_slots=128, failures=fails,
+                          telemetry=2000, name="azure-outage")
+
+    res = simulate(sc, trace, chunk_events=8192)
+    tel = res.timeline()
+
+    # --- the re-warm story, in numbers ------------------------------------
+    rec = np.flatnonzero(tel.invalidated)      # recovery windows
+    print(f"{len(tel)} windows; recovery kills {res.n_invalidated} warm "
+          f"residents in windows {[int(w) for w in rec]}")
+    last = int(rec[-1])                        # final recovery window
+    cs = tel.cold_start_pct()
+    steady = cs[last + 2:last + 10].mean()     # settled, full cluster
+    print(f"cold-start %: {cs[last]:.1f}% in the recovery window vs "
+          f"{steady:.1f}% once re-warmed — the spike is the "
+          f"{int(tel.invalidated[last])} residents the recovered node "
+          f"lost")
+
+    # --- export: Perfetto timeline + run manifest -------------------------
+    os.makedirs(RESULTS, exist_ok=True)
+    trace_path = os.path.join(RESULTS, "telemetry_replay.trace.json")
+    doc = res.to_trace_events(trace_path)
+    man_path = write_manifest(res.manifest(), os.path.join(
+        RESULTS, "telemetry_replay.manifest.json"))
+    print(f"wrote {trace_path} ({len(doc['traceEvents'])} events) — open "
+          f"it in https://ui.perfetto.dev")
+    print(f"wrote {man_path}")
+
+
+if __name__ == "__main__":
+    main()

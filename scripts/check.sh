@@ -10,8 +10,10 @@ export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 # the public API surface must import (and the registries must hold the
 # four built-in routings plus cost_model) before anything else runs; the
 # autoscale smoke pins the Scenario knob end to end on a tiny trace, the
-# failure smoke pins outage -> re-steer -> empty-pool recovery, and the
-# replay smoke pins schema ingest -> chunked scan == monolithic scan
+# failure smoke pins outage -> re-steer -> empty-pool recovery, the
+# replay smoke pins schema ingest -> chunked scan == monolithic scan,
+# and the telemetry smoke pins windows-sum-to-totals + a valid
+# trace-event export
 python - <<'EOF'
 import numpy as np
 from repro.sim import (Autoscale, Failures, Scenario, simulate, sweep,
@@ -46,6 +48,21 @@ mono, chunked = (simulate(scn, rp),
                  simulate(scn, rp, chunk_events=128))   # non-dividing chunk
 assert (mono.outcome == chunked.outcome).all()
 assert (mono.node == chunked.node).all()
+import json
+tel = simulate(Scenario.cluster((256.0, 256.0), max_slots=16,
+                                routing="least_loaded", telemetry=32,
+                                failures=((20.0, 50.0, 0),)), tr)
+w, s = tel.timeline(), tel.summary()
+assert len(w) == s["n_windows"] == 3
+assert int(w.counts.sum()) == s["total"] == n          # windows sum exactly
+assert int(w.invalidated.sum()) == tel.n_invalidated > 0
+doc = tel.to_trace_events()
+json.dumps(doc)                                        # valid JSON
+assert doc["otherData"]["schema"] == "repro.sim/trace-events@1"
+assert {e["ph"] for e in doc["traceEvents"]} >= {"M", "C", "X"}
+man = tel.manifest()
+assert man["schema"] == "repro.sim/run-manifest@1"
+assert man["trace"]["fingerprint"] and man["summary"] == s
 EOF
 exec python -m pytest -q -m "not slow" \
     tests/test_simulator.py \
@@ -57,4 +74,5 @@ exec python -m pytest -q -m "not slow" \
     tests/test_compare.py \
     tests/test_workloads.py \
     tests/test_replay.py \
+    tests/test_telemetry.py \
     "$@"

@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
 # Docs gate, run by the CI `docs` job (and `make docs-check`):
 #   1. every relative markdown link in *.md resolves to a real file;
-#   2. every ```python block in docs/scenarios.md actually runs (each
-#      block is self-contained by convention — see the file's preamble).
+#   2. every ```python block in docs/scenarios.md and
+#      docs/observability.md actually runs (each block is self-contained
+#      by convention — see the files' preambles).
 # External http(s) links are NOT fetched (CI must not depend on the
 # network); they are only checked for obvious malformations like the
 # doubled-host typos this script was born from (e.g. user@host@host).
@@ -52,13 +53,14 @@ import pathlib
 import re
 import sys
 
-src = pathlib.Path("docs/scenarios.md").read_text()
-blocks = re.findall(r"```python\n(.*?)```", src, re.DOTALL)
-if not blocks:
-    sys.exit("docs/scenarios.md: no python snippets found?")
-for i, block in enumerate(blocks, 1):
-    print(f"--- snippet {i}/{len(blocks)} ---", flush=True)
-    # each snippet is self-contained: fresh namespace per block
-    exec(compile(block, f"docs/scenarios.md[{i}]", "exec"), {})
-print(f"all {len(blocks)} docs/scenarios.md snippets ran")
+for doc in ("docs/scenarios.md", "docs/observability.md"):
+    src = pathlib.Path(doc).read_text()
+    blocks = re.findall(r"```python\n(.*?)```", src, re.DOTALL)
+    if not blocks:
+        sys.exit(f"{doc}: no python snippets found?")
+    for i, block in enumerate(blocks, 1):
+        print(f"--- {doc} snippet {i}/{len(blocks)} ---", flush=True)
+        # each snippet is self-contained: fresh namespace per block
+        exec(compile(block, f"{doc}[{i}]", "exec"), {})
+    print(f"all {len(blocks)} {doc} snippets ran")
 EOF

@@ -158,6 +158,105 @@ def _invalidate_nodes(pools: PoolState, mask_n: jax.Array, n_nodes: int):
     return cnt, pools
 
 
+# --------------------------------------------------------------------------
+# in-scan telemetry: windowed counters riding the scan carry
+# --------------------------------------------------------------------------
+# ``repro.sim.telemetry`` documents the user-facing contract; the engine
+# pieces here keep the accumulator a fixed-shape pytree so it rides any
+# scan carry (monolithic, failure-injected, epoch, or chunked) and vmaps
+# across sweep lanes.  Window indices are *global* event indices computed
+# host-side (``i // window_events``) and carried into the scan as data,
+# so a chunked run scatters into the same windows as a monolithic one —
+# chunked == monolithic holds for ANY chunk size, dividing the window or
+# not.  Row ``n_windows`` is a junk row that absorbs pad events (epoch /
+# chunk padding) and is sliced off host-side by ``_tel_np``.
+
+class TelAcc(NamedTuple):
+    """The in-carry windowed accumulator (one junk row past the end)."""
+
+    counts: jax.Array   # i32[W+1, 2, 3] invocations per (cls, outcome)
+    free: jax.Array     # f32[W+1, N] free MB per node at window end
+    occ: jax.Array      # i32[W+1, N] resident containers at window end
+    inval: jax.Array    # i32[W+1] residents invalidated in the window
+    up: jax.Array       # i32[W+1] failure-up node count at window end
+    active: jax.Array   # i32[W+1] autoscale-active count at window end
+
+
+def _n_windows(n_events: int, window: int) -> int:
+    return -(-n_events // window)
+
+
+def _tel_init(n_windows: int, n_nodes: int) -> TelAcc:
+    w = n_windows + 1
+    return TelAcc(counts=jnp.zeros((w, 2, 3), jnp.int32),
+                  free=jnp.zeros((w, n_nodes), jnp.float32),
+                  occ=jnp.zeros((w, n_nodes), jnp.int32),
+                  inval=jnp.zeros((w,), jnp.int32),
+                  up=jnp.zeros((w,), jnp.int32),
+                  active=jnp.zeros((w,), jnp.int32))
+
+
+def _tel_event(tel: TelAcc, wi: jax.Array, ev: ClusterEvent,
+               outcome: jax.Array, pools: PoolState, n_nodes: int,
+               up_cnt: jax.Array, act_cnt: jax.Array,
+               inval_cnt: jax.Array) -> TelAcc:
+    """Fold one stepped event into its window: counter columns scatter-
+    add, snapshot columns last-write-win (each window reports the state
+    after its final event) — mirrored step for step, through f32 for
+    ``free``, by the oracle in ``core/continuum.py``."""
+    free_n = pools.free.reshape(n_nodes, 2).sum(axis=1)
+    occ_n = (jnp.sum(pools.valid, axis=-1).astype(jnp.int32)
+             .reshape(n_nodes, 2).sum(axis=1))
+    return TelAcc(
+        counts=tel.counts.at[wi, ev.cls, outcome].add(1),
+        free=tel.free.at[wi].set(free_n),
+        occ=tel.occ.at[wi].set(occ_n),
+        inval=tel.inval.at[wi].add(inval_cnt),
+        up=tel.up.at[wi].set(up_cnt),
+        active=tel.active.at[wi].set(act_cnt))
+
+
+def _tel_np(tel: TelAcc, n_windows: int) -> dict:
+    """Host-side view: junk row sliced off, counters widened to i64."""
+    return {
+        "counts": np.asarray(tel.counts, np.int64)[:n_windows],
+        "free_mb": np.asarray(tel.free)[:n_windows],
+        "occupancy": np.asarray(tel.occ, np.int64)[:n_windows],
+        "invalidated": np.asarray(tel.inval, np.int64)[:n_windows],
+        "nodes_up": np.asarray(tel.up, np.int64)[:n_windows],
+        "nodes_active": np.asarray(tel.active, np.int64)[:n_windows]}
+
+
+def _widx(n_events: int, window: int) -> jnp.ndarray:
+    """Global window index per event — scan data, computed host-side."""
+    return jnp.asarray(np.arange(n_events, dtype=np.int32) // window)
+
+
+def _widx_grid(n_events: int, epoch_events: int,
+               window: int) -> jnp.ndarray:
+    """Epoch-shaped [E, e] window indices (pad events index the junk
+    row) — the telemetry analogue of :func:`_epoch_grid`."""
+    e = epoch_events
+    n_epochs = -(-n_events // e)
+    pad = n_epochs * e - n_events
+    idx = np.arange(n_events, dtype=np.int32) // window
+    if pad:
+        idx = np.concatenate(
+            [idx, np.full(pad, _n_windows(n_events, window), np.int32)])
+    return jnp.asarray(idx.reshape(n_epochs, e))
+
+
+def _chunk_widx(s: int, e: int, chunk: int, window: int,
+                n_windows: int) -> jnp.ndarray:
+    """Chunk-slice of the global window indices, padded with the junk
+    index — the telemetry analogue of :func:`_chunk_slice`."""
+    idx = np.arange(s, e, dtype=np.int32) // window
+    pad = chunk - (e - s)
+    if pad:
+        idx = np.concatenate([idx, np.full(pad, n_windows, np.int32)])
+    return jnp.asarray(idx)
+
+
 def _make_step(routing: jax.Array, unified: jax.Array, cloud: jax.Array,
                n_nodes: int, mode: str):
     """Build the per-event scan step (route, then step the routed pool) —
@@ -204,23 +303,44 @@ def _make_step(routing: jax.Array, unified: jax.Array, cloud: jax.Array,
 
 def _run_cluster_impl(pools: PoolState, events: ClusterEvent,
                       routing: jax.Array, unified: jax.Array,
-                      cloud: jax.Array, n_nodes: int, mode: str):
-    """The whole trace in one scan.  Returns (node i32[T], outcome i32[T])."""
+                      cloud: jax.Array, widx=None, tel=None, *,
+                      n_nodes: int, mode: str):
+    """The whole trace in one scan.  Returns (node i32[T], outcome
+    i32[T]); with telemetry (``widx``/``tel`` set) the final
+    :class:`TelAcc` rides along as a third output — ``tel is None``
+    compiles the exact pre-telemetry program."""
     step = _make_step(routing, unified, cloud, n_nodes, mode)
-    _, (nodes, outcomes) = jax.lax.scan(step, pools, events)
-    return nodes, outcomes
+    if tel is None:
+        _, (nodes, outcomes) = jax.lax.scan(step, pools, events)
+        return nodes, outcomes
+    n_up = jnp.int32(n_nodes)
+
+    def s(carry, x):
+        pools, acc = carry
+        ev, wi = x
+        pools, (node, outcome) = step(pools, ev)
+        acc = _tel_event(acc, wi, ev, outcome, pools, n_nodes,
+                         n_up, n_up, jnp.int32(0))
+        return (pools, acc), (node, outcome)
+
+    (_, tel), (nodes, outcomes) = jax.lax.scan(s, (pools, tel),
+                                               (events, widx))
+    return nodes, outcomes, tel
 
 
 def _run_failures_impl(pools: PoolState, events: ClusterEvent,
                        up: jax.Array, recover: jax.Array,
                        routing: jax.Array, unified: jax.Array,
-                       cloud: jax.Array, n_nodes: int, mode: str):
+                       cloud: jax.Array, widx=None, tel=None, *,
+                       n_nodes: int, mode: str):
     """The failure-injected trace in one scan: ``up``/``recover`` are the
     bool[T, N] masks compiled host-side from the ``Failures`` schedule
     (shared verbatim with the oracle).  Each event first clears the pools
     of any node recovering at it (counting the invalidated residents —
     the re-warm debt), then routes with ``RouteCtx.node_up = up[t]``.
-    Returns (node i32[T], outcome i32[T], invalidated i32[N])."""
+    Returns (node i32[T], outcome i32[T], invalidated i32[N]); telemetry
+    appends the final :class:`TelAcc` (recovery invalidations land in the
+    window of the event that observed them)."""
     step = _make_step(routing, unified, cloud, n_nodes, mode)
 
     def s(carry, x):
@@ -230,9 +350,24 @@ def _run_failures_impl(pools: PoolState, events: ClusterEvent,
         pools, (node, outcome) = step(pools, ev, u)
         return (pools, inval + cnt), (node, outcome)
 
-    (_, inval), (nodes, outcomes) = jax.lax.scan(
-        s, (pools, jnp.zeros((n_nodes,), jnp.int32)), (events, up, recover))
-    return nodes, outcomes, inval
+    def s_tel(carry, x):
+        pools, inval, acc = carry
+        ev, u, r, wi = x
+        cnt, pools = _invalidate_nodes(pools, r, n_nodes)
+        pools, (node, outcome) = step(pools, ev, u)
+        acc = _tel_event(acc, wi, ev, outcome, pools, n_nodes,
+                         jnp.sum(u).astype(jnp.int32), jnp.int32(n_nodes),
+                         jnp.sum(cnt))
+        return (pools, inval + cnt, acc), (node, outcome)
+
+    inval0 = jnp.zeros((n_nodes,), jnp.int32)
+    if tel is None:
+        (_, inval), (nodes, outcomes) = jax.lax.scan(
+            s, (pools, inval0), (events, up, recover))
+        return nodes, outcomes, inval
+    (_, inval, tel), (nodes, outcomes) = jax.lax.scan(
+        s_tel, (pools, inval0, tel), (events, up, recover, widx))
+    return nodes, outcomes, inval, tel
 
 
 def _run_autoscale_impl(pools: PoolState, events: ClusterEvent,
@@ -240,8 +375,8 @@ def _run_autoscale_impl(pools: PoolState, events: ClusterEvent,
                         routing: jax.Array, unified: jax.Array,
                         cloud: jax.Array, frac: jax.Array,
                         node_mb: jax.Array, asc: jax.Array,
-                        active0: jax.Array, n_nodes: int, mode: str,
-                        masked: bool = True):
+                        active0: jax.Array, widx=None, tel=None, *,
+                        n_nodes: int, mode: str, masked: bool = True):
     """The autoscaled trace: an outer scan over epochs, the existing event
     scan inside each epoch, and a per-node re-split plus a node
     spawn/retire decision between epochs.
@@ -261,28 +396,40 @@ def _run_autoscale_impl(pools: PoolState, events: ClusterEvent,
     spawn_drop_frac, retire_drop_frac) as data so sweeps can vmap over
     them (+/-inf thresholds = node scaling off), and ``active0`` (bool[N])
     is the starting membership.  Returns (node i32[E, e], outcome
-    i32[E, e], fracs f32[E, N], actives bool[E, N], invalidated i32[N]).
+    i32[E, e], fracs f32[E, N], actives bool[E, N], invalidated i32[N]);
+    telemetry (``widx`` f32[E, e] window indices + a :class:`TelAcc`)
+    appends the final accumulator — retirement invalidations land in the
+    epoch's last real window, recovery invalidations in the window of the
+    event that observed them.
     """
     step = _make_step(routing, unified, cloud, n_nodes, mode)
     tree = jax.tree_util.tree_map
     n = n_nodes
+    tel_on = tel is not None
     mn, mx, gain, spawn_th, retire_th = (asc[0], asc[1], asc[2], asc[3],
                                          asc[4])
     pool_unified = jnp.repeat(unified, 2)            # bool[2N]
 
     def epoch(carry, inp):
-        pools, frac, active, inval = carry
+        if tel_on:
+            pools, frac, active, inval, acc = carry
+        else:
+            pools, frac, active, inval = carry
         evs, val = inp[0], inp[1]
 
         def inner(c, x):
-            pools, press, dropw, inval = c
+            if tel_on:
+                pools, press, dropw, inval, acc = c
+                (ev, v, wi), rest = x[:3], x[3:]
+            else:
+                pools, press, dropw, inval = c
+                (ev, v), rest = x[:2], x[2:]
             if masked:
-                ev, v, u, r = x
+                u, r = rest
                 cnt, pools = _invalidate_nodes(pools, r, n)
                 inval = inval + cnt
                 eff = u & active
             else:
-                ev, v = x
                 eff = active
             pools, (node, outcome) = step(pools, ev, eff)
             # pressure = misses + 2x drops, per (routed node, size class);
@@ -291,12 +438,23 @@ def _run_autoscale_impl(pools: PoolState, events: ClusterEvent,
                               jnp.where(outcome == DROP, 2.0, 0.0))
             press = press.at[node, ev.cls].add(w)
             dropw = dropw + v * jnp.where(outcome == DROP, 1.0, 0.0)
+            if tel_on:
+                acc = _tel_event(
+                    acc, wi, ev, outcome, pools, n,
+                    jnp.sum(u).astype(jnp.int32) if masked
+                    else jnp.int32(n),
+                    jnp.sum(active.astype(jnp.int32)),
+                    jnp.sum(cnt) if masked else jnp.int32(0))
+                return (pools, press, dropw, inval, acc), (node, outcome)
             return (pools, press, dropw, inval), (node, outcome)
 
-        (pools, press, dropw, inval), (nodes, outcomes) = jax.lax.scan(
-            inner, (pools, jnp.zeros((n, 2), jnp.float32),
-                    jnp.float32(0.0), inval),
-            inp)
+        c0 = (pools, jnp.zeros((n, 2), jnp.float32), jnp.float32(0.0),
+              inval) + ((acc,) if tel_on else ())
+        c_end, (nodes, outcomes) = jax.lax.scan(inner, c0, inp)
+        if tel_on:
+            pools, press, dropw, inval, acc = c_end
+        else:
+            pools, press, dropw, inval = c_end
         press_s, press_l = press[:, 0], press[:, 1]
         tot = press_s + press_l
         delta = jnp.where(tot > 0,
@@ -336,12 +494,25 @@ def _run_autoscale_impl(pools: PoolState, events: ClusterEvent,
                       active))
         retire_mask = jnp.zeros((n,), bool).at[cand_retire].set(can_retire)
         cnt, pools = _invalidate_nodes(pools, retire_mask, n)
+        if tel_on:
+            # retirement invalidations belong to the epoch's last real
+            # window (retirement only fires on full epochs, so w_end is
+            # always a real index there)
+            w_end = jnp.max(jnp.where(val > 0, inp[2], -1))
+            acc = acc._replace(inval=acc.inval.at[w_end].add(jnp.sum(cnt)))
+            return ((pools, new_frac, new_active, inval + cnt, acc),
+                    (nodes, outcomes, new_frac, new_active))
         return ((pools, new_frac, new_active, inval + cnt),
                 (nodes, outcomes, new_frac, new_active))
 
-    xs = (events, valid, up, recover) if masked else (events, valid)
-    (_, _, _, inval), (nodes, outcomes, fracs, actives) = jax.lax.scan(
-        epoch, (pools, frac, active0, jnp.zeros((n,), jnp.int32)), xs)
+    xs = ((events, valid) + ((widx,) if tel_on else ())
+          + ((up, recover) if masked else ()))
+    c0 = ((pools, frac, active0, jnp.zeros((n,), jnp.int32))
+          + ((tel,) if tel_on else ()))
+    c_end, (nodes, outcomes, fracs, actives) = jax.lax.scan(epoch, c0, xs)
+    inval = c_end[3]
+    if tel_on:
+        return nodes, outcomes, fracs, actives, inval, c_end[4]
     return nodes, outcomes, fracs, actives, inval
 
 
@@ -356,27 +527,29 @@ _run_autoscale = jax.jit(_run_autoscale_impl,
 
 
 @functools.lru_cache(maxsize=None)
-def _sweep_runner(n_nodes: int, mode: str):
+def _sweep_runner(n_nodes: int, mode: str, tel: bool = False):
     """Cached jitted vmap of the scan, keyed on the static shape args, so
     repeated sweep calls hit the compile cache like ``_run_cluster``
-    does."""
+    does.  ``tel`` lanes share the window-index data and stack their
+    accumulators."""
     return jax.jit(jax.vmap(
         functools.partial(_run_cluster_impl, n_nodes=n_nodes, mode=mode),
-        in_axes=(0, None, 0, 0, 0)))
+        in_axes=(0, None, 0, 0, 0) + ((None, 0) if tel else ())))
 
 
 @functools.lru_cache(maxsize=None)
-def _sweep_failures_runner(n_nodes: int, mode: str):
+def _sweep_failures_runner(n_nodes: int, mode: str, tel: bool = False):
     """Failure analogue of ``_sweep_runner``: every lane carries its own
     compiled up/recover masks as data (same [T, N] shape — lanes bucket by
     mask shape), so mixed failure schedules sweep in one program."""
     return jax.jit(jax.vmap(
         functools.partial(_run_failures_impl, n_nodes=n_nodes, mode=mode),
-        in_axes=(0, None, 0, 0, 0, 0, 0)))
+        in_axes=(0, None, 0, 0, 0, 0, 0) + ((None, 0) if tel else ())))
 
 
 @functools.lru_cache(maxsize=None)
-def _sweep_autoscale_runner(n_nodes: int, mode: str, masked: bool):
+def _sweep_autoscale_runner(n_nodes: int, mode: str, masked: bool,
+                            tel: bool = False):
     """Autoscale analogue of ``_sweep_runner``: configs (pools, masks,
     routing, unified, cloud, frac, node_mb, asc thresholds, active0) vmap
     as data; the epoch grid and validity mask are shared across lanes.
@@ -386,7 +559,8 @@ def _sweep_autoscale_runner(n_nodes: int, mode: str, masked: bool):
         functools.partial(_run_autoscale_impl, n_nodes=n_nodes, mode=mode,
                           masked=masked),
         in_axes=(0, None, None, 0 if masked else None,
-                 0 if masked else None, 0, 0, 0, 0, 0, 0, 0)))
+                 0 if masked else None, 0, 0, 0, 0, 0, 0, 0)
+        + ((None, 0) if tel else ())))
 
 
 def _epoch_grid(events: ClusterEvent, n_events: int, epoch_events: int,
@@ -468,24 +642,39 @@ def _cloud_vec(cfg: ClusterConfig) -> jnp.ndarray:
 # warnings).
 
 def _simulate_cluster_jax(cfg: ClusterConfig, trace: Trace,
-                          rng_seed: int = 0,
-                          mode: str = "gather") -> ClusterResult:
+                          rng_seed: int = 0, mode: str = "gather",
+                          telemetry: int | None = None):
+    """Returns the ``ClusterResult`` — or, with ``telemetry`` (a window
+    length in events), ``(result, {"telemetry": window arrays})``."""
     check_step_mode(mode)
     events = cluster_events(trace, cfg.n_nodes)
-    node, outcome = _run_cluster(
-        init_cluster(cfg), events, jnp.int32(int(cfg.routing)),
-        jnp.asarray(cfg.unified, bool), _cloud_vec(cfg),
-        n_nodes=cfg.n_nodes, mode=mode)
+    args = (init_cluster(cfg), events, jnp.int32(int(cfg.routing)),
+            jnp.asarray(cfg.unified, bool), _cloud_vec(cfg))
+    if telemetry is None:
+        node, outcome = _run_cluster(*args, n_nodes=cfg.n_nodes, mode=mode)
+    else:
+        n_w = _n_windows(len(trace), telemetry)
+        node, outcome, tel = _run_cluster(
+            *args, _widx(len(trace), telemetry),
+            _tel_init(n_w, cfg.n_nodes), n_nodes=cfg.n_nodes, mode=mode)
     cloud_cold = cloud_cold_draws(len(trace), cfg.cloud_cold_prob, rng_seed)
-    return build_result(cfg, trace, np.asarray(node), np.asarray(outcome),
-                        cloud_cold)
+    result = build_result(cfg, trace, np.asarray(node), np.asarray(outcome),
+                          cloud_cold)
+    if telemetry is None:
+        return result
+    return result, {"telemetry": _tel_np(tel, n_w)}
 
 
 def _simulate_cluster_ref(cfg: ClusterConfig, trace: Trace,
-                          rng_seed: int = 0) -> ClusterResult:
-    node, outcome = cluster_outcomes_ref(cfg, trace)
+                          rng_seed: int = 0,
+                          telemetry: int | None = None):
+    out = cluster_outcomes_ref(cfg, trace, telemetry=telemetry)
     cloud_cold = cloud_cold_draws(len(trace), cfg.cloud_cold_prob, rng_seed)
-    return build_result(cfg, trace, node, outcome, cloud_cold)
+    if telemetry is None:
+        node, outcome = out
+        return build_result(cfg, trace, node, outcome, cloud_cold)
+    node, outcome, extras = out
+    return build_result(cfg, trace, node, outcome, cloud_cold), extras
 
 
 def _stack_configs(configs, what: str):
@@ -507,19 +696,42 @@ def _stack_configs(configs, what: str):
     return configs, n, pools, routing, unified, cloud
 
 
+def _stack_tel(n_windows: int, n_nodes: int, lanes: int) -> TelAcc:
+    """One zeroed accumulator per sweep lane, stacked on a leading axis
+    (lanes in a group share the window count, so the stack is dense)."""
+    return jax.tree_util.tree_map(
+        lambda a: jnp.zeros((lanes,) + a.shape, a.dtype),
+        _tel_init(n_windows, n_nodes))
+
+
 def _sweep_cluster(trace: Trace, configs, rng_seed: int = 0,
-                   mode: str = "gather") -> list[ClusterResult]:
+                   mode: str = "gather", telemetry: int | None = None):
+    """Returns one ``ClusterResult`` per config — or, with ``telemetry``,
+    one ``(result, {"telemetry": ...})`` pair per config."""
     check_step_mode(mode)
     configs, n, pools, routing, unified, cloud = _stack_configs(
         configs, "sweep_cluster")
     events = cluster_events(trace, n)
-    nodes, outcomes = _sweep_runner(n, mode)(pools, events, routing,
-                                             unified, cloud)
+    args = (pools, events, routing, unified, cloud)
+    if telemetry is None:
+        nodes, outcomes = _sweep_runner(n, mode)(*args)
+    else:
+        n_w = _n_windows(len(trace), telemetry)
+        nodes, outcomes, tels = _sweep_runner(n, mode, tel=True)(
+            *args, _widx(len(trace), telemetry),
+            _stack_tel(n_w, n, len(configs)))
     nodes, outcomes = np.asarray(nodes), np.asarray(outcomes)
-    return [build_result(c, trace, nodes[g], outcomes[g],
-                         cloud_cold_draws(len(trace), c.cloud_cold_prob,
-                                          rng_seed))
-            for g, c in enumerate(configs)]
+    out = []
+    for g, c in enumerate(configs):
+        res = build_result(c, trace, nodes[g], outcomes[g],
+                           cloud_cold_draws(len(trace), c.cloud_cold_prob,
+                                            rng_seed))
+        if telemetry is None:
+            out.append(res)
+        else:
+            lane = jax.tree_util.tree_map(lambda a: a[g], tels)
+            out.append((res, {"telemetry": _tel_np(lane, n_w)}))
+    return out
 
 
 def _drop_size(cfg: ClusterConfig) -> float:
@@ -530,36 +742,48 @@ def _drop_size(cfg: ClusterConfig) -> float:
 
 def _simulate_cluster_failures_jax(
         cfg: ClusterConfig, failures: Failures, trace: Trace,
-        rng_seed: int = 0, mode: str = "gather"
-        ) -> tuple[ClusterResult, dict]:
+        rng_seed: int = 0, mode: str = "gather",
+        telemetry: int | None = None) -> tuple[ClusterResult, dict]:
     """Failure-injected twin of :func:`_simulate_cluster_jax`: returns
     (ClusterResult, extras) with the compiled ``node_up`` mask and the
-    per-node ``invalidated`` resident counts."""
+    per-node ``invalidated`` resident counts (plus ``"telemetry"`` window
+    arrays when a window length is given)."""
     check_step_mode(mode)
     up, recover = _failure_masks(failures, trace, cfg.n_nodes)
-    node, outcome, inval = _run_failures(
-        init_cluster(cfg), cluster_events(trace, cfg.n_nodes),
-        jnp.asarray(up), jnp.asarray(recover), jnp.int32(int(cfg.routing)),
-        jnp.asarray(cfg.unified, bool), _cloud_vec(cfg),
-        n_nodes=cfg.n_nodes, mode=mode)
+    args = (init_cluster(cfg), cluster_events(trace, cfg.n_nodes),
+            jnp.asarray(up), jnp.asarray(recover),
+            jnp.int32(int(cfg.routing)), jnp.asarray(cfg.unified, bool),
+            _cloud_vec(cfg))
+    extras = {}
+    if telemetry is None:
+        node, outcome, inval = _run_failures(
+            *args, n_nodes=cfg.n_nodes, mode=mode)
+    else:
+        n_w = _n_windows(len(trace), telemetry)
+        node, outcome, inval, tel = _run_failures(
+            *args, _widx(len(trace), telemetry),
+            _tel_init(n_w, cfg.n_nodes), n_nodes=cfg.n_nodes, mode=mode)
+        extras["telemetry"] = _tel_np(tel, n_w)
     cloud_cold = cloud_cold_draws(len(trace), cfg.cloud_cold_prob, rng_seed)
+    extras.update(invalidated=np.asarray(inval, np.int64), node_up=up)
     return (build_result(cfg, trace, np.asarray(node), np.asarray(outcome),
-                         cloud_cold),
-            {"invalidated": np.asarray(inval, np.int64), "node_up": up})
+                         cloud_cold), extras)
 
 
 def _simulate_cluster_failures_ref(
         cfg: ClusterConfig, failures: Failures, trace: Trace,
-        rng_seed: int = 0) -> tuple[ClusterResult, dict]:
-    node, outcome, extras = cluster_outcomes_ref(cfg, trace,
-                                                 failures=failures)
+        rng_seed: int = 0,
+        telemetry: int | None = None) -> tuple[ClusterResult, dict]:
+    node, outcome, extras = cluster_outcomes_ref(
+        cfg, trace, failures=failures, telemetry=telemetry)
     cloud_cold = cloud_cold_draws(len(trace), cfg.cloud_cold_prob, rng_seed)
     return build_result(cfg, trace, node, outcome, cloud_cold), extras
 
 
 def _sweep_cluster_failures(
         trace: Trace, configs, failures, rng_seed: int = 0,
-        mode: str = "gather") -> list[tuple[ClusterResult, dict]]:
+        mode: str = "gather",
+        telemetry: int | None = None) -> list[tuple[ClusterResult, dict]]:
     """Vmapped sweep over failure-injected configs: each lane's compiled
     up/recover masks ride as data (lanes bucket by mask shape, which the
     shared trace and ``n_nodes`` pin)."""
@@ -572,16 +796,28 @@ def _sweep_cluster_failures(
     masks = [_failure_masks(f, trace, n) for f in failures]
     up = np.stack([m[0] for m in masks])
     recover = np.stack([m[1] for m in masks])
-    nodes, outcomes, invals = _sweep_failures_runner(n, mode)(
-        pools, cluster_events(trace, n), jnp.asarray(up),
-        jnp.asarray(recover), routing, unified, cloud)
+    args = (pools, cluster_events(trace, n), jnp.asarray(up),
+            jnp.asarray(recover), routing, unified, cloud)
+    if telemetry is None:
+        nodes, outcomes, invals = _sweep_failures_runner(n, mode)(*args)
+    else:
+        n_w = _n_windows(len(trace), telemetry)
+        nodes, outcomes, invals, tels = _sweep_failures_runner(
+            n, mode, tel=True)(*args, _widx(len(trace), telemetry),
+                               _stack_tel(n_w, n, len(configs)))
     nodes, outcomes = np.asarray(nodes), np.asarray(outcomes)
     invals = np.asarray(invals, np.int64)
-    return [(build_result(c, trace, nodes[g], outcomes[g],
-                          cloud_cold_draws(len(trace), c.cloud_cold_prob,
-                                           rng_seed)),
-             {"invalidated": invals[g], "node_up": up[g]})
-            for g, c in enumerate(configs)]
+    out = []
+    for g, c in enumerate(configs):
+        extras = {"invalidated": invals[g], "node_up": up[g]}
+        if telemetry is not None:
+            lane = jax.tree_util.tree_map(lambda a: a[g], tels)
+            extras["telemetry"] = _tel_np(lane, n_w)
+        out.append((build_result(c, trace, nodes[g], outcomes[g],
+                                 cloud_cold_draws(len(trace),
+                                                  c.cloud_cold_prob,
+                                                  rng_seed)), extras))
+    return out
 
 
 # --------------------------------------------------------------------------
@@ -598,22 +834,40 @@ def _sweep_cluster_failures(
 # events the autoscale epoch grid uses (they never touch pool state) so
 # every chunk runs the one compiled program.
 
-def _run_cluster_chunk_impl(pools: PoolState, events: ClusterEvent,
+def _run_cluster_chunk_impl(carry, events: ClusterEvent,
                             routing: jax.Array, unified: jax.Array,
-                            cloud: jax.Array, n_nodes: int, mode: str):
+                            cloud: jax.Array, widx=None, *,
+                            n_nodes: int, mode: str):
     """One chunk of the static trace — ``_run_cluster_impl`` that also
-    returns the final pool state so the next chunk can pick it up."""
+    returns the final carry so the next chunk can pick it up.  The carry
+    is the pool state, or ``(pools, TelAcc)`` with telemetry (``widx``
+    set): global window indices make the threaded accumulator land events
+    in the same windows a monolithic scan would."""
     step = _make_step(routing, unified, cloud, n_nodes, mode)
-    pools, (nodes, outcomes) = jax.lax.scan(step, pools, events)
-    return pools, nodes, outcomes
+    if widx is None:
+        carry, (nodes, outcomes) = jax.lax.scan(step, carry, events)
+        return carry, nodes, outcomes
+    n_up = jnp.int32(n_nodes)
+
+    def s(c, x):
+        pools, acc = c
+        ev, wi = x
+        pools, (node, outcome) = step(pools, ev)
+        acc = _tel_event(acc, wi, ev, outcome, pools, n_nodes,
+                         n_up, n_up, jnp.int32(0))
+        return (pools, acc), (node, outcome)
+
+    carry, (nodes, outcomes) = jax.lax.scan(s, carry, (events, widx))
+    return carry, nodes, outcomes
 
 
 def _run_failures_chunk_impl(carry, events: ClusterEvent, up: jax.Array,
                              recover: jax.Array, routing: jax.Array,
                              unified: jax.Array, cloud: jax.Array,
-                             n_nodes: int, mode: str):
+                             widx=None, *, n_nodes: int, mode: str):
     """One chunk of the failure-injected trace; the carry is
-    ``(pools, invalidated i32[N])``."""
+    ``(pools, invalidated i32[N])`` — plus the :class:`TelAcc` with
+    telemetry."""
     step = _make_step(routing, unified, cloud, n_nodes, mode)
 
     def s(c, x):
@@ -623,7 +877,22 @@ def _run_failures_chunk_impl(carry, events: ClusterEvent, up: jax.Array,
         pools, (node, outcome) = step(pools, ev, u)
         return (pools, inval + cnt), (node, outcome)
 
-    carry, (nodes, outcomes) = jax.lax.scan(s, carry, (events, up, recover))
+    def s_tel(c, x):
+        pools, inval, acc = c
+        ev, u, r, wi = x
+        cnt, pools = _invalidate_nodes(pools, r, n_nodes)
+        pools, (node, outcome) = step(pools, ev, u)
+        acc = _tel_event(acc, wi, ev, outcome, pools, n_nodes,
+                         jnp.sum(u).astype(jnp.int32), jnp.int32(n_nodes),
+                         jnp.sum(cnt))
+        return (pools, inval + cnt, acc), (node, outcome)
+
+    if widx is None:
+        carry, (nodes, outcomes) = jax.lax.scan(
+            s, carry, (events, up, recover))
+    else:
+        carry, (nodes, outcomes) = jax.lax.scan(
+            s_tel, carry, (events, up, recover, widx))
     return carry, nodes, outcomes
 
 
@@ -645,21 +914,26 @@ def _failures_chunk_runner(n_nodes: int, mode: str):
 
 
 @functools.lru_cache(maxsize=None)
-def _sweep_chunk_runner(n_nodes: int, mode: str):
+def _sweep_chunk_runner(n_nodes: int, mode: str, tel: bool = False):
     """Vmapped chunk step for sweeps: lanes stack on the carry/config axes,
-    the chunk's events are shared, and the stacked carry is donated."""
+    the chunk's events are shared, and the stacked carry is donated.
+    The leading ``0`` is a pytree prefix, so it maps every carry leaf —
+    plain pools or ``(pools, TelAcc)`` alike."""
     return jax.jit(jax.vmap(
         functools.partial(_run_cluster_chunk_impl, n_nodes=n_nodes,
                           mode=mode),
-        in_axes=(0, None, 0, 0, 0)), donate_argnums=(0,))
+        in_axes=(0, None, 0, 0, 0) + ((None,) if tel else ())),
+        donate_argnums=(0,))
 
 
 @functools.lru_cache(maxsize=None)
-def _sweep_failures_chunk_runner(n_nodes: int, mode: str):
+def _sweep_failures_chunk_runner(n_nodes: int, mode: str,
+                                 tel: bool = False):
     return jax.jit(jax.vmap(
         functools.partial(_run_failures_chunk_impl, n_nodes=n_nodes,
                           mode=mode),
-        in_axes=((0, 0), None, 0, 0, 0, 0, 0)), donate_argnums=(0,))
+        in_axes=(0, None, 0, 0, 0, 0, 0) + ((None,) if tel else ())),
+        donate_argnums=(0,))
 
 
 def _host_events(trace: Trace, n_nodes: int) -> ClusterEvent:
@@ -709,10 +983,13 @@ def _chunk_mask(mask: np.ndarray, s: int, e: int, chunk: int, fill: bool,
 def _simulate_cluster_chunked_jax(
         cfg: ClusterConfig, trace: Trace, rng_seed: int = 0,
         mode: str = "gather", chunk_events: int = 65536,
-        failures: Failures | None = None):
+        failures: Failures | None = None,
+        telemetry: int | None = None):
     """Chunked twin of ``_simulate_cluster_jax`` /
     ``_simulate_cluster_failures_jax`` — same return shapes, bit-identical
-    outcomes, peak memory bounded by one chunk."""
+    outcomes, peak memory bounded by one chunk.  Telemetry threads the
+    accumulator through the donated carry with *global* window indices,
+    so the windows match the monolithic scan for any chunk size."""
     check_step_mode(mode)
     chunk = check_chunk_events(chunk_events)
     n, t_len = cfg.n_nodes, len(trace)
@@ -721,52 +998,65 @@ def _simulate_cluster_chunked_jax(
     unified = jnp.asarray(cfg.unified, bool)
     cloud = _cloud_vec(cfg)
     drop = _drop_size(cfg)
+    n_w = None if telemetry is None else _n_windows(t_len, telemetry)
     nodes_out = np.empty(t_len, np.int32)
     outcomes_out = np.empty(t_len, np.int32)
     if failures is None:
         run = _chunk_runner(n, mode)
         carry = init_cluster(cfg)
+        if telemetry is not None:
+            carry = (carry, _tel_init(n_w, n))
     else:
         run = _failures_chunk_runner(n, mode)
         up_full, rec_full = _failure_masks(failures, trace, n)
         carry = (init_cluster(cfg), jnp.zeros((n,), jnp.int32))
+        if telemetry is not None:
+            carry = carry + (_tel_init(n_w, n),)
     for s in range(0, t_len, chunk):
         e = min(s + chunk, t_len)
         ev = _chunk_slice(ev_np, s, e, chunk, drop)
+        kw = ({} if telemetry is None
+              else {"widx": _chunk_widx(s, e, chunk, telemetry, n_w)})
         if failures is None:
-            carry, nodes, outcomes = run(carry, ev, routing, unified, cloud)
+            carry, nodes, outcomes = run(carry, ev, routing, unified,
+                                         cloud, **kw)
         else:
             carry, nodes, outcomes = run(
                 carry, ev, jnp.asarray(_chunk_mask(up_full, s, e, chunk,
                                                    True)),
                 jnp.asarray(_chunk_mask(rec_full, s, e, chunk, False)),
-                routing, unified, cloud)
+                routing, unified, cloud, **kw)
         nodes_out[s:e] = np.asarray(nodes[:e - s])
         outcomes_out[s:e] = np.asarray(outcomes[:e - s])
     cloud_cold = cloud_cold_draws(t_len, cfg.cloud_cold_prob, rng_seed)
     result = build_result(cfg, trace, nodes_out, outcomes_out, cloud_cold)
+    extras = ({} if telemetry is None
+              else {"telemetry": _tel_np(carry[-1], n_w)})
     if failures is None:
-        return result
-    return result, {"invalidated": np.asarray(carry[1], np.int64),
-                    "node_up": up_full}
+        return result if telemetry is None else (result, extras)
+    extras.update(invalidated=np.asarray(carry[1], np.int64),
+                  node_up=up_full)
+    return result, extras
 
 
 def _sweep_cluster_chunked(trace: Trace, configs, rng_seed: int = 0,
                            mode: str = "gather",
                            chunk_events: int = 65536,
-                           failures=None):
+                           failures=None, telemetry: int | None = None):
     """Chunked twin of ``_sweep_cluster`` / ``_sweep_cluster_failures``:
     the chunk loop threads one *stacked* donated carry across all lanes.
-    With ``failures`` (one ``Failures``/None per config) returns
-    ``(result, extras)`` pairs, else plain results."""
+    With ``failures`` (one ``Failures``/None per config) or ``telemetry``
+    returns ``(result, extras)`` pairs, else plain results."""
     check_step_mode(mode)
     chunk = check_chunk_events(chunk_events)
     failing = failures is not None
+    telw = telemetry
     configs, n, pools, routing, unified, cloud = _stack_configs(
         configs, "chunked sweep")
     t_len, lanes = len(trace), len(configs)
     ev_np = _host_events(trace, n)
     drop = max(_drop_size(c) for c in configs)
+    n_w = None if telw is None else _n_windows(t_len, telw)
     nodes_out = np.empty((lanes, t_len), np.int32)
     outcomes_out = np.empty((lanes, t_len), np.int32)
     if failing:
@@ -777,36 +1067,46 @@ def _sweep_cluster_chunked(trace: Trace, configs, rng_seed: int = 0,
         masks = [_failure_masks(f, trace, n) for f in failures]
         up_full = np.stack([m[0] for m in masks])       # [L, T, N]
         rec_full = np.stack([m[1] for m in masks])
-        run = _sweep_failures_chunk_runner(n, mode)
+        run = _sweep_failures_chunk_runner(n, mode, tel=telw is not None)
         carry = (pools, jnp.zeros((lanes, n), jnp.int32))
+        if telw is not None:
+            carry = carry + (_stack_tel(n_w, n, lanes),)
     else:
-        run = _sweep_chunk_runner(n, mode)
+        run = _sweep_chunk_runner(n, mode, tel=telw is not None)
         carry = pools
+        if telw is not None:
+            carry = (carry, _stack_tel(n_w, n, lanes))
     for s in range(0, t_len, chunk):
         e = min(s + chunk, t_len)
         ev = _chunk_slice(ev_np, s, e, chunk, drop)
+        wx = (() if telw is None
+              else (_chunk_widx(s, e, chunk, telw, n_w),))
         if failing:
             carry, nodes, outcomes = run(
                 carry, ev,
                 jnp.asarray(_chunk_mask(up_full, s, e, chunk, True, axis=1)),
                 jnp.asarray(_chunk_mask(rec_full, s, e, chunk, False,
                                         axis=1)),
-                routing, unified, cloud)
+                routing, unified, cloud, *wx)
         else:
-            carry, nodes, outcomes = run(carry, ev, routing, unified, cloud)
+            carry, nodes, outcomes = run(carry, ev, routing, unified,
+                                         cloud, *wx)
         nodes_out[:, s:e] = np.asarray(nodes[:, :e - s])
         outcomes_out[:, s:e] = np.asarray(outcomes[:, :e - s])
     out = []
     invals = (np.asarray(carry[1], np.int64) if failing else None)
+    tels = carry[-1] if telw is not None else None
     for g, c in enumerate(configs):
         res = build_result(c, trace, nodes_out[g], outcomes_out[g],
                            cloud_cold_draws(t_len, c.cloud_cold_prob,
                                             rng_seed))
+        extras = {}
+        if telw is not None:
+            lane = jax.tree_util.tree_map(lambda a: a[g], tels)
+            extras["telemetry"] = _tel_np(lane, n_w)
         if failing:
-            out.append((res, {"invalidated": invals[g],
-                              "node_up": up_full[g]}))
-        else:
-            out.append(res)
+            extras.update(invalidated=invals[g], node_up=up_full[g])
+        out.append((res, extras) if extras else res)
     return out
 
 
@@ -818,13 +1118,15 @@ def _autoscale_extras(actives, inval, up, failures) -> dict:
 
 def _simulate_cluster_autoscale_jax(
         cfg: ClusterConfig, asc: Autoscale, trace: Trace, rng_seed: int = 0,
-        mode: str = "gather", failures: Failures | None = None
+        mode: str = "gather", failures: Failures | None = None,
+        telemetry: int | None = None
         ) -> tuple[ClusterResult, np.ndarray, dict]:
     """Autoscaled twin of :func:`_simulate_cluster_jax`: returns
     (ClusterResult, fracs f32[E, N], extras) — extras carries the
     membership trajectory (``active`` bool[E, N]), per-node
-    ``invalidated`` resident counts, and the ``node_up`` failure mask
-    (None without a schedule)."""
+    ``invalidated`` resident counts, the ``node_up`` failure mask
+    (None without a schedule), and the ``telemetry`` window arrays when a
+    window length is given."""
     check_step_mode(mode)
     n_events = len(trace)
     e = asc.epoch_events
@@ -837,32 +1139,42 @@ def _simulate_cluster_autoscale_jax(
         up_g = _mask_grid(up, n_events, e, True)
         rec_g = _mask_grid(recover, n_events, e, False)
     frac0, node_mb, asc_vec, active0 = _autoscale_inputs(cfg, asc)
-    node, outcome, fracs, actives, inval = _run_autoscale(
-        init_cluster(cfg), epochs, valid, up_g, rec_g,
-        jnp.int32(int(cfg.routing)), jnp.asarray(cfg.unified, bool),
-        _cloud_vec(cfg), frac0, node_mb, asc_vec, active0,
-        n_nodes=cfg.n_nodes, mode=mode, masked=masked)
+    args = (init_cluster(cfg), epochs, valid, up_g, rec_g,
+            jnp.int32(int(cfg.routing)), jnp.asarray(cfg.unified, bool),
+            _cloud_vec(cfg), frac0, node_mb, asc_vec, active0)
+    if telemetry is None:
+        node, outcome, fracs, actives, inval = _run_autoscale(
+            *args, n_nodes=cfg.n_nodes, mode=mode, masked=masked)
+    else:
+        n_w = _n_windows(n_events, telemetry)
+        node, outcome, fracs, actives, inval, tel = _run_autoscale(
+            *args, _widx_grid(n_events, e, telemetry),
+            _tel_init(n_w, cfg.n_nodes),
+            n_nodes=cfg.n_nodes, mode=mode, masked=masked)
     node = np.asarray(node).reshape(-1)[:n_events]
     outcome = np.asarray(outcome).reshape(-1)[:n_events]
     cloud_cold = cloud_cold_draws(n_events, cfg.cloud_cold_prob, rng_seed)
+    extras = _autoscale_extras(actives, inval, up, failures)
+    if telemetry is not None:
+        extras["telemetry"] = _tel_np(tel, n_w)
     return (build_result(cfg, trace, node, outcome, cloud_cold),
-            np.asarray(fracs), _autoscale_extras(actives, inval, up,
-                                                 failures))
+            np.asarray(fracs), extras)
 
 
 def _simulate_cluster_autoscale_ref(
         cfg: ClusterConfig, asc: Autoscale, trace: Trace,
-        rng_seed: int = 0, failures: Failures | None = None
+        rng_seed: int = 0, failures: Failures | None = None,
+        telemetry: int | None = None
         ) -> tuple[ClusterResult, np.ndarray, dict]:
     node, outcome, fracs, extras = cluster_outcomes_ref(
-        cfg, trace, autoscale=asc, failures=failures)
+        cfg, trace, autoscale=asc, failures=failures, telemetry=telemetry)
     cloud_cold = cloud_cold_draws(len(trace), cfg.cloud_cold_prob, rng_seed)
     return build_result(cfg, trace, node, outcome, cloud_cold), fracs, extras
 
 
 def _sweep_cluster_autoscale(
         trace: Trace, configs, autoscales, failures=None, rng_seed: int = 0,
-        mode: str = "gather"
+        mode: str = "gather", telemetry: int | None = None
         ) -> list[tuple[ClusterResult, np.ndarray, dict]]:
     """Vmapped sweep over autoscaled configs.  All configs must share
     ``n_nodes``/``max_slots`` AND all autoscales ``epoch_events`` (the
@@ -904,18 +1216,33 @@ def _sweep_cluster_autoscale(
                           for m in masks])
         rec_g = jnp.stack([_mask_grid(m[1], n_events, e, False)
                            for m in masks])
-    nodes, outcomes, fracs, actives, invals = _sweep_autoscale_runner(
-        n, mode, masked)(pools, epochs, valid, up_g, rec_g, routing,
-                         unified, cloud, frac0, node_mb, asc_vec, active0)
+    args = (pools, epochs, valid, up_g, rec_g, routing, unified, cloud,
+            frac0, node_mb, asc_vec, active0)
+    if telemetry is None:
+        nodes, outcomes, fracs, actives, invals = _sweep_autoscale_runner(
+            n, mode, masked)(*args)
+    else:
+        n_w = _n_windows(n_events, telemetry)
+        nodes, outcomes, fracs, actives, invals, tels = (
+            _sweep_autoscale_runner(n, mode, masked, tel=True)(
+                *args, _widx_grid(n_events, e, telemetry),
+                _stack_tel(n_w, n, len(configs))))
     nodes = np.asarray(nodes).reshape(len(configs), -1)[:, :n_events]
     outcomes = np.asarray(outcomes).reshape(len(configs), -1)[:, :n_events]
     fracs = np.asarray(fracs)
-    return [(build_result(c, trace, nodes[g], outcomes[g],
-                          cloud_cold_draws(n_events, c.cloud_cold_prob,
-                                           rng_seed)),
-             fracs[g], _autoscale_extras(actives[g], invals[g], up[g],
-                                         failures[g]))
-            for g, c in enumerate(configs)]
+    out = []
+    for g, c in enumerate(configs):
+        extras = _autoscale_extras(actives[g], invals[g], up[g],
+                                   failures[g])
+        if telemetry is not None:
+            lane = jax.tree_util.tree_map(lambda a: a[g], tels)
+            extras["telemetry"] = _tel_np(lane, n_w)
+        out.append((build_result(c, trace, nodes[g], outcomes[g],
+                                 cloud_cold_draws(n_events,
+                                                  c.cloud_cold_prob,
+                                                  rng_seed)),
+                    fracs[g], extras))
+    return out
 
 
 @deprecated("repro.sim.simulate(Scenario.cluster(...))")

@@ -316,9 +316,22 @@ def continuum_latencies(trace: Trace, outcome: np.ndarray,
 # the numpy oracle: one event at a time over WarmPool
 # --------------------------------------------------------------------------
 
+def _tel_acc_ref(n_windows: int, n_nodes: int) -> dict:
+    """Zeroed window arrays for the oracle's telemetry mirror — the same
+    schema the engine's ``_tel_np`` emits (``repro.sim.telemetry``
+    documents the fields)."""
+    return {"counts": np.zeros((n_windows, 2, 3), np.int64),
+            "free_mb": np.zeros((n_windows, n_nodes), np.float32),
+            "occupancy": np.zeros((n_windows, n_nodes), np.int64),
+            "invalidated": np.zeros(n_windows, np.int64),
+            "nodes_up": np.zeros(n_windows, np.int64),
+            "nodes_active": np.zeros(n_windows, np.int64)}
+
+
 def cluster_outcomes_ref(cfg: ClusterConfig, trace: Trace,
                          autoscale: Autoscale | None = None,
-                         failures: "Failures | None" = None):
+                         failures: "Failures | None" = None,
+                         telemetry: int | None = None):
     """Sequential oracle for the cluster: returns ``(node, outcome)`` as
     i32[T] arrays (outcome: 0 hit, 1 miss, 2 drop/offload).  With
     ``failures`` an *extras* dict is appended; with ``autoscale`` a
@@ -327,6 +340,13 @@ def cluster_outcomes_ref(cfg: ClusterConfig, trace: Trace,
     ``invalidated`` (i64[N] residents killed by recovery/retirement),
     ``node_up`` (the compiled bool[T, N] failure mask, or None) and — on
     the autoscaled path — ``active`` (bool[E, N] membership trajectory).
+
+    ``telemetry`` (a window length in events) additionally accumulates
+    per-window counters into ``extras["telemetry"]`` — counter updates
+    are exact integers on the emitted outcomes and the ``free_mb``
+    snapshot goes through float32 step for step, so the window arrays are
+    *bit-identical* to the JAX engine's in-scan accumulator (a plain run
+    with telemetry returns ``(node, outcome, extras)``).
 
     The routing decision calls the registered policy function with numpy
     float32 inputs — the same pure function the JAX engine compiles — so
@@ -362,6 +382,28 @@ def cluster_outcomes_ref(cfg: ClusterConfig, trace: Trace,
         up_mask, recover = failures.masks(trace.t, n)
     all_up = np.ones(n, bool)
     invalidated = np.zeros(n, np.int64)
+    tel = None
+    inv_seen = 0
+    if telemetry is not None:
+        tel = _tel_acc_ref(-(-len(trace) // telemetry), n)
+
+    def tel_event(i: int, up_cnt: int, act_cnt: int) -> None:
+        """Mirror of the engine's ``_tel_event``: scatter-add the counts,
+        last-write-win the window-end snapshots (``free_mb`` as one f32
+        add per node, exactly like ``pools.free.reshape(n, 2).sum``)."""
+        nonlocal inv_seen
+        w = i // telemetry
+        tel["counts"][w, int(trace.cls[i]), int(outcome_out[i])] += 1
+        for j in range(n):
+            tel["free_mb"][w, j] = (np.float32(pools[j][0].free_mb)
+                                    + np.float32(pools[j][1].free_mb))
+            tel["occupancy"][w, j] = (len(pools[j][0].containers)
+                                      + len(pools[j][1].containers))
+        tot = int(invalidated.sum())
+        tel["invalidated"][w] += tot - inv_seen
+        inv_seen = tot
+        tel["nodes_up"][w] = up_cnt
+        tel["nodes_active"][w] = act_cnt
 
     def run_event(i: int, eff_up: np.ndarray) -> tuple[int, int]:
         # recovery first: a node coming back up re-joins with empty pools
@@ -397,11 +439,16 @@ def cluster_outcomes_ref(cfg: ClusterConfig, trace: Trace,
 
     if autoscale is None:
         for i in range(len(trace)):
-            run_event(i, all_up if up_mask is None else up_mask[i])
-        if failures is None:
+            eu = all_up if up_mask is None else up_mask[i]
+            run_event(i, eu)
+            if tel is not None:
+                tel_event(i, int(eu.sum()) if up_mask is not None else n, n)
+        if failures is None and tel is None:
             return node_out, outcome_out
-        return node_out, outcome_out, {
-            "invalidated": invalidated, "node_up": up_mask}
+        extras = {} if tel is None else {"telemetry": tel}
+        if failures is not None:
+            extras.update(invalidated=invalidated, node_up=up_mask)
+        return node_out, outcome_out, extras
 
     # -- autoscaled path: epoch loop with float32-mirrored re-splitting ----
     f32 = np.float32
@@ -431,6 +478,9 @@ def cluster_outcomes_ref(cfg: ClusterConfig, trace: Trace,
         elif out == DROP:
             press[node, int(trace.cls[i])] += 2.0
             dropw += 1
+        if tel is not None:
+            tel_event(i, n if up_mask is None else int(up_mask[i].sum()),
+                      int(active.sum()))
         if (i + 1) % e:
             continue
         # full epoch boundary: pressure -> split delta -> resize, every
@@ -467,6 +517,12 @@ def cluster_outcomes_ref(cfg: ClusterConfig, trace: Trace,
             active[j] = False
             invalidated[j] += (pools[j][0].invalidate()
                                + pools[j][1].invalidate())
+        if tel is not None:
+            # retirement invalidations land in the epoch's last window —
+            # the window of event i, mirroring the engine's w_end rule
+            tot = int(invalidated.sum())
+            tel["invalidated"][i // telemetry] += tot - inv_seen
+            inv_seen = tot
         press[:] = 0.0
         dropw = 0
         fracs_out.append(frac.copy())
@@ -478,8 +534,11 @@ def cluster_outcomes_ref(cfg: ClusterConfig, trace: Trace,
              else np.zeros((0, n), np.float32))
     actives = (np.stack(actives_out) if actives_out
                else np.zeros((0, n), bool))
-    return node_out, outcome_out, fracs, {
-        "invalidated": invalidated, "node_up": up_mask, "active": actives}
+    extras = {"invalidated": invalidated, "node_up": up_mask,
+              "active": actives}
+    if tel is not None:
+        extras["telemetry"] = tel
+    return node_out, outcome_out, fracs, extras
 
 
 # --------------------------------------------------------------------------

@@ -55,6 +55,20 @@ class Trace(NamedTuple):
     def __len__(self) -> int:
         return int(self.t.shape[0])
 
+    def replace(self, **fields: np.ndarray) -> "Trace":
+        """Return a copy with the named field arrays swapped out.
+
+        The safe twin of namedtuple ``_replace``, which is broken here:
+        ``_replace`` round-trips through ``_make``, whose length check
+        calls ``len()`` on the result — and this class overrides
+        ``__len__`` to mean the *event count*, not the field count."""
+        d = {f: getattr(self, f) for f in self._fields}
+        for k, v in fields.items():
+            if k not in d:
+                raise ValueError(f"Trace has no field {k!r}")
+            d[k] = v
+        return Trace(**d)
+
     def sorted_by_time(self) -> "Trace":
         order = np.argsort(self.t, kind="stable")
         return Trace(*(a[order] for a in self))
@@ -91,10 +105,7 @@ class Trace(NamedTuple):
         if dt is None:
             dt = -float(self.t[0])
         t = (self.t.astype(np.float32) + np.float32(dt)).astype(self.t.dtype)
-        # NOT ``_replace``: ``__len__`` is the event count, which breaks
-        # namedtuple's field-count check inside ``_make``
-        return Trace(t, self.func_id, self.size_mb, self.cls,
-                     self.warm_dur, self.cold_dur)
+        return self.replace(t=t)
 
 
 @dataclasses.dataclass(frozen=True)

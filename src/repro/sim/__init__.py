@@ -84,11 +84,15 @@ from ..core.registry import (REPLACEMENT, ROUTING, PolicySpec, RouteCtx,
 from .api import simulate, sweep
 from .result import SUMMARY_KEYS, Result
 from .scenario import Scenario
+from .telemetry import (Telemetry, TelemetrySeries, run_manifest,
+                        trace_fingerprint, write_manifest)
 from . import policies  # registers cost_model et al.  # noqa: F401
 
 __all__ = [
     "Autoscale", "Failures", "REPLACEMENT", "ROUTING", "PolicySpec",
     "Result", "RouteCtx", "SUMMARY_KEYS", "Scenario", "SlotStats",
-    "register_replacement", "register_routing", "replacement_policies",
-    "routing_policies", "simulate", "sweep",
+    "Telemetry", "TelemetrySeries", "register_replacement",
+    "register_routing", "replacement_policies", "routing_policies",
+    "run_manifest", "simulate", "sweep", "trace_fingerprint",
+    "write_manifest",
 ]

@@ -15,6 +15,8 @@ from __future__ import annotations
 
 from typing import Iterable
 
+import numpy as np
+
 from ..cluster.engine import (_simulate_cluster_autoscale_jax,
                               _simulate_cluster_autoscale_ref,
                               _simulate_cluster_chunked_jax,
@@ -28,6 +30,7 @@ from ..cluster.engine import (_simulate_cluster_autoscale_jax,
 from ..core.types import Trace
 from .result import Result
 from .scenario import Scenario
+from .telemetry import series_from_arrays, trace_fingerprint
 
 _ENGINES = ("jax", "ref")
 
@@ -47,6 +50,33 @@ def _check_chunkable(scenario: Scenario, chunk_events) -> int | None:
             "which already bounds per-step work — drop chunk_events or "
             "the Autoscale")
     return chunk
+
+
+def _telw(scenario: Scenario) -> int | None:
+    """The scenario's telemetry window length (None = telemetry off) —
+    the engine-level form of the :class:`Telemetry` knob."""
+    t = scenario.telemetry
+    return t.window_events if t is not None else None
+
+
+def _wrap(scenario: Scenario, trace: Trace, raw, extras: dict,
+          fracs, telw: int | None, info: dict) -> Result:
+    """Assemble the :class:`Result`: lift the engine-level telemetry
+    window arrays into a :class:`TelemetrySeries`, attach the run info,
+    and (for autoscaled runs) the epoch-boundary time axis."""
+    tel = (series_from_arrays(extras["telemetry"], trace, telw)
+           if telw is not None else None)
+    ep_t = None
+    if scenario.autoscale is not None and len(trace):
+        e = scenario.autoscale.epoch_events
+        n_ep = -(-len(trace) // e)
+        t = np.asarray(trace.t, np.float32)
+        ep_t = t[np.minimum((np.arange(n_ep) + 1) * e - 1, len(trace) - 1)]
+    return Result(scenario=scenario, raw=raw, epoch_fracs=fracs,
+                  epoch_active=extras.get("active"),
+                  node_up=extras.get("node_up"),
+                  invalidated=extras.get("invalidated"),
+                  telemetry=tel, run_info=info, epoch_t=ep_t)
 
 
 def simulate(scenario: Scenario, trace: Trace, *, engine: str = "jax",
@@ -85,41 +115,42 @@ def simulate(scenario: Scenario, trace: Trace, *, engine: str = "jax",
     chunk = _check_chunkable(scenario, chunk_events)
     cfg = scenario.to_cluster_config()
     asc, fails = scenario.autoscale, scenario.failures
+    telw = _telw(scenario)
+    info = {"engine": engine,
+            "mode": mode if engine == "jax" else None,
+            "chunk_events": chunk if engine == "jax" else None,
+            "rng_seed": rng_seed,
+            "trace_fingerprint": trace_fingerprint(trace)}
+    fracs = None
     if asc is None:
         if chunk is not None and engine == "jax":
             out = _simulate_cluster_chunked_jax(
-                cfg, trace, rng_seed, mode, chunk, failures=fails)
-            if fails is None:
-                return Result(scenario=scenario, raw=out)
-            raw, extras = out
-            return Result(scenario=scenario, raw=raw,
-                          node_up=extras["node_up"],
-                          invalidated=extras["invalidated"])
-        if fails is None:
+                cfg, trace, rng_seed, mode, chunk, failures=fails,
+                telemetry=telw)
+            raw, extras = (out, {}) if fails is None and telw is None \
+                else out
+        elif fails is None:
             if engine == "jax":
-                raw = _simulate_cluster_jax(cfg, trace, rng_seed, mode)
+                out = _simulate_cluster_jax(cfg, trace, rng_seed, mode,
+                                            telemetry=telw)
             else:
-                raw = _simulate_cluster_ref(cfg, trace, rng_seed)
-            return Result(scenario=scenario, raw=raw)
-        if engine == "jax":
+                out = _simulate_cluster_ref(cfg, trace, rng_seed,
+                                            telemetry=telw)
+            raw, extras = (out, {}) if telw is None else out
+        elif engine == "jax":
             raw, extras = _simulate_cluster_failures_jax(
-                cfg, fails, trace, rng_seed, mode)
+                cfg, fails, trace, rng_seed, mode, telemetry=telw)
         else:
             raw, extras = _simulate_cluster_failures_ref(
-                cfg, fails, trace, rng_seed)
-        return Result(scenario=scenario, raw=raw,
-                      node_up=extras["node_up"],
-                      invalidated=extras["invalidated"])
-    if engine == "jax":
+                cfg, fails, trace, rng_seed, telemetry=telw)
+    elif engine == "jax":
         raw, fracs, extras = _simulate_cluster_autoscale_jax(
-            cfg, asc, trace, rng_seed, mode, failures=fails)
+            cfg, asc, trace, rng_seed, mode, failures=fails,
+            telemetry=telw)
     else:
         raw, fracs, extras = _simulate_cluster_autoscale_ref(
-            cfg, asc, trace, rng_seed, failures=fails)
-    return Result(scenario=scenario, raw=raw, epoch_fracs=fracs,
-                  epoch_active=extras["active"],
-                  node_up=extras["node_up"],
-                  invalidated=extras["invalidated"])
+            cfg, asc, trace, rng_seed, failures=fails, telemetry=telw)
+    return _wrap(scenario, trace, raw, extras, fracs, telw, info)
 
 
 def sweep(trace: Trace, scenarios: Iterable[Scenario], *,
@@ -156,49 +187,55 @@ def sweep(trace: Trace, scenarios: Iterable[Scenario], *,
     if engine == "ref":
         return [simulate(s, trace, engine="ref", rng_seed=rng_seed)
                 for s in scenarios]
-    groups: dict[tuple[int, int, int | None, bool], list[int]] = {}
+    groups: dict[tuple[int, int, int | None, bool, int | None],
+                 list[int]] = {}
     for i, s in enumerate(scenarios):
         epoch = s.autoscale.epoch_events if s.autoscale else None
         # failure-free lanes keep the cheap unmasked programs (static and
         # autoscaled alike); failure lanes compile the masked twin and
-        # vmap their schedules as data
+        # vmap their schedules as data; telemetry lanes bucket by window
+        # length (the stacked accumulator shape)
         failing = s.failures is not None
-        groups.setdefault((s.n_nodes, s.max_slots, epoch, failing),
-                          []).append(i)
+        groups.setdefault(
+            (s.n_nodes, s.max_slots, epoch, failing, _telw(s)),
+            []).append(i)
     results: list[Result | None] = [None] * len(scenarios)
-    for (_, _, epoch, failing), idxs in groups.items():
+    info = {"engine": engine, "mode": mode, "chunk_events": chunk,
+            "rng_seed": rng_seed,
+            "trace_fingerprint": trace_fingerprint(trace)}
+    for (_, _, epoch, failing, telw), idxs in groups.items():
         cfgs = [scenarios[i].to_cluster_config() for i in idxs]
         if epoch is None and not failing:
             if chunk is not None:
-                raws = _sweep_cluster_chunked(trace, cfgs, rng_seed=rng_seed,
-                                              mode=mode, chunk_events=chunk)
+                outs = _sweep_cluster_chunked(trace, cfgs, rng_seed=rng_seed,
+                                              mode=mode, chunk_events=chunk,
+                                              telemetry=telw)
             else:
-                raws = _sweep_cluster(trace, cfgs, rng_seed=rng_seed,
-                                      mode=mode)
-            for i, raw in zip(idxs, raws):
-                results[i] = Result(scenario=scenarios[i], raw=raw)
+                outs = _sweep_cluster(trace, cfgs, rng_seed=rng_seed,
+                                      mode=mode, telemetry=telw)
+            for i, out in zip(idxs, outs):
+                raw, extras = (out, {}) if telw is None else out
+                results[i] = _wrap(scenarios[i], trace, raw, extras, None,
+                                   telw, info)
         elif epoch is None:
             fails = [scenarios[i].failures for i in idxs]
             if chunk is not None:
                 pairs = _sweep_cluster_chunked(
                     trace, cfgs, rng_seed=rng_seed, mode=mode,
-                    chunk_events=chunk, failures=fails)
+                    chunk_events=chunk, failures=fails, telemetry=telw)
             else:
                 pairs = _sweep_cluster_failures(
-                    trace, cfgs, fails, rng_seed=rng_seed, mode=mode)
+                    trace, cfgs, fails, rng_seed=rng_seed, mode=mode,
+                    telemetry=telw)
             for i, (raw, extras) in zip(idxs, pairs):
-                results[i] = Result(scenario=scenarios[i], raw=raw,
-                                    node_up=extras["node_up"],
-                                    invalidated=extras["invalidated"])
+                results[i] = _wrap(scenarios[i], trace, raw, extras, None,
+                                   telw, info)
         else:
             triples = _sweep_cluster_autoscale(
                 trace, cfgs, [scenarios[i].autoscale for i in idxs],
                 [scenarios[i].failures for i in idxs],
-                rng_seed=rng_seed, mode=mode)
+                rng_seed=rng_seed, mode=mode, telemetry=telw)
             for i, (raw, fracs, extras) in zip(idxs, triples):
-                results[i] = Result(scenario=scenarios[i], raw=raw,
-                                    epoch_fracs=fracs,
-                                    epoch_active=extras["active"],
-                                    node_up=extras["node_up"],
-                                    invalidated=extras["invalidated"])
+                results[i] = _wrap(scenarios[i], trace, raw, extras, fracs,
+                                   telw, info)
     return results

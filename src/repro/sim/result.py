@@ -16,7 +16,9 @@ import numpy as np
 from ..cluster.metrics import ClusterResult
 from ..core.continuum import ContinuumResult
 from ..core.types import ClassMetrics, SimResult
+from . import telemetry as _telemetry
 from .scenario import Scenario
+from .telemetry import TelemetrySeries
 
 #: The keys ``summary()`` always returns, in order — the single source of
 #: truth for the benchmark-stable contract (``results/BENCH_*.json``
@@ -56,6 +58,10 @@ from .scenario import Scenario
 #: * ``n_invalidated``        — residents killed by recovery/retirement
 #:   (the re-warm debt);
 #: * ``n_active_final`` / ``n_active_min`` — membership trajectory ends.
+#:
+#: Telemetry (inert 0 when the scenario has no ``telemetry=`` knob):
+#:
+#: * ``n_windows``            — windows in ``Result.timeline()``.
 SUMMARY_KEYS = (
     "cold_start_pct", "drop_pct", "hit_rate",
     "small_cold_start_pct", "large_cold_start_pct",
@@ -65,6 +71,7 @@ SUMMARY_KEYS = (
     "latency_mean_s", "latency_p50_s", "latency_p95_s", "latency_p99_s",
     "n_epochs", "frac_final_mean", "frac_min", "frac_max",
     "downtime_pct", "n_invalidated", "n_active_final", "n_active_min",
+    "n_windows",
 )
 
 
@@ -102,6 +109,16 @@ class Result:
     #: i64[N] residents invalidated per node (``None`` = no failures and
     #: no node scaling ran; views report zeros)
     invalidated: np.ndarray | None = None
+    #: the windowed time series (``None`` unless the scenario set
+    #: ``telemetry=``); see :class:`repro.sim.telemetry.TelemetrySeries`
+    telemetry: TelemetrySeries | None = None
+    #: how this run was executed — engine, mode, chunking, rng seed, and
+    #: the trace fingerprint — filled in by ``simulate``/``sweep`` and
+    #: folded into :meth:`manifest`
+    run_info: dict | None = None
+    #: f32[E] event time at each epoch boundary (autoscaled runs only) —
+    #: the time axis for the spawn/retire/re-split timeline tracks
+    epoch_t: np.ndarray | None = None
 
     # -- per-event arrays --------------------------------------------------
     @property
@@ -203,6 +220,33 @@ class Result:
     def as_cluster(self) -> ClusterResult:
         return self.raw
 
+    # -- observability views (repro.sim.telemetry) -------------------------
+    def timeline(self) -> TelemetrySeries:
+        """The windowed time series this run accumulated in-scan.
+
+        Raises ``ValueError`` unless the scenario enabled it —
+        ``Scenario(..., telemetry=Telemetry(window_events=N))`` (or just
+        ``telemetry=N``)."""
+        if self.telemetry is None:
+            raise ValueError(
+                "this run collected no telemetry — set "
+                "Scenario(..., telemetry=Telemetry(window_events=N)) "
+                "(or telemetry=N) and re-run")
+        return self.telemetry
+
+    def to_trace_events(self, path: str | None = None) -> dict:
+        """Chrome trace-event / Perfetto JSON for this run: counter
+        tracks per telemetry window plus outage/autoscale timeline
+        tracks.  Works without telemetry too (timeline tracks only);
+        ``path`` also writes the JSON to disk."""
+        return _telemetry.trace_events(self, path)
+
+    def manifest(self) -> dict:
+        """The structured run manifest (scenario hash, trace fingerprint,
+        engine/mode/chunking, versions, summary) — see
+        :func:`repro.sim.telemetry.run_manifest`."""
+        return _telemetry.run_manifest(self)
+
     # -- the benchmark-stable summary --------------------------------------
     def summary(self) -> dict:
         """Every ``SimResult.summary()`` key plus the cluster/latency and
@@ -230,6 +274,8 @@ class Result:
             "n_invalidated": self.n_invalidated,
             "n_active_final": int(self.active[-1].sum()),
             "n_active_min": int(self.n_active.min()),
+            "n_windows": (len(self.telemetry)
+                          if self.telemetry is not None else 0),
         })
         # the key contract must hold even under `python -O` (a bare assert
         # would let key drift ship silently into results/BENCH_*.json)

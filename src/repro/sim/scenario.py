@@ -29,6 +29,7 @@ import numpy as np
 
 from ..core.continuum import Autoscale, ClusterConfig, Failures
 from ..core.registry import REPLACEMENT, ROUTING
+from .telemetry import Telemetry
 
 
 def _is_seq(x) -> bool:
@@ -74,6 +75,11 @@ class Scenario:
     its pools are frozen, and it recovers *empty* — previously warm
     functions cold-start again, which the ``invalidated``/``downtime``
     metrics expose.
+
+    ``telemetry`` (a :class:`repro.sim.telemetry.Telemetry`, a window
+    length in events, or a kwargs dict; ``None`` = off) makes both
+    engines accumulate the windowed time series inside the scan —
+    ``Result.timeline()`` / ``Result.to_trace_events()`` then expose it.
     """
 
     node_mb: tuple[float, ...]
@@ -86,6 +92,7 @@ class Scenario:
     max_slots: int = 1024
     autoscale: Autoscale | None = None
     failures: Failures | None = None
+    telemetry: Telemetry | None = None
     name: str = ""
 
     def __post_init__(self):
@@ -149,6 +156,17 @@ class Scenario:
                     f"[min_frac, max_frac] = [{asc.min_frac}, "
                     f"{asc.max_frac}]")
             object.__setattr__(self, "autoscale", asc)
+        if self.telemetry is not None:
+            t = self.telemetry
+            if isinstance(t, int) and not isinstance(t, bool):
+                t = Telemetry(window_events=t)
+            elif isinstance(t, dict):
+                t = Telemetry(**t)
+            if not isinstance(t, Telemetry):
+                raise ValueError(
+                    "telemetry must be a Telemetry, a window length in "
+                    f"events, a kwargs dict, or None, got {t!r}")
+            object.__setattr__(self, "telemetry", t)
         # canonicalize policies to registered names (raises on unknown)
         object.__setattr__(
             self, "replacement",

@@ -114,3 +114,35 @@ def test_update_repins_baselines(dirs, capsys):
 def test_update_without_results_exits(dirs):
     with pytest.raises(SystemExit):
         compare.update()
+
+
+def test_compile_only_regression_warns_not_fails(dirs, capsys):
+    base, res = dirs
+    # wall doubled but the execute component is flat: extra XLA compiles
+    # (a new lane, a cache miss) — worth a warning, not a gate failure
+    _write(base, "c", {"wall_s": 10.0, "compile_s": 2.0, "execute_s": 8.0})
+    _write(res, "c", {"wall_s": 20.0, "compile_s": 11.8, "execute_s": 8.2})
+    assert compare.compare() == 0
+    out = capsys.readouterr().out
+    assert "WARNING: compile-only" in out and "REGRESSION" not in out
+    # but an execute-side regression still fails, split or no split
+    _write(res, "c", {"wall_s": 20.0, "compile_s": 2.0, "execute_s": 18.0})
+    assert compare.compare() == 1
+    # and docs without the split (pre-split baselines) keep failing hard
+    _write(base, "d", {"wall_s": 10.0})
+    _write(res, "d", {"wall_s": 20.0})
+    assert compare.compare() == 1
+
+
+def test_manifests_are_not_wall_clock_docs(dirs, capsys):
+    base, res = dirs
+    _write(base, "a", {"wall_s": 10.0})
+    _write(res, "a", {"wall_s": 10.0})
+    # a manifest beside the doc must be invisible to the gate (it has no
+    # wall_s semantics and --update must not pin it as a baseline)
+    with open(os.path.join(res, "BENCH_a.manifest.json"), "w") as f:
+        json.dump({"schema": "repro.sim/bench-manifest@1"}, f)
+    assert compare.compare() == 0
+    assert "manifest" not in capsys.readouterr().out
+    compare.update()
+    assert not os.path.exists(os.path.join(base, "BENCH_a.manifest.json"))
