@@ -1,0 +1,91 @@
+"""Beyond-paper: chain-aware SLO benchmark (``repro.sim.chains``).
+
+Serverless workflows are *chains* with end-to-end deadlines; this suite
+measures what the per-invocation benchmarks cannot — chain-complete
+latency and deadline-miss rate — and whether SLO-aware routing pays.
+
+One vmapped sweep: EVERY registered routing policy (anything added via
+``@register_routing`` is benchmarked automatically, ``slack_aware``
+included) x three SLO regimes on a memory-pressured 2-node edge cluster
+that loses one node for half the run (the PR 4 failure machinery) —
+degraded capacity is exactly where chain-blind routing storms the
+surviving pools with already-doomed work:
+
+* ``none``  — chains tracked, no deadline (only drops can miss);
+* ``tight`` — deadline = 4x each chain's all-warm critical path
+  (one small cold start of headroom);
+* ``loose`` — deadline = 8x the warm path.
+
+The verdict row compares ``slack_aware`` (the first policy to read
+``RouteCtx.chain_slack``: doomed chains are shed to the cloud through
+the down node, savable ones stay sticky) against the best *chain-blind*
+routing on tight-SLO deadline misses.
+
+Returns ``(csv_lines, payload)`` with stable-keyed ``Result.summary()``
+dicts — ``n_chains`` / ``chain_latency_mean_s`` / ``chain_p95_s`` /
+``deadline_miss_pct`` ride every summary now — for
+``results/BENCH_chains_slo.json``.
+"""
+from __future__ import annotations
+
+from repro.sim import Chains, Scenario, routing_policies, sweep
+from repro.workloads.chains import ChainConfig, chained_trace
+
+from .common import csv_line, timed
+
+#: the SLO regimes swept per routing (name -> Chains knob)
+REGIMES = (("none", Chains()),
+           ("tight", Chains(slack=4.0)),
+           ("loose", Chains(slack=8.0)))
+
+#: 2 x 2 GB nodes, with node 1 down from t=300s to t=1200s: half the
+#: run is single-node degraded capacity — the regime the SLO-aware
+#: shedding targets
+NODE_MB = (2048.0, 2048.0)
+OUTAGE = ((300.0, 1200.0, 1),)
+
+
+def chain_grid(tr):
+    """All registered routings x SLO regimes as ONE vmapped sweep;
+    returns ``{(routing, regime): Result}``."""
+    names = routing_policies()
+    keys, scns = [], []
+    for name in names:
+        for regime, ch in REGIMES:
+            keys.append((name, regime))
+            scns.append(Scenario.cluster(
+                NODE_MB, routing=name, max_slots=256, chains=ch,
+                failures=OUTAGE, name=f"{name}-{regime}"))
+    return dict(zip(keys, sweep(tr, scns)))
+
+
+def run():
+    tr = chained_trace(ChainConfig(duration_s=1800.0, arrivals_rps=1.0,
+                                   seed=0))
+    grid, dt = timed(chain_grid, tr)
+    out, payload = [], {}
+    for (name, regime), res in grid.items():
+        payload[f"chains_{name}_{regime}"] = res.summary()
+        out.append(csv_line(
+            f"chains_{name}_{regime}",
+            dt * 1e6 / (len(grid) * len(tr)),
+            f"miss={res.deadline_miss_pct:.1f}% "
+            f"p95={res.chain_p95_s:.2f}s "
+            f"mean={res.chains.chain_latency_mean_s:.2f}s "
+            f"offload={res.offload_pct:.1f}%"))
+
+    # verdict: does reading chain_slack beat every chain-blind routing
+    # where it matters (tight SLO, deadline-miss rate)?
+    blind = {n: grid[(n, "tight")].deadline_miss_pct
+             for n in routing_policies() if n != "slack_aware"}
+    best = min(blind, key=blind.get)
+    aware = grid[("slack_aware", "tight")].deadline_miss_pct
+    if aware < blind[best]:
+        verdict = (f"slack_aware {aware:.1f}% vs best chain-blind "
+                   f"{best} {blind[best]:.1f}% deadline-miss (tight SLO)")
+    else:
+        verdict = (f"chain-blind {best} holds {blind[best]:.1f}% vs "
+                   f"slack_aware {aware:.1f}% deadline-miss (tight SLO)")
+    out.append(csv_line("chains_slo_improvement", 0.0,
+                        verdict + f" over {grid[best, 'tight'].chains.n_chains} chains"))
+    return out, payload

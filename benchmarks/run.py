@@ -76,9 +76,10 @@ def _write_manifest(suite_key: str, manifest: dict) -> None:
 def main() -> None:
     from repro.sim.telemetry import BENCH_MANIFEST_SCHEMA, versions
 
-    from . import (cold_start, continuum_bench, drops, failures, fairness,
-                   policy_independence, replay, roofline, serving_bench,
-                   stress, sweep_speed, telemetry, workload_analysis)
+    from . import (chains, cold_start, continuum_bench, drops, failures,
+                   fairness, policy_independence, replay, roofline,
+                   serving_bench, stress, sweep_speed, telemetry,
+                   workload_analysis)
 
     _install_compile_listener()
     suites = [
@@ -91,6 +92,7 @@ def main() -> None:
         ("serving_integration", serving_bench.run),
         ("sweep_speed(beyond-paper)", sweep_speed.run),
         ("continuum+cluster+chains(beyond-paper)", continuum_bench.run),
+        ("chains_slo(beyond-paper)", chains.run),
         ("failures(beyond-paper)", failures.run),
         ("telemetry(beyond-paper)", telemetry.run),
         ("replay(azure-2019)", replay.run),

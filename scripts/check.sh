@@ -8,21 +8,24 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 # the public API surface must import (and the registries must hold the
-# four built-in routings plus cost_model) before anything else runs; the
-# autoscale smoke pins the Scenario knob end to end on a tiny trace, the
-# failure smoke pins outage -> re-steer -> empty-pool recovery, the
-# replay smoke pins schema ingest -> chunked scan == monolithic scan,
-# and the telemetry smoke pins windows-sum-to-totals + a valid
-# trace-event export
+# four built-in routings plus cost_model and slack_aware) before
+# anything else runs; the autoscale smoke pins the Scenario knob end to
+# end on a tiny trace, the failure smoke pins outage -> re-steer ->
+# empty-pool recovery, the replay smoke pins schema ingest -> chunked
+# scan == monolithic scan, the telemetry smoke pins
+# windows-sum-to-totals + a valid trace-event export, and the chain
+# smoke pins per-chain accounting consistency + the slack_aware win
+# over sticky under a 2-node outage
 python - <<'EOF'
 import numpy as np
-from repro.sim import (Autoscale, Failures, Scenario, simulate, sweep,
-                       routing_policies)
+from repro.sim import (Autoscale, Chains, Failures, Scenario, simulate,
+                       sweep, routing_policies)
 from repro.core.types import Trace
 from repro.workloads import (SchemaConfig, synthesize_azure_schema,
                              trace_from_tables)
 assert {"sticky", "least_loaded", "size_aware", "power_of_two",
-        "cost_model"} <= set(routing_policies()), routing_policies()
+        "cost_model", "slack_aware"} <= set(routing_policies()), \
+    routing_policies()
 n = 96
 tr = Trace(t=np.arange(n, dtype=np.float32),
            func_id=np.arange(n, dtype=np.int32) % 7,
@@ -63,6 +66,23 @@ assert {e["ph"] for e in doc["traceEvents"]} >= {"M", "C", "X"}
 man = tel.manifest()
 assert man["schema"] == "repro.sim/run-manifest@1"
 assert man["trace"]["fingerprint"] and man["summary"] == s
+# chain smoke: per-chain sums consistent with summary(), and slack_aware
+# (shed doomed chains through the down node) beats chain-blind sticky on
+# deadline misses in a 2-node pressure scenario with a mid-run outage
+from repro.workloads.chains import ChainConfig, chained_trace
+ctr = chained_trace(ChainConfig(duration_s=600.0, seed=0))
+ch_scn = [Scenario.cluster((2048.0, 2048.0), routing=r, max_slots=128,
+                           chains=Chains(slack=4.0), telemetry=256,
+                           failures=((100.0, 450.0, 1),))
+          for r in ("sticky", "slack_aware")]
+st, sa = sweep(ctr, ch_scn)
+for r in (st, sa):
+    cm, s = r.chain_metrics(), r.summary()
+    assert s["n_chains"] == cm.n_chains > 0
+    assert s["deadline_miss_pct"] == cm.deadline_miss_pct
+    assert int(r.timeline().chain_miss.sum()) == int(cm.missed.sum())
+assert sa.deadline_miss_pct < st.deadline_miss_pct, \
+    (sa.deadline_miss_pct, st.deadline_miss_pct)
 EOF
 exec python -m pytest -q -m "not slow" \
     tests/test_simulator.py \
@@ -75,4 +95,5 @@ exec python -m pytest -q -m "not slow" \
     tests/test_workloads.py \
     tests/test_replay.py \
     tests/test_telemetry.py \
+    tests/test_chains.py \
     "$@"

@@ -58,13 +58,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.compat import deprecated
-from ..core.continuum import (Autoscale, ClusterConfig, Failures,
+from ..core.continuum import (Autoscale, ChainPlan, ClusterConfig, Failures,
                               cloud_cold_draws, cluster_outcomes_ref,
                               route_hashes)
 from ..core.pool_jax import (Event, PoolState, init_pool, pool_resize,
                              pool_step)
 from ..core.registry import ROUTING, RouteCtx
-from ..core.types import DROP, MISS, PoolConfig, Trace
+from ..core.types import DROP, HIT, MISS, PoolConfig, Trace
 from .metrics import ClusterResult, build_result
 
 
@@ -126,15 +126,16 @@ def init_cluster(cfg: ClusterConfig) -> PoolState:
 
 
 def _route(routing: jax.Array, ev: ClusterEvent, free_t: jax.Array,
-           cap_t: jax.Array, cloud: jax.Array,
-           node_up: jax.Array) -> jax.Array:
+           cap_t: jax.Array, cloud: jax.Array, node_up: jax.Array,
+           chain_slack: jax.Array, chain_stage: jax.Array) -> jax.Array:
     """The in-scan routing decision: a ``lax.switch`` over every policy in
     the routing registry (same pure functions the numpy oracle dispatches),
     indexed by the ``routing`` code carried as data."""
     ctx = RouteCtx(h1=ev.h1, h2=ev.h2, size=ev.size, cls=ev.cls,
                    warm=ev.warm, cold=ev.cold, free=free_t, cap=cap_t,
                    cloud_rtt_s=cloud[0], cloud_cold_prob=cloud[1],
-                   node_up=node_up)
+                   node_up=node_up, chain_slack=chain_slack,
+                   chain_stage=chain_stage)
     branches = [
         (lambda _, fn=spec.fn: jnp.asarray(fn(jnp, ctx)).astype(jnp.int32))
         for spec in ROUTING.specs()
@@ -180,6 +181,7 @@ class TelAcc(NamedTuple):
     inval: jax.Array    # i32[W+1] residents invalidated in the window
     up: jax.Array       # i32[W+1] failure-up node count at window end
     active: jax.Array   # i32[W+1] autoscale-active count at window end
+    cmiss: jax.Array    # i32[W+1] chain deadline misses in the window
 
 
 def _n_windows(n_events: int, window: int) -> int:
@@ -193,17 +195,19 @@ def _tel_init(n_windows: int, n_nodes: int) -> TelAcc:
                   occ=jnp.zeros((w, n_nodes), jnp.int32),
                   inval=jnp.zeros((w,), jnp.int32),
                   up=jnp.zeros((w,), jnp.int32),
-                  active=jnp.zeros((w,), jnp.int32))
+                  active=jnp.zeros((w,), jnp.int32),
+                  cmiss=jnp.zeros((w,), jnp.int32))
 
 
 def _tel_event(tel: TelAcc, wi: jax.Array, ev: ClusterEvent,
                outcome: jax.Array, pools: PoolState, n_nodes: int,
                up_cnt: jax.Array, act_cnt: jax.Array,
-               inval_cnt: jax.Array) -> TelAcc:
+               inval_cnt: jax.Array, miss_cnt: jax.Array) -> TelAcc:
     """Fold one stepped event into its window: counter columns scatter-
     add, snapshot columns last-write-win (each window reports the state
     after its final event) — mirrored step for step, through f32 for
-    ``free``, by the oracle in ``core/continuum.py``."""
+    ``free``, by the oracle in ``core/continuum.py``.  ``miss_cnt`` is
+    the event's chain deadline-miss flag (0/1; always 0 off-chains)."""
     free_n = pools.free.reshape(n_nodes, 2).sum(axis=1)
     occ_n = (jnp.sum(pools.valid, axis=-1).astype(jnp.int32)
              .reshape(n_nodes, 2).sum(axis=1))
@@ -213,7 +217,8 @@ def _tel_event(tel: TelAcc, wi: jax.Array, ev: ClusterEvent,
         occ=tel.occ.at[wi].set(occ_n),
         inval=tel.inval.at[wi].add(inval_cnt),
         up=tel.up.at[wi].set(up_cnt),
-        active=tel.active.at[wi].set(act_cnt))
+        active=tel.active.at[wi].set(act_cnt),
+        cmiss=tel.cmiss.at[wi].add(miss_cnt))
 
 
 def _tel_np(tel: TelAcc, n_windows: int) -> dict:
@@ -224,7 +229,8 @@ def _tel_np(tel: TelAcc, n_windows: int) -> dict:
         "occupancy": np.asarray(tel.occ, np.int64)[:n_windows],
         "invalidated": np.asarray(tel.inval, np.int64)[:n_windows],
         "nodes_up": np.asarray(tel.up, np.int64)[:n_windows],
-        "nodes_active": np.asarray(tel.active, np.int64)[:n_windows]}
+        "nodes_active": np.asarray(tel.active, np.int64)[:n_windows],
+        "chain_miss": np.asarray(tel.cmiss, np.int64)[:n_windows]}
 
 
 def _widx(n_events: int, window: int) -> jnp.ndarray:
@@ -257,6 +263,159 @@ def _chunk_widx(s: int, e: int, chunk: int, window: int,
     return jnp.asarray(idx)
 
 
+# --------------------------------------------------------------------------
+# in-scan chain accounting: per-chain end-to-end state riding the carry
+# --------------------------------------------------------------------------
+# ``core.continuum.compile_chains`` turns a chained trace into a
+# ``ChainPlan`` host-side; the engine carries one f32 latency row per
+# chain (+ the junk row ``n_chains`` that absorbs pad events, exactly
+# like the telemetry junk window) through every scan shape — monolithic,
+# failure-injected, epoch, chunked — and the oracle mirrors each update
+# through float32 in the same event order, so the two engines' chain
+# latencies and deadline-miss flags are bit-identical by construction.
+# The plan's per-event arrays ride as ``xs`` data shared across sweep
+# lanes; the per-chain deadline vector and the cloud cold draws are
+# per-lane data (lanes differ in Chains config / cloud_cold_prob).
+
+class ChainXs(NamedTuple):
+    """Per-event chain scan data (host-compiled, shared across lanes)."""
+
+    cid: jax.Array    # i32[T] dense chain row (junk row for pad events)
+    stage: jax.Array  # i32[T] 0-based stage (-1 pad)
+    last: jax.Array   # bool[T] event is its chain's final stage
+
+
+class ChainAcc(NamedTuple):
+    """The in-carry per-chain accumulator (one junk row past the end)."""
+
+    lat: jax.Array      # f32[C+1] accumulated end-to-end latency
+    dropped: jax.Array  # bool[C+1] any stage dropped so far
+    done: jax.Array     # bool[C+1] final stage observed
+    missed: jax.Array   # bool[C+1] deadline missed (judged at last stage)
+
+
+def _chain_init(n_chains: int) -> ChainAcc:
+    c = n_chains + 1
+    return ChainAcc(lat=jnp.zeros((c,), jnp.float32),
+                    dropped=jnp.zeros((c,), bool),
+                    done=jnp.zeros((c,), bool),
+                    missed=jnp.zeros((c,), bool))
+
+
+def _chain_pre(chain: ChainAcc, cdl: jax.Array, cx: ChainXs):
+    """Pre-step chain view for routing: (remaining slack f32, stage i32).
+    A no-deadline chain has ``cdl = +inf`` so its slack is ``+inf``."""
+    return cdl[cx.cid] - chain.lat[cx.cid], cx.stage
+
+
+def _chain_event(chain: ChainAcc, cx: ChainXs, ccold: jax.Array,
+                 cdl: jax.Array, ev: ClusterEvent, outcome: jax.Array,
+                 cloud: jax.Array):
+    """Fold one stepped event into its chain row: price the stage like
+    ``continuum_latencies`` (hit -> warm, miss -> cold, drop -> RTT +
+    cloud with the pre-drawn ``ccold`` flip), accumulate in f32, and at
+    the chain's final stage judge the deadline — a dropped stage misses
+    regardless of time.  Returns ``(chain, miss i32)`` so telemetry can
+    window the miss.  Pad events land in the junk row with
+    ``last=False`` and can never flag a miss."""
+    stage_lat = jnp.where(
+        outcome == HIT, ev.warm,
+        jnp.where(outcome == MISS, ev.cold,
+                  cloud[0] + jnp.where(ccold, ev.cold, ev.warm)))
+    final = chain.lat[cx.cid] + stage_lat
+    new_dropped = chain.dropped[cx.cid] | (outcome == DROP)
+    miss = cx.last & (new_dropped | (final > cdl[cx.cid]))
+    return ChainAcc(
+        lat=chain.lat.at[cx.cid].set(final),
+        dropped=chain.dropped.at[cx.cid].set(new_dropped),
+        done=chain.done.at[cx.cid].set(chain.done[cx.cid] | cx.last),
+        missed=chain.missed.at[cx.cid].set(chain.missed[cx.cid] | miss)
+    ), miss.astype(jnp.int32)
+
+
+def _chain_np(chain: ChainAcc, n_chains: int) -> dict:
+    """Host-side view: junk row sliced off (the oracle's ``chain_np``
+    twin — bit-identical arrays)."""
+    return {"latency": np.asarray(chain.lat)[:n_chains],
+            "dropped": np.asarray(chain.dropped)[:n_chains],
+            "done": np.asarray(chain.done)[:n_chains],
+            "missed": np.asarray(chain.missed)[:n_chains]}
+
+
+def _stack_chain(n_chains: int, lanes: int) -> ChainAcc:
+    """One zeroed chain accumulator per sweep lane (lanes in a group
+    share the trace, hence the chain count — the stack is dense)."""
+    return jax.tree_util.tree_map(
+        lambda a: jnp.zeros((lanes,) + a.shape, a.dtype),
+        _chain_init(n_chains))
+
+
+def _chain_xs(plan: ChainPlan) -> ChainXs:
+    """The plan's per-event arrays as scan data."""
+    return ChainXs(cid=jnp.asarray(plan.cid, jnp.int32),
+                   stage=jnp.asarray(plan.stage, jnp.int32),
+                   last=jnp.asarray(plan.last, bool))
+
+
+def _chain_xs_np(plan: ChainPlan) -> ChainXs:
+    """Numpy twin of :func:`_chain_xs` for the chunked host loop."""
+    return ChainXs(cid=np.asarray(plan.cid, np.int32),
+                   stage=np.asarray(plan.stage, np.int32),
+                   last=np.asarray(plan.last, bool))
+
+
+def _chain_grid(plan: ChainPlan, n_events: int,
+                epoch_events: int) -> ChainXs:
+    """Epoch-shaped [E, e] chain xs (pad events index the junk row) —
+    the chain analogue of :func:`_epoch_grid`."""
+    e = epoch_events
+    n_epochs = -(-n_events // e)
+    pad = n_epochs * e - n_events
+    xs = _chain_xs_np(plan)
+    if pad:
+        fills = ChainXs(cid=plan.n_chains, stage=-1, last=False)
+        xs = jax.tree_util.tree_map(
+            lambda a, f: np.concatenate([a, np.full(pad, f, a.dtype)]),
+            xs, fills)
+    return jax.tree_util.tree_map(
+        lambda a: jnp.asarray(a.reshape(n_epochs, e)), xs)
+
+
+def _chunk_chain(xs: ChainXs, n_chains: int, s: int, e: int,
+                 chunk: int) -> ChainXs:
+    """Chunk-slice of the per-event chain xs, padded with junk-row
+    no-ops — the chain analogue of :func:`_chunk_slice`."""
+    sl = jax.tree_util.tree_map(lambda a: a[s:e], xs)
+    pad = chunk - (e - s)
+    if pad:
+        fills = ChainXs(cid=n_chains, stage=-1, last=False)
+        sl = jax.tree_util.tree_map(
+            lambda a, f: np.concatenate([a, np.full(pad, f, a.dtype)]),
+            sl, fills)
+    return jax.tree_util.tree_map(jnp.asarray, sl)
+
+
+def _grid_pad(arr: np.ndarray, n_events: int, epoch_events: int,
+              fill) -> jnp.ndarray:
+    """Pad a per-event 1-D array to whole epochs and reshape [E, e]."""
+    e = epoch_events
+    n_epochs = -(-n_events // e)
+    pad = n_epochs * e - n_events
+    if pad:
+        arr = np.concatenate([arr, np.full(pad, fill, arr.dtype)])
+    return jnp.asarray(arr.reshape(n_epochs, e))
+
+
+def _chunk_pad(arr: np.ndarray, s: int, e: int, chunk: int,
+               fill) -> jnp.ndarray:
+    """Chunk-slice a per-event 1-D array, padding to ``chunk``."""
+    sl = arr[s:e]
+    pad = chunk - (e - s)
+    if pad:
+        sl = np.concatenate([sl, np.full(pad, fill, arr.dtype)])
+    return jnp.asarray(sl)
+
+
 def _make_step(routing: jax.Array, unified: jax.Array, cloud: jax.Array,
                n_nodes: int, mode: str):
     """Build the per-event scan step (route, then step the routed pool) —
@@ -264,18 +423,24 @@ def _make_step(routing: jax.Array, unified: jax.Array, cloud: jax.Array,
     the autoscaled epoch scan.  ``up_n`` (bool[N], optional) is the
     live-node mask: routing policies read it via ``RouteCtx.node_up`` and
     a request still routed to a down node drops to the cloud without
-    touching any pool (down pools are frozen)."""
+    touching any pool (down pools are frozen).  ``cslack``/``cstage``
+    (optional f32/i32 scalars) are the event's chain slack and stage for
+    ``RouteCtx`` — constants ``+inf``/``-1`` when chains are off, so
+    slack-aware policies degrade to their slack-rich branch."""
     n = n_nodes
     tree = jax.tree_util.tree_map
     all_up = jnp.ones((n,), bool)
+    no_slack, no_stage = jnp.float32(jnp.inf), jnp.int32(-1)
 
-    def step(pools, ev, up_n=None):
+    def step(pools, ev, up_n=None, cslack=None, cstage=None):
         free2 = pools.free.reshape(n, 2)
         cap2 = pools.capacity.reshape(n, 2)
         tgt = jnp.where(unified, 0, ev.cls)          # i32[N] pool per node
         lanes = jnp.arange(n)
         node = _route(routing, ev, free2[lanes, tgt], cap2[lanes, tgt],
-                      cloud, all_up if up_n is None else up_n)
+                      cloud, all_up if up_n is None else up_n,
+                      no_slack if cslack is None else cslack,
+                      no_stage if cstage is None else cstage)
         ok = jnp.bool_(True) if up_n is None else up_n[node]
         p = node * 2 + tgt[node]
         core_ev = Event(ev.t, ev.func_id, ev.size, ev.cls, ev.warm, ev.cold)
@@ -303,35 +468,62 @@ def _make_step(routing: jax.Array, unified: jax.Array, cloud: jax.Array,
 
 def _run_cluster_impl(pools: PoolState, events: ClusterEvent,
                       routing: jax.Array, unified: jax.Array,
-                      cloud: jax.Array, widx=None, tel=None, *,
+                      cloud: jax.Array, widx=None, tel=None, cxs=None,
+                      ccold=None, cdl=None, chain=None, *,
                       n_nodes: int, mode: str):
     """The whole trace in one scan.  Returns (node i32[T], outcome
     i32[T]); with telemetry (``widx``/``tel`` set) the final
-    :class:`TelAcc` rides along as a third output — ``tel is None``
-    compiles the exact pre-telemetry program."""
+    :class:`TelAcc` rides along, and with chains (``cxs``/``ccold``/
+    ``cdl``/``chain`` set) the final :class:`ChainAcc` comes last —
+    ``tel is None and chain is None`` compiles the exact pre-telemetry,
+    pre-chain program."""
     step = _make_step(routing, unified, cloud, n_nodes, mode)
-    if tel is None:
+    tel_on, ch_on = tel is not None, chain is not None
+    if not tel_on and not ch_on:
         _, (nodes, outcomes) = jax.lax.scan(step, pools, events)
         return nodes, outcomes
     n_up = jnp.int32(n_nodes)
 
     def s(carry, x):
-        pools, acc = carry
-        ev, wi = x
-        pools, (node, outcome) = step(pools, ev)
-        acc = _tel_event(acc, wi, ev, outcome, pools, n_nodes,
-                         n_up, n_up, jnp.int32(0))
-        return (pools, acc), (node, outcome)
+        pools = carry[0]
+        acc = carry[1] if tel_on else None
+        chain = carry[-1] if ch_on else None
+        ev = x[0]
+        wi = x[1] if tel_on else None
+        if ch_on:
+            cx, cc = x[-2], x[-1]
+            slack, stg = _chain_pre(chain, cdl, cx)
+            pools, (node, outcome) = step(pools, ev, None, slack, stg)
+            chain, miss = _chain_event(chain, cx, cc, cdl, ev, outcome,
+                                       cloud)
+        else:
+            pools, (node, outcome) = step(pools, ev)
+            miss = jnp.int32(0)
+        if tel_on:
+            acc = _tel_event(acc, wi, ev, outcome, pools, n_nodes,
+                             n_up, n_up, jnp.int32(0), miss)
+        carry = ((pools,) + ((acc,) if tel_on else ())
+                 + ((chain,) if ch_on else ()))
+        return carry, (node, outcome)
 
-    (_, tel), (nodes, outcomes) = jax.lax.scan(s, (pools, tel),
-                                               (events, widx))
-    return nodes, outcomes, tel
+    c0 = ((pools,) + ((tel,) if tel_on else ())
+          + ((chain,) if ch_on else ()))
+    xs = ((events,) + ((widx,) if tel_on else ())
+          + ((cxs, ccold) if ch_on else ()))
+    c_end, (nodes, outcomes) = jax.lax.scan(s, c0, xs)
+    out = (nodes, outcomes)
+    if tel_on:
+        out = out + (c_end[1],)
+    if ch_on:
+        out = out + (c_end[-1],)
+    return out
 
 
 def _run_failures_impl(pools: PoolState, events: ClusterEvent,
                        up: jax.Array, recover: jax.Array,
                        routing: jax.Array, unified: jax.Array,
-                       cloud: jax.Array, widx=None, tel=None, *,
+                       cloud: jax.Array, widx=None, tel=None, cxs=None,
+                       ccold=None, cdl=None, chain=None, *,
                        n_nodes: int, mode: str):
     """The failure-injected trace in one scan: ``up``/``recover`` are the
     bool[T, N] masks compiled host-side from the ``Failures`` schedule
@@ -340,34 +532,47 @@ def _run_failures_impl(pools: PoolState, events: ClusterEvent,
     the re-warm debt), then routes with ``RouteCtx.node_up = up[t]``.
     Returns (node i32[T], outcome i32[T], invalidated i32[N]); telemetry
     appends the final :class:`TelAcc` (recovery invalidations land in the
-    window of the event that observed them)."""
+    window of the event that observed them) and chains append the final
+    :class:`ChainAcc` last."""
     step = _make_step(routing, unified, cloud, n_nodes, mode)
+    tel_on, ch_on = tel is not None, chain is not None
 
     def s(carry, x):
-        pools, inval = carry
-        ev, u, r = x
+        pools, inval = carry[0], carry[1]
+        acc = carry[2] if tel_on else None
+        chain = carry[-1] if ch_on else None
+        ev, u, r = x[0], x[1], x[2]
+        wi = x[3] if tel_on else None
         cnt, pools = _invalidate_nodes(pools, r, n_nodes)
-        pools, (node, outcome) = step(pools, ev, u)
-        return (pools, inval + cnt), (node, outcome)
-
-    def s_tel(carry, x):
-        pools, inval, acc = carry
-        ev, u, r, wi = x
-        cnt, pools = _invalidate_nodes(pools, r, n_nodes)
-        pools, (node, outcome) = step(pools, ev, u)
-        acc = _tel_event(acc, wi, ev, outcome, pools, n_nodes,
-                         jnp.sum(u).astype(jnp.int32), jnp.int32(n_nodes),
-                         jnp.sum(cnt))
-        return (pools, inval + cnt, acc), (node, outcome)
+        if ch_on:
+            cx, cc = x[-2], x[-1]
+            slack, stg = _chain_pre(chain, cdl, cx)
+            pools, (node, outcome) = step(pools, ev, u, slack, stg)
+            chain, miss = _chain_event(chain, cx, cc, cdl, ev, outcome,
+                                       cloud)
+        else:
+            pools, (node, outcome) = step(pools, ev, u)
+            miss = jnp.int32(0)
+        if tel_on:
+            acc = _tel_event(acc, wi, ev, outcome, pools, n_nodes,
+                             jnp.sum(u).astype(jnp.int32),
+                             jnp.int32(n_nodes), jnp.sum(cnt), miss)
+        carry = ((pools, inval + cnt) + ((acc,) if tel_on else ())
+                 + ((chain,) if ch_on else ()))
+        return carry, (node, outcome)
 
     inval0 = jnp.zeros((n_nodes,), jnp.int32)
-    if tel is None:
-        (_, inval), (nodes, outcomes) = jax.lax.scan(
-            s, (pools, inval0), (events, up, recover))
-        return nodes, outcomes, inval
-    (_, inval, tel), (nodes, outcomes) = jax.lax.scan(
-        s_tel, (pools, inval0, tel), (events, up, recover, widx))
-    return nodes, outcomes, inval, tel
+    c0 = ((pools, inval0) + ((tel,) if tel_on else ())
+          + ((chain,) if ch_on else ()))
+    xs = ((events, up, recover) + ((widx,) if tel_on else ())
+          + ((cxs, ccold) if ch_on else ()))
+    c_end, (nodes, outcomes) = jax.lax.scan(s, c0, xs)
+    out = (nodes, outcomes, c_end[1])
+    if tel_on:
+        out = out + (c_end[2],)
+    if ch_on:
+        out = out + (c_end[-1],)
+    return out
 
 
 def _run_autoscale_impl(pools: PoolState, events: ClusterEvent,
@@ -375,7 +580,8 @@ def _run_autoscale_impl(pools: PoolState, events: ClusterEvent,
                         routing: jax.Array, unified: jax.Array,
                         cloud: jax.Array, frac: jax.Array,
                         node_mb: jax.Array, asc: jax.Array,
-                        active0: jax.Array, widx=None, tel=None, *,
+                        active0: jax.Array, widx=None, tel=None, cxs=None,
+                        ccold=None, cdl=None, chain=None, *,
                         n_nodes: int, mode: str, masked: bool = True):
     """The autoscaled trace: an outer scan over epochs, the existing event
     scan inside each epoch, and a per-node re-split plus a node
@@ -400,38 +606,49 @@ def _run_autoscale_impl(pools: PoolState, events: ClusterEvent,
     telemetry (``widx`` f32[E, e] window indices + a :class:`TelAcc`)
     appends the final accumulator — retirement invalidations land in the
     epoch's last real window, recovery invalidations in the window of the
-    event that observed them.
+    event that observed them.  Chains (epoch-shaped ``cxs``/``ccold`` +
+    the deadline vector and a :class:`ChainAcc`) append the final chain
+    accumulator last — pad events land in its junk row.
     """
     step = _make_step(routing, unified, cloud, n_nodes, mode)
     tree = jax.tree_util.tree_map
     n = n_nodes
     tel_on = tel is not None
+    ch_on = chain is not None
     mn, mx, gain, spawn_th, retire_th = (asc[0], asc[1], asc[2], asc[3],
                                          asc[4])
     pool_unified = jnp.repeat(unified, 2)            # bool[2N]
 
     def epoch(carry, inp):
-        if tel_on:
-            pools, frac, active, inval, acc = carry
-        else:
-            pools, frac, active, inval = carry
+        pools, frac, active, inval = (carry[0], carry[1], carry[2],
+                                      carry[3])
+        acc = carry[4] if tel_on else None
+        chain = carry[-1] if ch_on else None
         evs, val = inp[0], inp[1]
 
         def inner(c, x):
-            if tel_on:
-                pools, press, dropw, inval, acc = c
-                (ev, v, wi), rest = x[:3], x[3:]
-            else:
-                pools, press, dropw, inval = c
-                (ev, v), rest = x[:2], x[2:]
+            pools, press, dropw, inval = c[0], c[1], c[2], c[3]
+            acc = c[4] if tel_on else None
+            chain = c[-1] if ch_on else None
+            ev, v = x[0], x[1]
+            wi = x[2] if tel_on else None
+            k = 3 if tel_on else 2
             if masked:
-                u, r = rest
+                u, r = x[k], x[k + 1]
                 cnt, pools = _invalidate_nodes(pools, r, n)
                 inval = inval + cnt
                 eff = u & active
             else:
                 eff = active
-            pools, (node, outcome) = step(pools, ev, eff)
+            if ch_on:
+                cx, cc = x[-2], x[-1]
+                slack, stg = _chain_pre(chain, cdl, cx)
+                pools, (node, outcome) = step(pools, ev, eff, slack, stg)
+                chain, miss = _chain_event(chain, cx, cc, cdl, ev,
+                                           outcome, cloud)
+            else:
+                pools, (node, outcome) = step(pools, ev, eff)
+                miss = jnp.int32(0)
             # pressure = misses + 2x drops, per (routed node, size class);
             # pad events carry v == 0 and contribute nothing
             w = v * jnp.where(outcome == MISS, 1.0,
@@ -444,17 +661,21 @@ def _run_autoscale_impl(pools: PoolState, events: ClusterEvent,
                     jnp.sum(u).astype(jnp.int32) if masked
                     else jnp.int32(n),
                     jnp.sum(active.astype(jnp.int32)),
-                    jnp.sum(cnt) if masked else jnp.int32(0))
-                return (pools, press, dropw, inval, acc), (node, outcome)
-            return (pools, press, dropw, inval), (node, outcome)
+                    jnp.sum(cnt) if masked else jnp.int32(0), miss)
+            c = ((pools, press, dropw, inval)
+                 + ((acc,) if tel_on else ()) + ((chain,) if ch_on else ()))
+            return c, (node, outcome)
 
-        c0 = (pools, jnp.zeros((n, 2), jnp.float32), jnp.float32(0.0),
-              inval) + ((acc,) if tel_on else ())
+        c0 = ((pools, jnp.zeros((n, 2), jnp.float32), jnp.float32(0.0),
+               inval) + ((acc,) if tel_on else ())
+              + ((chain,) if ch_on else ()))
         c_end, (nodes, outcomes) = jax.lax.scan(inner, c0, inp)
+        pools, press, dropw, inval = (c_end[0], c_end[1], c_end[2],
+                                      c_end[3])
         if tel_on:
-            pools, press, dropw, inval, acc = c_end
-        else:
-            pools, press, dropw, inval = c_end
+            acc = c_end[4]
+        if ch_on:
+            chain = c_end[-1]
         press_s, press_l = press[:, 0], press[:, 1]
         tot = press_s + press_l
         delta = jnp.where(tot > 0,
@@ -500,20 +721,23 @@ def _run_autoscale_impl(pools: PoolState, events: ClusterEvent,
             # always a real index there)
             w_end = jnp.max(jnp.where(val > 0, inp[2], -1))
             acc = acc._replace(inval=acc.inval.at[w_end].add(jnp.sum(cnt)))
-            return ((pools, new_frac, new_active, inval + cnt, acc),
-                    (nodes, outcomes, new_frac, new_active))
-        return ((pools, new_frac, new_active, inval + cnt),
-                (nodes, outcomes, new_frac, new_active))
+        carry = ((pools, new_frac, new_active, inval + cnt)
+                 + ((acc,) if tel_on else ())
+                 + ((chain,) if ch_on else ()))
+        return carry, (nodes, outcomes, new_frac, new_active)
 
     xs = ((events, valid) + ((widx,) if tel_on else ())
-          + ((up, recover) if masked else ()))
+          + ((up, recover) if masked else ())
+          + ((cxs, ccold) if ch_on else ()))
     c0 = ((pools, frac, active0, jnp.zeros((n,), jnp.int32))
-          + ((tel,) if tel_on else ()))
+          + ((tel,) if tel_on else ()) + ((chain,) if ch_on else ()))
     c_end, (nodes, outcomes, fracs, actives) = jax.lax.scan(epoch, c0, xs)
-    inval = c_end[3]
+    out = (nodes, outcomes, fracs, actives, c_end[3])
     if tel_on:
-        return nodes, outcomes, fracs, actives, inval, c_end[4]
-    return nodes, outcomes, fracs, actives, inval
+        out = out + (c_end[4],)
+    if ch_on:
+        out = out + (c_end[-1],)
+    return out
 
 
 _run_cluster = jax.jit(_run_cluster_impl,
@@ -526,30 +750,47 @@ _run_autoscale = jax.jit(_run_autoscale_impl,
                          static_argnames=("n_nodes", "mode", "masked"))
 
 
+def _chain_axes(tel: bool, chain: bool) -> tuple:
+    """Trailing vmap in_axes for the optional telemetry + chain args
+    ``(widx, tel, cxs, ccold, cdl, chain)``: window indices and chain
+    event data are shared across lanes; accumulators, cold draws and
+    deadlines are per-lane.  When only chains are on, the telemetry slots
+    are ``None`` args (empty pytrees — any in_axes is harmless)."""
+    axes = ()
+    if tel or chain:
+        axes += (None, 0)          # widx, TelAcc
+    if chain:
+        axes += (None, 0, 0, 0)    # cxs, ccold, cdl, ChainAcc
+    return axes
+
+
 @functools.lru_cache(maxsize=None)
-def _sweep_runner(n_nodes: int, mode: str, tel: bool = False):
+def _sweep_runner(n_nodes: int, mode: str, tel: bool = False,
+                  chain: bool = False):
     """Cached jitted vmap of the scan, keyed on the static shape args, so
     repeated sweep calls hit the compile cache like ``_run_cluster``
     does.  ``tel`` lanes share the window-index data and stack their
-    accumulators."""
+    accumulators; ``chain`` lanes share the chain event data and stack
+    their accumulators, cold draws and deadlines."""
     return jax.jit(jax.vmap(
         functools.partial(_run_cluster_impl, n_nodes=n_nodes, mode=mode),
-        in_axes=(0, None, 0, 0, 0) + ((None, 0) if tel else ())))
+        in_axes=(0, None, 0, 0, 0) + _chain_axes(tel, chain)))
 
 
 @functools.lru_cache(maxsize=None)
-def _sweep_failures_runner(n_nodes: int, mode: str, tel: bool = False):
+def _sweep_failures_runner(n_nodes: int, mode: str, tel: bool = False,
+                           chain: bool = False):
     """Failure analogue of ``_sweep_runner``: every lane carries its own
     compiled up/recover masks as data (same [T, N] shape — lanes bucket by
     mask shape), so mixed failure schedules sweep in one program."""
     return jax.jit(jax.vmap(
         functools.partial(_run_failures_impl, n_nodes=n_nodes, mode=mode),
-        in_axes=(0, None, 0, 0, 0, 0, 0) + ((None, 0) if tel else ())))
+        in_axes=(0, None, 0, 0, 0, 0, 0) + _chain_axes(tel, chain)))
 
 
 @functools.lru_cache(maxsize=None)
 def _sweep_autoscale_runner(n_nodes: int, mode: str, masked: bool,
-                            tel: bool = False):
+                            tel: bool = False, chain: bool = False):
     """Autoscale analogue of ``_sweep_runner``: configs (pools, masks,
     routing, unified, cloud, frac, node_mb, asc thresholds, active0) vmap
     as data; the epoch grid and validity mask are shared across lanes.
@@ -560,7 +801,7 @@ def _sweep_autoscale_runner(n_nodes: int, mode: str, masked: bool,
                           masked=masked),
         in_axes=(0, None, None, 0 if masked else None,
                  0 if masked else None, 0, 0, 0, 0, 0, 0, 0)
-        + ((None, 0) if tel else ())))
+        + _chain_axes(tel, chain)))
 
 
 def _epoch_grid(events: ClusterEvent, n_events: int, epoch_events: int,
@@ -643,34 +884,50 @@ def _cloud_vec(cfg: ClusterConfig) -> jnp.ndarray:
 
 def _simulate_cluster_jax(cfg: ClusterConfig, trace: Trace,
                           rng_seed: int = 0, mode: str = "gather",
-                          telemetry: int | None = None):
+                          telemetry: int | None = None,
+                          chains: ChainPlan | None = None):
     """Returns the ``ClusterResult`` — or, with ``telemetry`` (a window
-    length in events), ``(result, {"telemetry": window arrays})``."""
+    length in events) and/or ``chains`` (a compiled :class:`ChainPlan`),
+    ``(result, extras)`` with ``"telemetry"`` window arrays /
+    ``"chains"`` per-chain arrays."""
     check_step_mode(mode)
     events = cluster_events(trace, cfg.n_nodes)
+    cloud_cold = cloud_cold_draws(len(trace), cfg.cloud_cold_prob, rng_seed)
     args = (init_cluster(cfg), events, jnp.int32(int(cfg.routing)),
             jnp.asarray(cfg.unified, bool), _cloud_vec(cfg))
-    if telemetry is None:
-        node, outcome = _run_cluster(*args, n_nodes=cfg.n_nodes, mode=mode)
-    else:
-        n_w = _n_windows(len(trace), telemetry)
-        node, outcome, tel = _run_cluster(
-            *args, _widx(len(trace), telemetry),
-            _tel_init(n_w, cfg.n_nodes), n_nodes=cfg.n_nodes, mode=mode)
-    cloud_cold = cloud_cold_draws(len(trace), cfg.cloud_cold_prob, rng_seed)
+    n_w = None if telemetry is None else _n_windows(len(trace), telemetry)
+    if telemetry is not None or chains is not None:
+        args = args + ((None, None) if telemetry is None else
+                       (_widx(len(trace), telemetry),
+                        _tel_init(n_w, cfg.n_nodes)))
+    if chains is not None:
+        args = args + (_chain_xs(chains), jnp.asarray(cloud_cold),
+                       jnp.asarray(chains.deadline),
+                       _chain_init(chains.n_chains))
+    outs = _run_cluster(*args, n_nodes=cfg.n_nodes, mode=mode)
+    node, outcome = outs[0], outs[1]
     result = build_result(cfg, trace, np.asarray(node), np.asarray(outcome),
                           cloud_cold)
-    if telemetry is None:
+    if telemetry is None and chains is None:
         return result
-    return result, {"telemetry": _tel_np(tel, n_w)}
+    extras = {}
+    if telemetry is not None:
+        extras["telemetry"] = _tel_np(outs[2], n_w)
+    if chains is not None:
+        extras["chains"] = _chain_np(outs[-1], chains.n_chains)
+    return result, extras
 
 
 def _simulate_cluster_ref(cfg: ClusterConfig, trace: Trace,
                           rng_seed: int = 0,
-                          telemetry: int | None = None):
-    out = cluster_outcomes_ref(cfg, trace, telemetry=telemetry)
+                          telemetry: int | None = None,
+                          chains: ChainPlan | None = None):
     cloud_cold = cloud_cold_draws(len(trace), cfg.cloud_cold_prob, rng_seed)
-    if telemetry is None:
+    out = cluster_outcomes_ref(cfg, trace, telemetry=telemetry,
+                               chains=chains,
+                               chain_cold=(cloud_cold if chains is not None
+                                           else None))
+    if telemetry is None and chains is None:
         node, outcome = out
         return build_result(cfg, trace, node, outcome, cloud_cold)
     node, outcome, extras = out
@@ -704,33 +961,63 @@ def _stack_tel(n_windows: int, n_nodes: int, lanes: int) -> TelAcc:
         _tel_init(n_windows, n_nodes))
 
 
+def _sweep_chain_data(chains, configs, t_len: int, rng_seed: int):
+    """Stacked per-lane chain inputs for a sweep bucket: one
+    ``ChainPlan`` per config (same trace -> shared event structure),
+    per-lane deadlines and per-lane common-random-number cloud cold
+    draws.  Returns ``(plan, clouds, chain_args)``."""
+    chains = list(chains)
+    if len(chains) != len(configs) or any(p is None for p in chains):
+        raise ValueError("chain sweep: need one ChainPlan per config")
+    plan = chains[0]
+    if any(p.n_chains != plan.n_chains for p in chains):
+        raise ValueError("chain sweep: lanes must share the trace's "
+                         "chain structure")
+    clouds = [cloud_cold_draws(t_len, c.cloud_cold_prob, rng_seed)
+              for c in configs]
+    chain_args = (_chain_xs(plan), jnp.asarray(np.stack(clouds)),
+                  jnp.asarray(np.stack([p.deadline for p in chains])),
+                  _stack_chain(plan.n_chains, len(configs)))
+    return plan, clouds, chain_args
+
+
 def _sweep_cluster(trace: Trace, configs, rng_seed: int = 0,
-                   mode: str = "gather", telemetry: int | None = None):
-    """Returns one ``ClusterResult`` per config — or, with ``telemetry``,
-    one ``(result, {"telemetry": ...})`` pair per config."""
+                   mode: str = "gather", telemetry: int | None = None,
+                   chains=None):
+    """Returns one ``ClusterResult`` per config — or, with ``telemetry``
+    and/or ``chains`` (one compiled ``ChainPlan`` per config), one
+    ``(result, extras)`` pair per config."""
     check_step_mode(mode)
     configs, n, pools, routing, unified, cloud = _stack_configs(
         configs, "sweep_cluster")
     events = cluster_events(trace, n)
+    tel_on, ch_on = telemetry is not None, chains is not None
     args = (pools, events, routing, unified, cloud)
-    if telemetry is None:
-        nodes, outcomes = _sweep_runner(n, mode)(*args)
-    else:
-        n_w = _n_windows(len(trace), telemetry)
-        nodes, outcomes, tels = _sweep_runner(n, mode, tel=True)(
-            *args, _widx(len(trace), telemetry),
-            _stack_tel(n_w, n, len(configs)))
-    nodes, outcomes = np.asarray(nodes), np.asarray(outcomes)
+    n_w = None if not tel_on else _n_windows(len(trace), telemetry)
+    if tel_on or ch_on:
+        args = args + ((None, None) if not tel_on else
+                       (_widx(len(trace), telemetry),
+                        _stack_tel(n_w, n, len(configs))))
+    if ch_on:
+        plan, clouds, chain_args = _sweep_chain_data(
+            chains, configs, len(trace), rng_seed)
+        args = args + chain_args
+    outs = _sweep_runner(n, mode, tel=tel_on, chain=ch_on)(*args)
+    nodes, outcomes = np.asarray(outs[0]), np.asarray(outs[1])
     out = []
     for g, c in enumerate(configs):
-        res = build_result(c, trace, nodes[g], outcomes[g],
-                           cloud_cold_draws(len(trace), c.cloud_cold_prob,
-                                            rng_seed))
-        if telemetry is None:
-            out.append(res)
-        else:
-            lane = jax.tree_util.tree_map(lambda a: a[g], tels)
-            out.append((res, {"telemetry": _tel_np(lane, n_w)}))
+        cc = (clouds[g] if ch_on
+              else cloud_cold_draws(len(trace), c.cloud_cold_prob,
+                                    rng_seed))
+        res = build_result(c, trace, nodes[g], outcomes[g], cc)
+        extras = {}
+        if tel_on:
+            lane = jax.tree_util.tree_map(lambda a: a[g], outs[2])
+            extras["telemetry"] = _tel_np(lane, n_w)
+        if ch_on:
+            lane = jax.tree_util.tree_map(lambda a: a[g], outs[-1])
+            extras["chains"] = _chain_np(lane, plan.n_chains)
+        out.append((res, extras) if extras else res)
     return out
 
 
@@ -743,28 +1030,36 @@ def _drop_size(cfg: ClusterConfig) -> float:
 def _simulate_cluster_failures_jax(
         cfg: ClusterConfig, failures: Failures, trace: Trace,
         rng_seed: int = 0, mode: str = "gather",
-        telemetry: int | None = None) -> tuple[ClusterResult, dict]:
+        telemetry: int | None = None,
+        chains: ChainPlan | None = None) -> tuple[ClusterResult, dict]:
     """Failure-injected twin of :func:`_simulate_cluster_jax`: returns
     (ClusterResult, extras) with the compiled ``node_up`` mask and the
     per-node ``invalidated`` resident counts (plus ``"telemetry"`` window
-    arrays when a window length is given)."""
+    arrays / ``"chains"`` per-chain arrays when requested)."""
     check_step_mode(mode)
     up, recover = _failure_masks(failures, trace, cfg.n_nodes)
+    cloud_cold = cloud_cold_draws(len(trace), cfg.cloud_cold_prob, rng_seed)
+    tel_on, ch_on = telemetry is not None, chains is not None
     args = (init_cluster(cfg), cluster_events(trace, cfg.n_nodes),
             jnp.asarray(up), jnp.asarray(recover),
             jnp.int32(int(cfg.routing)), jnp.asarray(cfg.unified, bool),
             _cloud_vec(cfg))
+    n_w = None if not tel_on else _n_windows(len(trace), telemetry)
+    if tel_on or ch_on:
+        args = args + ((None, None) if not tel_on else
+                       (_widx(len(trace), telemetry),
+                        _tel_init(n_w, cfg.n_nodes)))
+    if ch_on:
+        args = args + (_chain_xs(chains), jnp.asarray(cloud_cold),
+                       jnp.asarray(chains.deadline),
+                       _chain_init(chains.n_chains))
+    outs = _run_failures(*args, n_nodes=cfg.n_nodes, mode=mode)
+    node, outcome, inval = outs[0], outs[1], outs[2]
     extras = {}
-    if telemetry is None:
-        node, outcome, inval = _run_failures(
-            *args, n_nodes=cfg.n_nodes, mode=mode)
-    else:
-        n_w = _n_windows(len(trace), telemetry)
-        node, outcome, inval, tel = _run_failures(
-            *args, _widx(len(trace), telemetry),
-            _tel_init(n_w, cfg.n_nodes), n_nodes=cfg.n_nodes, mode=mode)
-        extras["telemetry"] = _tel_np(tel, n_w)
-    cloud_cold = cloud_cold_draws(len(trace), cfg.cloud_cold_prob, rng_seed)
+    if tel_on:
+        extras["telemetry"] = _tel_np(outs[3], n_w)
+    if ch_on:
+        extras["chains"] = _chain_np(outs[-1], chains.n_chains)
     extras.update(invalidated=np.asarray(inval, np.int64), node_up=up)
     return (build_result(cfg, trace, np.asarray(node), np.asarray(outcome),
                          cloud_cold), extras)
@@ -772,18 +1067,19 @@ def _simulate_cluster_failures_jax(
 
 def _simulate_cluster_failures_ref(
         cfg: ClusterConfig, failures: Failures, trace: Trace,
-        rng_seed: int = 0,
-        telemetry: int | None = None) -> tuple[ClusterResult, dict]:
-    node, outcome, extras = cluster_outcomes_ref(
-        cfg, trace, failures=failures, telemetry=telemetry)
+        rng_seed: int = 0, telemetry: int | None = None,
+        chains: ChainPlan | None = None) -> tuple[ClusterResult, dict]:
     cloud_cold = cloud_cold_draws(len(trace), cfg.cloud_cold_prob, rng_seed)
+    node, outcome, extras = cluster_outcomes_ref(
+        cfg, trace, failures=failures, telemetry=telemetry, chains=chains,
+        chain_cold=(cloud_cold if chains is not None else None))
     return build_result(cfg, trace, node, outcome, cloud_cold), extras
 
 
 def _sweep_cluster_failures(
         trace: Trace, configs, failures, rng_seed: int = 0,
-        mode: str = "gather",
-        telemetry: int | None = None) -> list[tuple[ClusterResult, dict]]:
+        mode: str = "gather", telemetry: int | None = None,
+        chains=None) -> list[tuple[ClusterResult, dict]]:
     """Vmapped sweep over failure-injected configs: each lane's compiled
     up/recover masks ride as data (lanes bucket by mask shape, which the
     shared trace and ``n_nodes`` pin)."""
@@ -796,27 +1092,35 @@ def _sweep_cluster_failures(
     masks = [_failure_masks(f, trace, n) for f in failures]
     up = np.stack([m[0] for m in masks])
     recover = np.stack([m[1] for m in masks])
+    tel_on, ch_on = telemetry is not None, chains is not None
     args = (pools, cluster_events(trace, n), jnp.asarray(up),
             jnp.asarray(recover), routing, unified, cloud)
-    if telemetry is None:
-        nodes, outcomes, invals = _sweep_failures_runner(n, mode)(*args)
-    else:
-        n_w = _n_windows(len(trace), telemetry)
-        nodes, outcomes, invals, tels = _sweep_failures_runner(
-            n, mode, tel=True)(*args, _widx(len(trace), telemetry),
-                               _stack_tel(n_w, n, len(configs)))
-    nodes, outcomes = np.asarray(nodes), np.asarray(outcomes)
-    invals = np.asarray(invals, np.int64)
+    n_w = None if not tel_on else _n_windows(len(trace), telemetry)
+    if tel_on or ch_on:
+        args = args + ((None, None) if not tel_on else
+                       (_widx(len(trace), telemetry),
+                        _stack_tel(n_w, n, len(configs))))
+    if ch_on:
+        plan, clouds, chain_args = _sweep_chain_data(
+            chains, configs, len(trace), rng_seed)
+        args = args + chain_args
+    outs = _sweep_failures_runner(n, mode, tel=tel_on, chain=ch_on)(*args)
+    nodes, outcomes = np.asarray(outs[0]), np.asarray(outs[1])
+    invals = np.asarray(outs[2], np.int64)
     out = []
     for g, c in enumerate(configs):
         extras = {"invalidated": invals[g], "node_up": up[g]}
-        if telemetry is not None:
-            lane = jax.tree_util.tree_map(lambda a: a[g], tels)
+        if tel_on:
+            lane = jax.tree_util.tree_map(lambda a: a[g], outs[3])
             extras["telemetry"] = _tel_np(lane, n_w)
-        out.append((build_result(c, trace, nodes[g], outcomes[g],
-                                 cloud_cold_draws(len(trace),
-                                                  c.cloud_cold_prob,
-                                                  rng_seed)), extras))
+        if ch_on:
+            lane = jax.tree_util.tree_map(lambda a: a[g], outs[-1])
+            extras["chains"] = _chain_np(lane, plan.n_chains)
+        cc = (clouds[g] if ch_on
+              else cloud_cold_draws(len(trace), c.cloud_cold_prob,
+                                    rng_seed))
+        out.append((build_result(c, trace, nodes[g], outcomes[g], cc),
+                    extras))
     return out
 
 
@@ -836,63 +1140,85 @@ def _sweep_cluster_failures(
 
 def _run_cluster_chunk_impl(carry, events: ClusterEvent,
                             routing: jax.Array, unified: jax.Array,
-                            cloud: jax.Array, widx=None, *,
+                            cloud: jax.Array, widx=None, cxs=None,
+                            ccold=None, cdl=None, *,
                             n_nodes: int, mode: str):
     """One chunk of the static trace — ``_run_cluster_impl`` that also
     returns the final carry so the next chunk can pick it up.  The carry
-    is the pool state, or ``(pools, TelAcc)`` with telemetry (``widx``
-    set): global window indices make the threaded accumulator land events
-    in the same windows a monolithic scan would."""
+    is the pool state, extended to ``(pools[, TelAcc][, ChainAcc])`` with
+    telemetry (``widx`` set) and/or chains (``cxs`` set): global window
+    indices and the threaded chain accumulator make events land in the
+    same windows / chain rows a monolithic scan would."""
     step = _make_step(routing, unified, cloud, n_nodes, mode)
-    if widx is None:
+    tel_on, ch_on = widx is not None, cxs is not None
+    if not tel_on and not ch_on:
         carry, (nodes, outcomes) = jax.lax.scan(step, carry, events)
         return carry, nodes, outcomes
     n_up = jnp.int32(n_nodes)
 
     def s(c, x):
-        pools, acc = c
-        ev, wi = x
-        pools, (node, outcome) = step(pools, ev)
-        acc = _tel_event(acc, wi, ev, outcome, pools, n_nodes,
-                         n_up, n_up, jnp.int32(0))
-        return (pools, acc), (node, outcome)
+        pools = c[0]
+        acc = c[1] if tel_on else None
+        chain = c[-1] if ch_on else None
+        ev = x[0]
+        if ch_on:
+            cx, cc = x[-2], x[-1]
+            slack, stg = _chain_pre(chain, cdl, cx)
+            pools, (node, outcome) = step(pools, ev, None, slack, stg)
+            chain, miss = _chain_event(chain, cx, cc, cdl, ev, outcome,
+                                       cloud)
+        else:
+            pools, (node, outcome) = step(pools, ev)
+            miss = jnp.int32(0)
+        if tel_on:
+            acc = _tel_event(acc, x[1], ev, outcome, pools, n_nodes,
+                             n_up, n_up, jnp.int32(0), miss)
+        nc = ((pools,) + ((acc,) if tel_on else ())
+              + ((chain,) if ch_on else ()))
+        return nc, (node, outcome)
 
-    carry, (nodes, outcomes) = jax.lax.scan(s, carry, (events, widx))
+    xs = ((events,) + ((widx,) if tel_on else ())
+          + ((cxs, ccold) if ch_on else ()))
+    carry, (nodes, outcomes) = jax.lax.scan(s, carry, xs)
     return carry, nodes, outcomes
 
 
 def _run_failures_chunk_impl(carry, events: ClusterEvent, up: jax.Array,
                              recover: jax.Array, routing: jax.Array,
                              unified: jax.Array, cloud: jax.Array,
-                             widx=None, *, n_nodes: int, mode: str):
+                             widx=None, cxs=None, ccold=None, cdl=None,
+                             *, n_nodes: int, mode: str):
     """One chunk of the failure-injected trace; the carry is
-    ``(pools, invalidated i32[N])`` — plus the :class:`TelAcc` with
-    telemetry."""
+    ``(pools, invalidated i32[N][, TelAcc][, ChainAcc])``."""
     step = _make_step(routing, unified, cloud, n_nodes, mode)
+    tel_on, ch_on = widx is not None, cxs is not None
 
     def s(c, x):
-        pools, inval = c
-        ev, u, r = x
+        pools, inval = c[0], c[1]
+        acc = c[2] if tel_on else None
+        chain = c[-1] if ch_on else None
+        ev, u, r = x[0], x[1], x[2]
         cnt, pools = _invalidate_nodes(pools, r, n_nodes)
-        pools, (node, outcome) = step(pools, ev, u)
-        return (pools, inval + cnt), (node, outcome)
+        if ch_on:
+            cx, cc = x[-2], x[-1]
+            slack, stg = _chain_pre(chain, cdl, cx)
+            pools, (node, outcome) = step(pools, ev, u, slack, stg)
+            chain, miss = _chain_event(chain, cx, cc, cdl, ev, outcome,
+                                       cloud)
+        else:
+            pools, (node, outcome) = step(pools, ev, u)
+            miss = jnp.int32(0)
+        if tel_on:
+            acc = _tel_event(acc, x[3], ev, outcome, pools, n_nodes,
+                             jnp.sum(u).astype(jnp.int32),
+                             jnp.int32(n_nodes), jnp.sum(cnt), miss)
+        nc = ((pools, inval + cnt) + ((acc,) if tel_on else ())
+              + ((chain,) if ch_on else ()))
+        return nc, (node, outcome)
 
-    def s_tel(c, x):
-        pools, inval, acc = c
-        ev, u, r, wi = x
-        cnt, pools = _invalidate_nodes(pools, r, n_nodes)
-        pools, (node, outcome) = step(pools, ev, u)
-        acc = _tel_event(acc, wi, ev, outcome, pools, n_nodes,
-                         jnp.sum(u).astype(jnp.int32), jnp.int32(n_nodes),
-                         jnp.sum(cnt))
-        return (pools, inval + cnt, acc), (node, outcome)
-
-    if widx is None:
-        carry, (nodes, outcomes) = jax.lax.scan(
-            s, carry, (events, up, recover))
-    else:
-        carry, (nodes, outcomes) = jax.lax.scan(
-            s_tel, carry, (events, up, recover, widx))
+    xs = ((events, up, recover) + ((widx,) if tel_on else ())
+          + ((cxs, ccold) if ch_on else ()))
+    carry, (nodes, outcomes) = jax.lax.scan(s, carry, xs)
     return carry, nodes, outcomes
 
 
@@ -913,26 +1239,42 @@ def _failures_chunk_runner(n_nodes: int, mode: str):
                    donate_argnums=(0,))
 
 
+def _chunk_chain_axes(tel: bool, chain: bool) -> tuple:
+    """Trailing vmap in_axes for the optional chunk args
+    ``(widx[, cxs, ccold, cdl])`` — the accumulators ride the stacked
+    (axis-0) carry, so only the per-chunk data appears here: window
+    indices and chain event data are shared, cold draws and deadlines are
+    per-lane."""
+    axes = ()
+    if tel or chain:
+        axes += (None,)            # widx (None arg when only chains on)
+    if chain:
+        axes += (None, 0, 0)       # cxs, ccold, cdl
+    return axes
+
+
 @functools.lru_cache(maxsize=None)
-def _sweep_chunk_runner(n_nodes: int, mode: str, tel: bool = False):
+def _sweep_chunk_runner(n_nodes: int, mode: str, tel: bool = False,
+                        chain: bool = False):
     """Vmapped chunk step for sweeps: lanes stack on the carry/config axes,
     the chunk's events are shared, and the stacked carry is donated.
     The leading ``0`` is a pytree prefix, so it maps every carry leaf —
-    plain pools or ``(pools, TelAcc)`` alike."""
+    plain pools, ``(pools, TelAcc)`` or ``(pools[, TelAcc], ChainAcc)``
+    alike."""
     return jax.jit(jax.vmap(
         functools.partial(_run_cluster_chunk_impl, n_nodes=n_nodes,
                           mode=mode),
-        in_axes=(0, None, 0, 0, 0) + ((None,) if tel else ())),
+        in_axes=(0, None, 0, 0, 0) + _chunk_chain_axes(tel, chain)),
         donate_argnums=(0,))
 
 
 @functools.lru_cache(maxsize=None)
 def _sweep_failures_chunk_runner(n_nodes: int, mode: str,
-                                 tel: bool = False):
+                                 tel: bool = False, chain: bool = False):
     return jax.jit(jax.vmap(
         functools.partial(_run_failures_chunk_impl, n_nodes=n_nodes,
                           mode=mode),
-        in_axes=(0, None, 0, 0, 0, 0, 0) + ((None,) if tel else ())),
+        in_axes=(0, None, 0, 0, 0, 0, 0) + _chunk_chain_axes(tel, chain)),
         donate_argnums=(0,))
 
 
@@ -984,12 +1326,14 @@ def _simulate_cluster_chunked_jax(
         cfg: ClusterConfig, trace: Trace, rng_seed: int = 0,
         mode: str = "gather", chunk_events: int = 65536,
         failures: Failures | None = None,
-        telemetry: int | None = None):
+        telemetry: int | None = None,
+        chains: ChainPlan | None = None):
     """Chunked twin of ``_simulate_cluster_jax`` /
     ``_simulate_cluster_failures_jax`` — same return shapes, bit-identical
-    outcomes, peak memory bounded by one chunk.  Telemetry threads the
-    accumulator through the donated carry with *global* window indices,
-    so the windows match the monolithic scan for any chunk size."""
+    outcomes, peak memory bounded by one chunk.  Telemetry and chain
+    accumulators thread through the donated carry (with *global* window
+    indices / chain rows), so the windows and per-chain metrics match the
+    monolithic scan for any chunk size."""
     check_step_mode(mode)
     chunk = check_chunk_events(chunk_events)
     n, t_len = cfg.n_nodes, len(trace)
@@ -998,25 +1342,35 @@ def _simulate_cluster_chunked_jax(
     unified = jnp.asarray(cfg.unified, bool)
     cloud = _cloud_vec(cfg)
     drop = _drop_size(cfg)
-    n_w = None if telemetry is None else _n_windows(t_len, telemetry)
+    tel_on, ch_on = telemetry is not None, chains is not None
+    n_w = None if not tel_on else _n_windows(t_len, telemetry)
+    cloud_cold = cloud_cold_draws(t_len, cfg.cloud_cold_prob, rng_seed)
+    cxs_np = _chain_xs_np(chains) if ch_on else None
+    cdl = jnp.asarray(chains.deadline) if ch_on else None
     nodes_out = np.empty(t_len, np.int32)
     outcomes_out = np.empty(t_len, np.int32)
     if failures is None:
         run = _chunk_runner(n, mode)
         carry = init_cluster(cfg)
-        if telemetry is not None:
-            carry = (carry, _tel_init(n_w, n))
+        if tel_on or ch_on:
+            carry = ((carry,) + ((_tel_init(n_w, n),) if tel_on else ())
+                     + ((_chain_init(chains.n_chains),) if ch_on else ()))
     else:
         run = _failures_chunk_runner(n, mode)
         up_full, rec_full = _failure_masks(failures, trace, n)
-        carry = (init_cluster(cfg), jnp.zeros((n,), jnp.int32))
-        if telemetry is not None:
-            carry = carry + (_tel_init(n_w, n),)
+        carry = ((init_cluster(cfg), jnp.zeros((n,), jnp.int32))
+                 + ((_tel_init(n_w, n),) if tel_on else ())
+                 + ((_chain_init(chains.n_chains),) if ch_on else ()))
     for s in range(0, t_len, chunk):
         e = min(s + chunk, t_len)
         ev = _chunk_slice(ev_np, s, e, chunk, drop)
-        kw = ({} if telemetry is None
+        kw = ({} if not tel_on
               else {"widx": _chunk_widx(s, e, chunk, telemetry, n_w)})
+        if ch_on:
+            kw.update(cxs=_chunk_chain(cxs_np, chains.n_chains, s, e,
+                                       chunk),
+                      ccold=_chunk_pad(cloud_cold, s, e, chunk, False),
+                      cdl=cdl)
         if failures is None:
             carry, nodes, outcomes = run(carry, ev, routing, unified,
                                          cloud, **kw)
@@ -1028,12 +1382,15 @@ def _simulate_cluster_chunked_jax(
                 routing, unified, cloud, **kw)
         nodes_out[s:e] = np.asarray(nodes[:e - s])
         outcomes_out[s:e] = np.asarray(outcomes[:e - s])
-    cloud_cold = cloud_cold_draws(t_len, cfg.cloud_cold_prob, rng_seed)
     result = build_result(cfg, trace, nodes_out, outcomes_out, cloud_cold)
-    extras = ({} if telemetry is None
-              else {"telemetry": _tel_np(carry[-1], n_w)})
+    extras = {}
+    if tel_on:
+        extras["telemetry"] = _tel_np(
+            carry[1 if failures is None else 2], n_w)
+    if ch_on:
+        extras["chains"] = _chain_np(carry[-1], chains.n_chains)
     if failures is None:
-        return result if telemetry is None else (result, extras)
+        return result if not extras else (result, extras)
     extras.update(invalidated=np.asarray(carry[1], np.int64),
                   node_up=up_full)
     return result, extras
@@ -1042,21 +1399,30 @@ def _simulate_cluster_chunked_jax(
 def _sweep_cluster_chunked(trace: Trace, configs, rng_seed: int = 0,
                            mode: str = "gather",
                            chunk_events: int = 65536,
-                           failures=None, telemetry: int | None = None):
+                           failures=None, telemetry: int | None = None,
+                           chains=None):
     """Chunked twin of ``_sweep_cluster`` / ``_sweep_cluster_failures``:
     the chunk loop threads one *stacked* donated carry across all lanes.
-    With ``failures`` (one ``Failures``/None per config) or ``telemetry``
-    returns ``(result, extras)`` pairs, else plain results."""
+    With ``failures`` (one ``Failures``/None per config), ``telemetry``
+    or ``chains`` returns ``(result, extras)`` pairs, else plain
+    results."""
     check_step_mode(mode)
     chunk = check_chunk_events(chunk_events)
     failing = failures is not None
     telw = telemetry
+    tel_on, ch_on = telw is not None, chains is not None
     configs, n, pools, routing, unified, cloud = _stack_configs(
         configs, "chunked sweep")
     t_len, lanes = len(trace), len(configs)
     ev_np = _host_events(trace, n)
     drop = max(_drop_size(c) for c in configs)
     n_w = None if telw is None else _n_windows(t_len, telw)
+    clouds = plan = cxs_np = cdl = None
+    if ch_on:
+        plan, clouds, _ = _sweep_chain_data(chains, configs, t_len,
+                                            rng_seed)
+        cxs_np = _chain_xs_np(plan)
+        cdl = jnp.asarray(np.stack([p.deadline for p in list(chains)]))
     nodes_out = np.empty((lanes, t_len), np.int32)
     outcomes_out = np.empty((lanes, t_len), np.int32)
     if failing:
@@ -1067,20 +1433,33 @@ def _sweep_cluster_chunked(trace: Trace, configs, rng_seed: int = 0,
         masks = [_failure_masks(f, trace, n) for f in failures]
         up_full = np.stack([m[0] for m in masks])       # [L, T, N]
         rec_full = np.stack([m[1] for m in masks])
-        run = _sweep_failures_chunk_runner(n, mode, tel=telw is not None)
+        run = _sweep_failures_chunk_runner(n, mode, tel=tel_on,
+                                           chain=ch_on)
         carry = (pools, jnp.zeros((lanes, n), jnp.int32))
-        if telw is not None:
+        if tel_on:
             carry = carry + (_stack_tel(n_w, n, lanes),)
+        if ch_on:
+            carry = carry + (_stack_chain(plan.n_chains, lanes),)
     else:
-        run = _sweep_chunk_runner(n, mode, tel=telw is not None)
-        carry = pools
-        if telw is not None:
-            carry = (carry, _stack_tel(n_w, n, lanes))
+        run = _sweep_chunk_runner(n, mode, tel=tel_on, chain=ch_on)
+        if tel_on or ch_on:
+            carry = ((pools,)
+                     + ((_stack_tel(n_w, n, lanes),) if tel_on else ())
+                     + ((_stack_chain(plan.n_chains, lanes),)
+                        if ch_on else ()))
+        else:
+            carry = pools
     for s in range(0, t_len, chunk):
         e = min(s + chunk, t_len)
         ev = _chunk_slice(ev_np, s, e, chunk, drop)
-        wx = (() if telw is None
-              else (_chunk_widx(s, e, chunk, telw, n_w),))
+        wx = ()
+        if tel_on or ch_on:
+            wx += (None if telw is None
+                   else _chunk_widx(s, e, chunk, telw, n_w),)
+        if ch_on:
+            wx += (_chunk_chain(cxs_np, plan.n_chains, s, e, chunk),
+                   jnp.stack([_chunk_pad(cc, s, e, chunk, False)
+                              for cc in clouds]), cdl)
         if failing:
             carry, nodes, outcomes = run(
                 carry, ev,
@@ -1095,15 +1474,21 @@ def _sweep_cluster_chunked(trace: Trace, configs, rng_seed: int = 0,
         outcomes_out[:, s:e] = np.asarray(outcomes[:, :e - s])
     out = []
     invals = (np.asarray(carry[1], np.int64) if failing else None)
-    tels = carry[-1] if telw is not None else None
+    tels = None
+    if tel_on:
+        tels = carry[2] if failing else carry[1]
+    chs = carry[-1] if ch_on else None
     for g, c in enumerate(configs):
-        res = build_result(c, trace, nodes_out[g], outcomes_out[g],
-                           cloud_cold_draws(t_len, c.cloud_cold_prob,
-                                            rng_seed))
+        cc = (clouds[g] if ch_on
+              else cloud_cold_draws(t_len, c.cloud_cold_prob, rng_seed))
+        res = build_result(c, trace, nodes_out[g], outcomes_out[g], cc)
         extras = {}
-        if telw is not None:
+        if tel_on:
             lane = jax.tree_util.tree_map(lambda a: a[g], tels)
             extras["telemetry"] = _tel_np(lane, n_w)
+        if ch_on:
+            lane = jax.tree_util.tree_map(lambda a: a[g], chs)
+            extras["chains"] = _chain_np(lane, plan.n_chains)
         if failing:
             extras.update(invalidated=invals[g], node_up=up_full[g])
         out.append((res, extras) if extras else res)
@@ -1119,44 +1504,51 @@ def _autoscale_extras(actives, inval, up, failures) -> dict:
 def _simulate_cluster_autoscale_jax(
         cfg: ClusterConfig, asc: Autoscale, trace: Trace, rng_seed: int = 0,
         mode: str = "gather", failures: Failures | None = None,
-        telemetry: int | None = None
+        telemetry: int | None = None, chains: ChainPlan | None = None
         ) -> tuple[ClusterResult, np.ndarray, dict]:
     """Autoscaled twin of :func:`_simulate_cluster_jax`: returns
     (ClusterResult, fracs f32[E, N], extras) — extras carries the
     membership trajectory (``active`` bool[E, N]), per-node
     ``invalidated`` resident counts, the ``node_up`` failure mask
-    (None without a schedule), and the ``telemetry`` window arrays when a
-    window length is given."""
+    (None without a schedule), and the ``telemetry`` window arrays /
+    ``chains`` per-chain arrays when requested."""
     check_step_mode(mode)
     n_events = len(trace)
     e = asc.epoch_events
     epochs, valid = _epoch_grid(cluster_events(trace, cfg.n_nodes),
                                 n_events, e, _drop_size(cfg))
     masked = failures is not None
+    tel_on, ch_on = telemetry is not None, chains is not None
     up = up_g = rec_g = None
     if masked:
         up, recover = _failure_masks(failures, trace, cfg.n_nodes)
         up_g = _mask_grid(up, n_events, e, True)
         rec_g = _mask_grid(recover, n_events, e, False)
     frac0, node_mb, asc_vec, active0 = _autoscale_inputs(cfg, asc)
+    cloud_cold = cloud_cold_draws(n_events, cfg.cloud_cold_prob, rng_seed)
     args = (init_cluster(cfg), epochs, valid, up_g, rec_g,
             jnp.int32(int(cfg.routing)), jnp.asarray(cfg.unified, bool),
             _cloud_vec(cfg), frac0, node_mb, asc_vec, active0)
-    if telemetry is None:
-        node, outcome, fracs, actives, inval = _run_autoscale(
-            *args, n_nodes=cfg.n_nodes, mode=mode, masked=masked)
-    else:
-        n_w = _n_windows(n_events, telemetry)
-        node, outcome, fracs, actives, inval, tel = _run_autoscale(
-            *args, _widx_grid(n_events, e, telemetry),
-            _tel_init(n_w, cfg.n_nodes),
-            n_nodes=cfg.n_nodes, mode=mode, masked=masked)
+    n_w = None if not tel_on else _n_windows(n_events, telemetry)
+    if tel_on or ch_on:
+        args = args + ((None, None) if not tel_on else
+                       (_widx_grid(n_events, e, telemetry),
+                        _tel_init(n_w, cfg.n_nodes)))
+    if ch_on:
+        args = args + (_chain_grid(chains, n_events, e),
+                       _grid_pad(cloud_cold, n_events, e, False),
+                       jnp.asarray(chains.deadline),
+                       _chain_init(chains.n_chains))
+    outs = _run_autoscale(*args, n_nodes=cfg.n_nodes, mode=mode,
+                          masked=masked)
+    node, outcome, fracs, actives, inval = outs[:5]
     node = np.asarray(node).reshape(-1)[:n_events]
     outcome = np.asarray(outcome).reshape(-1)[:n_events]
-    cloud_cold = cloud_cold_draws(n_events, cfg.cloud_cold_prob, rng_seed)
     extras = _autoscale_extras(actives, inval, up, failures)
-    if telemetry is not None:
-        extras["telemetry"] = _tel_np(tel, n_w)
+    if tel_on:
+        extras["telemetry"] = _tel_np(outs[5], n_w)
+    if ch_on:
+        extras["chains"] = _chain_np(outs[-1], chains.n_chains)
     return (build_result(cfg, trace, node, outcome, cloud_cold),
             np.asarray(fracs), extras)
 
@@ -1164,17 +1556,19 @@ def _simulate_cluster_autoscale_jax(
 def _simulate_cluster_autoscale_ref(
         cfg: ClusterConfig, asc: Autoscale, trace: Trace,
         rng_seed: int = 0, failures: Failures | None = None,
-        telemetry: int | None = None
+        telemetry: int | None = None, chains: ChainPlan | None = None
         ) -> tuple[ClusterResult, np.ndarray, dict]:
-    node, outcome, fracs, extras = cluster_outcomes_ref(
-        cfg, trace, autoscale=asc, failures=failures, telemetry=telemetry)
     cloud_cold = cloud_cold_draws(len(trace), cfg.cloud_cold_prob, rng_seed)
+    node, outcome, fracs, extras = cluster_outcomes_ref(
+        cfg, trace, autoscale=asc, failures=failures, telemetry=telemetry,
+        chains=chains,
+        chain_cold=(cloud_cold if chains is not None else None))
     return build_result(cfg, trace, node, outcome, cloud_cold), fracs, extras
 
 
 def _sweep_cluster_autoscale(
         trace: Trace, configs, autoscales, failures=None, rng_seed: int = 0,
-        mode: str = "gather", telemetry: int | None = None
+        mode: str = "gather", telemetry: int | None = None, chains=None
         ) -> list[tuple[ClusterResult, np.ndarray, dict]]:
     """Vmapped sweep over autoscaled configs.  All configs must share
     ``n_nodes``/``max_slots`` AND all autoscales ``epoch_events`` (the
@@ -1216,17 +1610,30 @@ def _sweep_cluster_autoscale(
                           for m in masks])
         rec_g = jnp.stack([_mask_grid(m[1], n_events, e, False)
                            for m in masks])
+    tel_on, ch_on = telemetry is not None, chains is not None
     args = (pools, epochs, valid, up_g, rec_g, routing, unified, cloud,
             frac0, node_mb, asc_vec, active0)
-    if telemetry is None:
-        nodes, outcomes, fracs, actives, invals = _sweep_autoscale_runner(
-            n, mode, masked)(*args)
-    else:
-        n_w = _n_windows(n_events, telemetry)
-        nodes, outcomes, fracs, actives, invals, tels = (
-            _sweep_autoscale_runner(n, mode, masked, tel=True)(
-                *args, _widx_grid(n_events, e, telemetry),
-                _stack_tel(n_w, n, len(configs))))
+    n_w = None if not tel_on else _n_windows(n_events, telemetry)
+    if tel_on or ch_on:
+        args = args + ((None, None) if not tel_on else
+                       (_widx_grid(n_events, e, telemetry),
+                        _stack_tel(n_w, n, len(configs))))
+    clouds = None
+    if ch_on:
+        chains = list(chains)
+        if len(chains) != len(configs) or any(p is None for p in chains):
+            raise ValueError("chain sweep: need one ChainPlan per config")
+        plan = chains[0]
+        clouds = [cloud_cold_draws(n_events, c.cloud_cold_prob, rng_seed)
+                  for c in configs]
+        args = args + (_chain_grid(plan, n_events, e),
+                       jnp.stack([_grid_pad(cc, n_events, e, False)
+                                  for cc in clouds]),
+                       jnp.asarray(np.stack([p.deadline for p in chains])),
+                       _stack_chain(plan.n_chains, len(configs)))
+    outs = _sweep_autoscale_runner(n, mode, masked, tel=tel_on,
+                                   chain=ch_on)(*args)
+    nodes, outcomes, fracs, actives, invals = outs[:5]
     nodes = np.asarray(nodes).reshape(len(configs), -1)[:, :n_events]
     outcomes = np.asarray(outcomes).reshape(len(configs), -1)[:, :n_events]
     fracs = np.asarray(fracs)
@@ -1234,13 +1641,15 @@ def _sweep_cluster_autoscale(
     for g, c in enumerate(configs):
         extras = _autoscale_extras(actives[g], invals[g], up[g],
                                    failures[g])
-        if telemetry is not None:
-            lane = jax.tree_util.tree_map(lambda a: a[g], tels)
+        if tel_on:
+            lane = jax.tree_util.tree_map(lambda a: a[g], outs[5])
             extras["telemetry"] = _tel_np(lane, n_w)
-        out.append((build_result(c, trace, nodes[g], outcomes[g],
-                                 cloud_cold_draws(n_events,
-                                                  c.cloud_cold_prob,
-                                                  rng_seed)),
+        if ch_on:
+            lane = jax.tree_util.tree_map(lambda a: a[g], outs[-1])
+            extras["chains"] = _chain_np(lane, plan.n_chains)
+        cc = (clouds[g] if ch_on
+              else cloud_cold_draws(n_events, c.cloud_cold_prob, rng_seed))
+        out.append((build_result(c, trace, nodes[g], outcomes[g], cc),
                     fracs[g], extras))
     return out
 

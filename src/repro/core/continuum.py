@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+from typing import NamedTuple
 
 import numpy as np
 
@@ -313,6 +314,66 @@ def continuum_latencies(trace: Trace, outcome: np.ndarray,
 
 
 # --------------------------------------------------------------------------
+# function chains: host-compiled plan shared verbatim by both engines
+# --------------------------------------------------------------------------
+
+class ChainPlan(NamedTuple):
+    """Chain accounting data compiled host-side from a chained ``Trace``.
+
+    Per-event arrays index the *dense* chain rows ``0..n_chains-1``
+    (``chain_id`` values are mapped through ``np.unique``); row
+    ``n_chains`` is a junk row reserved for chainless and pad events —
+    both engines scatter into it and slice it off their outputs, exactly
+    like the telemetry accumulator's junk window.  ``deadline`` carries
+    the junk row already appended (``+inf``: a junk-row "chain" can never
+    miss and chainless events see infinite slack).  The same plan feeds
+    the JAX scan (as ``xs`` data) and the numpy oracle, so the two
+    engines account bit-identical chain state by construction.
+    """
+
+    cid: np.ndarray       # i32[T] dense chain row per event
+    stage: np.ndarray     # i32[T] 0-based stage within the chain
+    last: np.ndarray      # bool[T] event is its chain's final stage
+    deadline: np.ndarray  # f32[C+1] per-chain deadline incl. junk row
+    n_chains: int
+
+
+def compile_chains(trace: Trace, deadline_s: float | None = None,
+                   slack: float | None = None) -> ChainPlan:
+    """Compile a chained trace into a :class:`ChainPlan`.
+
+    ``deadline_s`` is an absolute per-chain deadline in seconds;
+    ``slack`` instead derives each chain's deadline as ``slack x`` the
+    chain's warm-duration sum (the all-warm critical path, accumulated
+    in float32 so both engines compare against the identical value).
+    With neither, deadlines are ``+inf``: chains are tracked (latency,
+    drops) but can only miss by dropping a stage — never by time.
+    """
+    if not trace.has_chains:
+        raise ValueError("compile_chains needs a chained trace "
+                         "(Trace.chain_id/stage/chain_len set) — "
+                         "e.g. repro.workloads.chained_trace")
+    if deadline_s is not None and slack is not None:
+        raise ValueError("pass deadline_s or slack, not both")
+    uniq, inv = np.unique(np.asarray(trace.chain_id), return_inverse=True)
+    n_chains = len(uniq)
+    cid = inv.astype(np.int32)
+    stage = np.asarray(trace.stage, np.int32)
+    last = stage == np.asarray(trace.chain_len, np.int32) - 1
+    if deadline_s is not None:
+        dl = np.full(n_chains, np.float32(deadline_s), np.float32)
+    elif slack is not None:
+        warm_sum = np.zeros(n_chains, np.float32)
+        np.add.at(warm_sum, cid, np.asarray(trace.warm_dur, np.float32))
+        dl = (np.float32(slack) * warm_sum).astype(np.float32)
+    else:
+        dl = np.full(n_chains, np.inf, np.float32)
+    deadline = np.concatenate([dl, np.full(1, np.inf, np.float32)])
+    return ChainPlan(cid=cid, stage=stage, last=last, deadline=deadline,
+                     n_chains=n_chains)
+
+
+# --------------------------------------------------------------------------
 # the numpy oracle: one event at a time over WarmPool
 # --------------------------------------------------------------------------
 
@@ -325,13 +386,16 @@ def _tel_acc_ref(n_windows: int, n_nodes: int) -> dict:
             "occupancy": np.zeros((n_windows, n_nodes), np.int64),
             "invalidated": np.zeros(n_windows, np.int64),
             "nodes_up": np.zeros(n_windows, np.int64),
-            "nodes_active": np.zeros(n_windows, np.int64)}
+            "nodes_active": np.zeros(n_windows, np.int64),
+            "chain_miss": np.zeros(n_windows, np.int64)}
 
 
 def cluster_outcomes_ref(cfg: ClusterConfig, trace: Trace,
                          autoscale: Autoscale | None = None,
                          failures: "Failures | None" = None,
-                         telemetry: int | None = None):
+                         telemetry: int | None = None,
+                         chains: ChainPlan | None = None,
+                         chain_cold: np.ndarray | None = None):
     """Sequential oracle for the cluster: returns ``(node, outcome)`` as
     i32[T] arrays (outcome: 0 hit, 1 miss, 2 drop/offload).  With
     ``failures`` an *extras* dict is appended; with ``autoscale`` a
@@ -347,6 +411,18 @@ def cluster_outcomes_ref(cfg: ClusterConfig, trace: Trace,
     snapshot goes through float32 step for step, so the window arrays are
     *bit-identical* to the JAX engine's in-scan accumulator (a plain run
     with telemetry returns ``(node, outcome, extras)``).
+
+    ``chains`` (a :class:`ChainPlan`) threads per-chain accounting
+    through the event loop — accumulated end-to-end latency, dropped /
+    done / missed flags, with each stage priced hit -> warm, miss ->
+    cold, drop -> RTT + cloud (using the pre-drawn ``chain_cold`` coin
+    flips, the same ``cloud_cold_draws`` array the host pricing uses) —
+    every scalar through float32 in event order, mirroring the JAX
+    engine's in-carry accumulator bit for bit.  Routing policies see the
+    pre-step remaining slack and stage via ``RouteCtx.chain_slack`` /
+    ``chain_stage``.  Results land in ``extras["chains"]`` (a plain run
+    with chains returns ``(node, outcome, extras)``); with telemetry the
+    window arrays additionally count per-window deadline misses.
 
     The routing decision calls the registered policy function with numpy
     float32 inputs — the same pure function the JAX engine compiles — so
@@ -386,6 +462,17 @@ def cluster_outcomes_ref(cfg: ClusterConfig, trace: Trace,
     inv_seen = 0
     if telemetry is not None:
         tel = _tel_acc_ref(-(-len(trace) // telemetry), n)
+    # chain accounting twin: one f32 latency row per chain + a junk row,
+    # every update through float32 in event order (see ChainPlan)
+    no_slack, no_stage = np.float32(np.inf), np.int32(-1)
+    if chains is not None:
+        if chain_cold is None:
+            raise ValueError("chains accounting needs the pre-drawn "
+                             "chain_cold array (cloud_cold_draws)")
+        ch_lat = np.zeros(chains.n_chains + 1, np.float32)
+        ch_dropped = np.zeros(chains.n_chains + 1, bool)
+        ch_done = np.zeros(chains.n_chains + 1, bool)
+        ch_missed = np.zeros(chains.n_chains + 1, bool)
 
     def tel_event(i: int, up_cnt: int, act_cnt: int) -> None:
         """Mirror of the engine's ``_tel_event``: scatter-add the counts,
@@ -418,13 +505,20 @@ def cluster_outcomes_ref(cfg: ClusterConfig, trace: Trace,
         free_t = np.fromiter(
             (pools[j][tgt[j]].free_mb for j in range(n)), np.float32,
             n) if spec.needs_free else None
+        if chains is not None:
+            row = int(chains.cid[i])
+            cslack = np.float32(chains.deadline[row] - ch_lat[row])
+            cstage = np.int32(chains.stage[i])
+        else:
+            cslack, cstage = no_slack, no_stage
         ctx = RouteCtx(
             h1=np.int32(h1[i]), h2=np.int32(h2[i]),
             size=np.float32(trace.size_mb[i]), cls=np.int32(cls),
             warm=np.float32(trace.warm_dur[i]),
             cold=np.float32(trace.cold_dur[i]),
             free=free_t, cap=cap_by_cls[cls],
-            cloud_rtt_s=rtt, cloud_cold_prob=ccp, node_up=eff_up)
+            cloud_rtt_s=rtt, cloud_cold_prob=ccp, node_up=eff_up,
+            chain_slack=cslack, chain_stage=cstage)
         node = int(spec.fn(np, ctx))
         if eff_up[node]:
             out = _OUT_CODE[pools[node][int(tgt[node])].access(
@@ -435,7 +529,36 @@ def cluster_outcomes_ref(cfg: ClusterConfig, trace: Trace,
             out = DROP          # routed to a dead node: offload, pools
         node_out[i] = node      # untouched (they are frozen/absent)
         outcome_out[i] = out
+        if chains is not None:
+            # mirror of the engine's _chain_event: stage price in f32,
+            # accumulate, flag done/missed at the chain's final stage
+            w32 = np.float32(trace.warm_dur[i])
+            c32 = np.float32(trace.cold_dur[i])
+            if out == HIT:
+                stage_lat = w32
+            elif out == MISS:
+                stage_lat = c32
+            else:
+                stage_lat = np.float32(rtt + (c32 if chain_cold[i] else w32))
+            fin = np.float32(ch_lat[row] + stage_lat)
+            ch_lat[row] = fin
+            ch_dropped[row] = bool(ch_dropped[row]) or out == DROP
+            if chains.last[i]:
+                ch_done[row] = True
+                miss = bool(ch_dropped[row]) or bool(
+                    fin > chains.deadline[row])
+                ch_missed[row] = bool(ch_missed[row]) or miss
+                if tel is not None and miss:
+                    tel["chain_miss"][i // telemetry] += 1
         return node, out
+
+    def chain_np() -> dict:
+        """Junk row sliced off — the engine's ``_chain_np`` twin."""
+        c = chains.n_chains
+        return {"latency": ch_lat[:c].copy(),
+                "dropped": ch_dropped[:c].copy(),
+                "done": ch_done[:c].copy(),
+                "missed": ch_missed[:c].copy()}
 
     if autoscale is None:
         for i in range(len(trace)):
@@ -443,11 +566,13 @@ def cluster_outcomes_ref(cfg: ClusterConfig, trace: Trace,
             run_event(i, eu)
             if tel is not None:
                 tel_event(i, int(eu.sum()) if up_mask is not None else n, n)
-        if failures is None and tel is None:
+        if failures is None and tel is None and chains is None:
             return node_out, outcome_out
         extras = {} if tel is None else {"telemetry": tel}
         if failures is not None:
             extras.update(invalidated=invalidated, node_up=up_mask)
+        if chains is not None:
+            extras["chains"] = chain_np()
         return node_out, outcome_out, extras
 
     # -- autoscaled path: epoch loop with float32-mirrored re-splitting ----
@@ -538,6 +663,8 @@ def cluster_outcomes_ref(cfg: ClusterConfig, trace: Trace,
               "active": actives}
     if tel is not None:
         extras["telemetry"] = tel
+    if chains is not None:
+        extras["chains"] = chain_np()
     return node_out, outcome_out, fracs, extras
 
 

@@ -54,6 +54,15 @@ class RouteCtx(NamedTuple):
     around dead nodes with no engine edits.  A request routed to a down
     node is dropped to the cloud tier by the engine without touching any
     pool, so policies that ignore the mask stay correct — just lossier.
+
+    ``chain_slack``/``chain_stage`` expose function-chain state when the
+    scenario tracks chains (``Scenario(..., chains=...)``): the remaining
+    slack ``deadline - elapsed_chain_latency`` (f32 seconds, ``+inf`` for
+    chainless events or no-deadline chains) and the 0-based stage index
+    (``-1`` for chainless events).  Both engines populate them identically
+    (``+inf``/``-1`` when chains are off), so slack-aware policies like
+    ``slack_aware`` run unmodified — and degrade to their slack-rich
+    branch — on chainless traffic.
     """
 
     h1: object            # i32  sticky hash: func_id % n_nodes
@@ -67,6 +76,8 @@ class RouteCtx(NamedTuple):
     cloud_rtt_s: object   # f32  edge->cloud round trip (s)
     cloud_cold_prob: object  # f32  cloud cold-start probability
     node_up: object = None   # bool[N] live-node mask (engines populate)
+    chain_slack: object = None  # f32  remaining chain slack (s), +inf off
+    chain_stage: object = None  # i32  stage within chain, -1 off
 
 
 class SlotStats(NamedTuple):

@@ -43,7 +43,17 @@ HIT, MISS, DROP = 0, 1, 2
 
 
 class Trace(NamedTuple):
-    """Struct-of-arrays invocation trace, sorted by time."""
+    """Struct-of-arrays invocation trace, sorted by time.
+
+    The last three fields carry function-chain metadata and are ``None``
+    for chainless traces (the common case).  They are all-or-none: either
+    every chain field is an array of the event length or every one is
+    ``None`` — ``chained_trace`` sets them, and every slicing method
+    (``head``/``window``/``select``/``sorted_by_time``) carries them
+    along, so a window that cuts a chain mid-flight keeps each surviving
+    event's ``chain_id``/``stage`` coherent (stages simply go absent, they
+    are never renumbered).
+    """
 
     t: np.ndarray          # f32[N] event time (seconds)
     func_id: np.ndarray    # i32[N] function identity
@@ -51,11 +61,33 @@ class Trace(NamedTuple):
     cls: np.ndarray        # i32[N] size class (0 small, 1 large)
     warm_dur: np.ndarray   # f32[N] execution time on a warm container
     cold_dur: np.ndarray   # f32[N] execution time incl. cold-start init
+    chain_id: np.ndarray | None = None   # i32[N] chain instance id
+    stage: np.ndarray | None = None      # i32[N] position within the chain
+    chain_len: np.ndarray | None = None  # i32[N] total stages in the chain
+
+    CHAIN_FIELDS = ("chain_id", "stage", "chain_len")
 
     def __len__(self) -> int:
         return int(self.t.shape[0])
 
-    def replace(self, **fields: np.ndarray) -> "Trace":
+    @property
+    def has_chains(self) -> bool:
+        """True when chain metadata is present (all-or-none validated)."""
+        present = [getattr(self, f) is not None for f in self.CHAIN_FIELDS]
+        if any(present) and not all(present):
+            missing = [f for f, p in zip(self.CHAIN_FIELDS, present)
+                       if not p]
+            raise ValueError(
+                f"Trace chain fields are all-or-none; missing {missing}")
+        return all(present)
+
+    def _map(self, f) -> "Trace":
+        """Apply ``f`` to every field array, passing ``None`` through —
+        the one place slicing semantics live so chain fields can never
+        drift out of step with the core fields."""
+        return Trace(*(None if a is None else f(a) for a in self))
+
+    def replace(self, **fields) -> "Trace":
         """Return a copy with the named field arrays swapped out.
 
         The safe twin of namedtuple ``_replace``, which is broken here:
@@ -71,10 +103,10 @@ class Trace(NamedTuple):
 
     def sorted_by_time(self) -> "Trace":
         order = np.argsort(self.t, kind="stable")
-        return Trace(*(a[order] for a in self))
+        return self._map(lambda a: a[order])
 
     def select(self, mask: np.ndarray) -> "Trace":
-        return Trace(*(a[mask] for a in self))
+        return self._map(lambda a: a[mask])
 
     def head(self, n: int) -> "Trace":
         """The first ``n`` events (all of them when ``n >= len``) — the
@@ -85,7 +117,7 @@ class Trace(NamedTuple):
         run."""
         if n < 0:
             raise ValueError(f"head(n) needs n >= 0, got {n}")
-        return Trace(*(a[:n] for a in self))
+        return self._map(lambda a: a[:n])
 
     def window(self, t0: float, t1: float) -> "Trace":
         """Events with ``t0 <= t < t1`` (absolute times are preserved —

@@ -82,17 +82,18 @@ from ..core.registry import (REPLACEMENT, ROUTING, PolicySpec, RouteCtx,
                              register_routing, replacement_policies,
                              routing_policies)
 from .api import simulate, sweep
+from .chains import ChainMetrics, Chains
 from .result import SUMMARY_KEYS, Result
 from .scenario import Scenario
 from .telemetry import (Telemetry, TelemetrySeries, run_manifest,
                         trace_fingerprint, write_manifest)
-from . import policies  # registers cost_model et al.  # noqa: F401
+from . import policies  # registers cost_model, slack_aware  # noqa: F401
 
 __all__ = [
-    "Autoscale", "Failures", "REPLACEMENT", "ROUTING", "PolicySpec",
-    "Result", "RouteCtx", "SUMMARY_KEYS", "Scenario", "SlotStats",
-    "Telemetry", "TelemetrySeries", "register_replacement",
-    "register_routing", "replacement_policies", "routing_policies",
-    "run_manifest", "simulate", "sweep", "trace_fingerprint",
-    "write_manifest",
+    "Autoscale", "ChainMetrics", "Chains", "Failures", "REPLACEMENT",
+    "ROUTING", "PolicySpec", "Result", "RouteCtx", "SUMMARY_KEYS",
+    "Scenario", "SlotStats", "Telemetry", "TelemetrySeries",
+    "register_replacement", "register_routing", "replacement_policies",
+    "routing_policies", "run_manifest", "simulate", "sweep",
+    "trace_fingerprint", "write_manifest",
 ]

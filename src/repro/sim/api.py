@@ -28,6 +28,7 @@ from ..cluster.engine import (_simulate_cluster_autoscale_jax,
                               _sweep_cluster_failures, check_chunk_events,
                               check_step_mode)
 from ..core.types import Trace
+from .chains import metrics_from_arrays
 from .result import Result
 from .scenario import Scenario
 from .telemetry import series_from_arrays, trace_fingerprint
@@ -59,13 +60,29 @@ def _telw(scenario: Scenario) -> int | None:
     return t.window_events if t is not None else None
 
 
+def _chain_plan(scenario: Scenario, trace: Trace):
+    """Compile the scenario's :class:`Chains` knob against ``trace``
+    into the engine-level ``ChainPlan`` (None = chains off)."""
+    if scenario.chains is None:
+        return None
+    if not trace.has_chains:
+        raise ValueError(
+            "Scenario(..., chains=...) needs a chained trace "
+            "(Trace.chain_id/stage/chain_len set) — e.g. "
+            "repro.workloads.chained_trace")
+    return scenario.chains.compile(trace)
+
+
 def _wrap(scenario: Scenario, trace: Trace, raw, extras: dict,
-          fracs, telw: int | None, info: dict) -> Result:
+          fracs, telw: int | None, info: dict, plan=None) -> Result:
     """Assemble the :class:`Result`: lift the engine-level telemetry
-    window arrays into a :class:`TelemetrySeries`, attach the run info,
-    and (for autoscaled runs) the epoch-boundary time axis."""
+    window arrays into a :class:`TelemetrySeries` and the per-chain
+    arrays into a :class:`ChainMetrics`, attach the run info, and (for
+    autoscaled runs) the epoch-boundary time axis."""
     tel = (series_from_arrays(extras["telemetry"], trace, telw)
            if telw is not None else None)
+    ch = (metrics_from_arrays(extras["chains"], plan)
+          if plan is not None else None)
     ep_t = None
     if scenario.autoscale is not None and len(trace):
         e = scenario.autoscale.epoch_events
@@ -76,7 +93,7 @@ def _wrap(scenario: Scenario, trace: Trace, raw, extras: dict,
                   epoch_active=extras.get("active"),
                   node_up=extras.get("node_up"),
                   invalidated=extras.get("invalidated"),
-                  telemetry=tel, run_info=info, epoch_t=ep_t)
+                  telemetry=tel, chains=ch, run_info=info, epoch_t=ep_t)
 
 
 def simulate(scenario: Scenario, trace: Trace, *, engine: str = "jax",
@@ -116,41 +133,45 @@ def simulate(scenario: Scenario, trace: Trace, *, engine: str = "jax",
     cfg = scenario.to_cluster_config()
     asc, fails = scenario.autoscale, scenario.failures
     telw = _telw(scenario)
+    plan = _chain_plan(scenario, trace)
     info = {"engine": engine,
             "mode": mode if engine == "jax" else None,
             "chunk_events": chunk if engine == "jax" else None,
             "rng_seed": rng_seed,
             "trace_fingerprint": trace_fingerprint(trace)}
     fracs = None
+    bare = fails is None and telw is None and plan is None
     if asc is None:
         if chunk is not None and engine == "jax":
             out = _simulate_cluster_chunked_jax(
                 cfg, trace, rng_seed, mode, chunk, failures=fails,
-                telemetry=telw)
-            raw, extras = (out, {}) if fails is None and telw is None \
-                else out
+                telemetry=telw, chains=plan)
+            raw, extras = (out, {}) if bare else out
         elif fails is None:
             if engine == "jax":
                 out = _simulate_cluster_jax(cfg, trace, rng_seed, mode,
-                                            telemetry=telw)
+                                            telemetry=telw, chains=plan)
             else:
                 out = _simulate_cluster_ref(cfg, trace, rng_seed,
-                                            telemetry=telw)
-            raw, extras = (out, {}) if telw is None else out
+                                            telemetry=telw, chains=plan)
+            raw, extras = (out, {}) if telw is None and plan is None \
+                else out
         elif engine == "jax":
             raw, extras = _simulate_cluster_failures_jax(
-                cfg, fails, trace, rng_seed, mode, telemetry=telw)
+                cfg, fails, trace, rng_seed, mode, telemetry=telw,
+                chains=plan)
         else:
             raw, extras = _simulate_cluster_failures_ref(
-                cfg, fails, trace, rng_seed, telemetry=telw)
+                cfg, fails, trace, rng_seed, telemetry=telw, chains=plan)
     elif engine == "jax":
         raw, fracs, extras = _simulate_cluster_autoscale_jax(
             cfg, asc, trace, rng_seed, mode, failures=fails,
-            telemetry=telw)
+            telemetry=telw, chains=plan)
     else:
         raw, fracs, extras = _simulate_cluster_autoscale_ref(
-            cfg, asc, trace, rng_seed, failures=fails, telemetry=telw)
-    return _wrap(scenario, trace, raw, extras, fracs, telw, info)
+            cfg, asc, trace, rng_seed, failures=fails, telemetry=telw,
+            chains=plan)
+    return _wrap(scenario, trace, raw, extras, fracs, telw, info, plan)
 
 
 def sweep(trace: Trace, scenarios: Iterable[Scenario], *,
@@ -187,55 +208,62 @@ def sweep(trace: Trace, scenarios: Iterable[Scenario], *,
     if engine == "ref":
         return [simulate(s, trace, engine="ref", rng_seed=rng_seed)
                 for s in scenarios]
-    groups: dict[tuple[int, int, int | None, bool, int | None],
+    plans = [_chain_plan(s, trace) for s in scenarios]
+    groups: dict[tuple[int, int, int | None, bool, int | None, bool],
                  list[int]] = {}
     for i, s in enumerate(scenarios):
         epoch = s.autoscale.epoch_events if s.autoscale else None
         # failure-free lanes keep the cheap unmasked programs (static and
         # autoscaled alike); failure lanes compile the masked twin and
         # vmap their schedules as data; telemetry lanes bucket by window
-        # length (the stacked accumulator shape)
+        # length (the stacked accumulator shape); chain lanes bucket by
+        # chains on/off only — deadlines are per-lane *data*, so
+        # {no-deadline, tight, loose} variants share one program
         failing = s.failures is not None
         groups.setdefault(
-            (s.n_nodes, s.max_slots, epoch, failing, _telw(s)),
+            (s.n_nodes, s.max_slots, epoch, failing, _telw(s),
+             plans[i] is not None),
             []).append(i)
     results: list[Result | None] = [None] * len(scenarios)
     info = {"engine": engine, "mode": mode, "chunk_events": chunk,
             "rng_seed": rng_seed,
             "trace_fingerprint": trace_fingerprint(trace)}
-    for (_, _, epoch, failing, telw), idxs in groups.items():
+    for (_, _, epoch, failing, telw, chained), idxs in groups.items():
         cfgs = [scenarios[i].to_cluster_config() for i in idxs]
+        chs = [plans[i] for i in idxs] if chained else None
         if epoch is None and not failing:
             if chunk is not None:
                 outs = _sweep_cluster_chunked(trace, cfgs, rng_seed=rng_seed,
                                               mode=mode, chunk_events=chunk,
-                                              telemetry=telw)
+                                              telemetry=telw, chains=chs)
             else:
                 outs = _sweep_cluster(trace, cfgs, rng_seed=rng_seed,
-                                      mode=mode, telemetry=telw)
+                                      mode=mode, telemetry=telw, chains=chs)
             for i, out in zip(idxs, outs):
-                raw, extras = (out, {}) if telw is None else out
+                raw, extras = (out, {}) if telw is None and not chained \
+                    else out
                 results[i] = _wrap(scenarios[i], trace, raw, extras, None,
-                                   telw, info)
+                                   telw, info, plans[i])
         elif epoch is None:
             fails = [scenarios[i].failures for i in idxs]
             if chunk is not None:
                 pairs = _sweep_cluster_chunked(
                     trace, cfgs, rng_seed=rng_seed, mode=mode,
-                    chunk_events=chunk, failures=fails, telemetry=telw)
+                    chunk_events=chunk, failures=fails, telemetry=telw,
+                    chains=chs)
             else:
                 pairs = _sweep_cluster_failures(
                     trace, cfgs, fails, rng_seed=rng_seed, mode=mode,
-                    telemetry=telw)
+                    telemetry=telw, chains=chs)
             for i, (raw, extras) in zip(idxs, pairs):
                 results[i] = _wrap(scenarios[i], trace, raw, extras, None,
-                                   telw, info)
+                                   telw, info, plans[i])
         else:
             triples = _sweep_cluster_autoscale(
                 trace, cfgs, [scenarios[i].autoscale for i in idxs],
                 [scenarios[i].failures for i in idxs],
-                rng_seed=rng_seed, mode=mode, telemetry=telw)
+                rng_seed=rng_seed, mode=mode, telemetry=telw, chains=chs)
             for i, (raw, fracs, extras) in zip(idxs, triples):
                 results[i] = _wrap(scenarios[i], trace, raw, extras, fracs,
-                                   telw, info)
+                                   telw, info, plans[i])
     return results

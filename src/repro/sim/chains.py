@@ -1,0 +1,165 @@
+"""First-class function chains with end-to-end deadlines.
+
+Serverless workflows invoke functions in *chains* (A -> B -> C ...), and
+what users experience is the **chain-complete latency** against an
+end-to-end SLO — not any single stage's cold start.  ``Scenario(...,
+chains=Chains(...))`` makes both engines account every chain *inside the
+scan carry*: the accumulated end-to-end latency, whether any stage
+dropped, and — judged exactly once, at the chain's final stage — whether
+the deadline was missed.  ``Result.chains`` then exposes the per-chain
+arrays and the headline ``deadline_miss_pct``.
+
+Design contract (tested in ``tests/test_chains.py``):
+
+* **bit-identical JAX vs oracle** — stage latencies are priced with the
+  same float32 arithmetic as ``continuum_latencies`` (hit -> warm,
+  miss -> cold, drop -> cloud RTT + the pre-drawn cold flip) and
+  accumulated in f32, step for step, in both engines;
+* **chunked == monolithic** — the chain accumulator threads between
+  chunks with the pool state, keyed by global chain rows, for any
+  ``chunk_events``;
+* **deadline semantics** — a chain misses iff its final stage completes
+  past the deadline *or* any stage dropped; chains whose final stage
+  falls outside the simulated window are never judged (``done`` False);
+* **routing visibility** — each event's remaining slack
+  (``deadline - elapsed``) and stage index ride ``RouteCtx``
+  (``chain_slack``/``chain_stage``), so policies like ``slack_aware``
+  can shed already-doomed chains to the cloud and keep edge pools warm
+  for the chains that can still make their deadlines.
+
+The engine-level plan (:class:`repro.core.continuum.ChainPlan`) lives in
+``repro.core`` so both engines share it without import cycles; this
+module is the user-facing spec and result view.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core.continuum import ChainPlan, compile_chains
+from ..core.types import Trace
+
+
+@dataclasses.dataclass(frozen=True)
+class Chains:
+    """The chain knob on :class:`repro.sim.Scenario`.
+
+    Exactly one of:
+
+    * ``deadline_s`` — one absolute end-to-end deadline (seconds) for
+      every chain;
+    * ``slack`` — per-chain deadline = ``slack x`` the chain's summed
+      warm durations (its all-warm critical path): ``slack=1.0`` means
+      "no room for a single cold start", ``slack=3.0`` is a loose SLO;
+    * neither — chains are tracked (latency, drops) with ``+inf``
+      deadlines: only a dropped stage can miss.
+
+    Frozen and hashable like every other scenario knob; scenarios
+    sharing a chained trace batch into one vmapped sweep program with
+    their deadlines riding as per-lane data.
+    """
+
+    deadline_s: float | None = None
+    slack: float | None = None
+
+    def __post_init__(self):
+        if self.deadline_s is not None and self.slack is not None:
+            raise ValueError("Chains: pass deadline_s or slack, not both")
+        for name in ("deadline_s", "slack"):
+            v = getattr(self, name)
+            if v is None:
+                continue
+            try:
+                v = float(v)
+            except (TypeError, ValueError):
+                raise ValueError(
+                    f"Chains.{name} must be a positive number, got "
+                    f"{getattr(self, name)!r}") from None
+            if not v > 0.0:
+                raise ValueError(
+                    f"Chains.{name} must be positive, got {v}")
+            object.__setattr__(self, name, v)
+
+    def compile(self, trace: Trace) -> ChainPlan:
+        """The engine-level :class:`ChainPlan` for ``trace`` (requires
+        ``trace.has_chains``)."""
+        return compile_chains(trace, deadline_s=self.deadline_s,
+                              slack=self.slack)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainMetrics:
+    """Per-chain accounting one chain-tracked run produces (``C`` =
+    number of chain instances in the trace).
+
+    ``latency`` is f32 and bit-equal across engines; ``done`` is False
+    for chains whose final stage fell outside the simulated trace —
+    those are excluded from every rate below (they were never judged).
+    """
+
+    #: f32[C] accumulated end-to-end latency over the observed stages
+    latency: np.ndarray
+    #: bool[C] any observed stage dropped to the cloud
+    dropped: np.ndarray
+    #: bool[C] the chain's final stage was simulated (deadline judged)
+    done: np.ndarray
+    #: bool[C] deadline missed (late at the final stage, or any drop)
+    missed: np.ndarray
+    #: f32[C] the per-chain deadline the run enforced (+inf = none)
+    deadline: np.ndarray
+
+    def __len__(self) -> int:
+        return int(self.latency.shape[0])
+
+    @property
+    def n_chains(self) -> int:
+        return len(self)
+
+    @property
+    def n_done(self) -> int:
+        """Chains whose final stage was simulated."""
+        return int(self.done.sum())
+
+    @property
+    def chain_latency(self) -> np.ndarray:
+        """f32[done] end-to-end latencies of the completed chains."""
+        return self.latency[self.done]
+
+    @property
+    def chain_latency_mean_s(self) -> float:
+        lat = self.chain_latency
+        return float(lat.mean()) if len(lat) else 0.0
+
+    @property
+    def chain_p95_s(self) -> float:
+        lat = self.chain_latency
+        return float(np.percentile(lat, 95)) if len(lat) else 0.0
+
+    @property
+    def deadline_miss_pct(self) -> float:
+        """Percent of *completed* chains that missed their deadline —
+        the headline SLO metric."""
+        n = self.n_done
+        return 100.0 * float(self.missed.sum()) / n if n else 0.0
+
+    def table(self) -> list[dict]:
+        """One plain-dict row per chain — the quick-look view."""
+        return [{"chain": c,
+                 "latency_s": float(self.latency[c]),
+                 "deadline_s": float(self.deadline[c]),
+                 "done": bool(self.done[c]),
+                 "dropped": bool(self.dropped[c]),
+                 "missed": bool(self.missed[c])}
+                for c in range(len(self))]
+
+
+def metrics_from_arrays(arrays: dict, plan: ChainPlan) -> ChainMetrics:
+    """Assemble :class:`ChainMetrics` from the engine-level per-chain
+    arrays (already junk-row-free) plus the plan's deadlines."""
+    return ChainMetrics(
+        latency=np.asarray(arrays["latency"], np.float32),
+        dropped=np.asarray(arrays["dropped"], bool),
+        done=np.asarray(arrays["done"], bool),
+        missed=np.asarray(arrays["missed"], bool),
+        deadline=np.asarray(plan.deadline[:plan.n_chains], np.float32))

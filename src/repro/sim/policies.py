@@ -8,10 +8,16 @@ third-party package would use; neither ``repro.core`` nor
 ``repro.cluster`` knows it exists, yet it runs in the jitted ``lax.scan``
 engine, the numpy oracle, and vmapped sweeps (bit-identically — the
 prediction is pure float32 arithmetic over the routing context).
+
+``slack_aware`` is the chain-SLO counterpart: the first policy to read
+the per-event chain context (``ctx.chain_slack``) that ``Scenario(...,
+chains=...)`` threads through both engines — sticky locality for every
+chain that can still meet its deadline, clean cloud shedding for the
+doomed ones.
 """
 from __future__ import annotations
 
-from ..core.registry import RouteCtx, register_routing
+from ..core.registry import ROUTING, RouteCtx, register_routing
 
 
 @register_routing("cost_model")
@@ -37,3 +43,46 @@ def cost_model(xp, ctx: RouteCtx):
     cloud_pred = ctx.cloud_rtt_s + ctx.cloud_cold_prob * cold_cost
     feasible = (ctx.cap >= ctx.size - xp.float32(1e-9)) & ctx.node_up
     return xp.argmin(xp.where(feasible, edge_pred, cloud_pred))
+
+
+@register_routing("slack_aware", needs_free=False)
+def slack_aware(xp, ctx: RouteCtx):
+    """Chain-SLO routing: shed *doomed* chains, protect the savable ones.
+
+    A chain whose remaining slack (``deadline - elapsed``, threaded
+    through ``RouteCtx.chain_slack`` by both engines) has gone
+    non-positive will miss its deadline no matter what happens next —
+    but its remaining stages still *cost* the edge: routed sticky, they
+    evict warm containers that chains which can still make their
+    deadlines depend on.  Warm locality is so valuable here that
+    re-routing *savable* work is a net loss (a re-route is an almost
+    certain cold start), so the only slack signal worth acting on is
+    doom — and the right action is to get doomed work off the edge
+    *without touching any pool*:
+
+    * a **down node** (``~ctx.node_up``) is the perfect dump: the engine
+      offloads the request to the cloud and no pool is disturbed — under
+      an outage, sticky re-steers everything (doomed chains included)
+      onto the survivors and storms their pools; this policy sheds
+      exactly the doomed share of that storm;
+    * otherwise a node whose target pool can **never host** the
+      container (``cap < size``) drops it to the cloud just as cleanly;
+    * with nowhere clean to dump (all nodes up and big enough), doomed
+      work stays sticky — shedding onto a live pool would evict warm
+      containers, the very thing being protected.
+
+    Everything with slack left routes plain ``sticky`` (composed via
+    ``ROUTING.spec("sticky").fn``, so the decision stays bit-identical
+    in the scan, the oracle, and vmapped sweeps).  Chainless events —
+    and whole runs without ``chains=`` — carry infinite slack and are
+    never doomed, so the policy degrades to exact ``sticky`` there.
+    """
+    doomed = ctx.chain_slack <= xp.float32(0.0)
+    down = (~ctx.node_up).astype(xp.int32)
+    have_down = xp.sum(down) > 0
+    cap_dump = xp.argmin(ctx.cap)
+    never_fits = ctx.cap[cap_dump] < ctx.size - xp.float32(1e-9)
+    dump = xp.where(have_down, xp.argmax(down), cap_dump)
+    shed = doomed & (have_down | never_fits)
+    home = ROUTING.spec("sticky").fn(xp, ctx)
+    return xp.where(shed, dump, home)

@@ -17,6 +17,7 @@ from ..cluster.metrics import ClusterResult
 from ..core.continuum import ContinuumResult
 from ..core.types import ClassMetrics, SimResult
 from . import telemetry as _telemetry
+from .chains import ChainMetrics
 from .scenario import Scenario
 from .telemetry import TelemetrySeries
 
@@ -62,6 +63,16 @@ from .telemetry import TelemetrySeries
 #: Telemetry (inert 0 when the scenario has no ``telemetry=`` knob):
 #:
 #: * ``n_windows``            — windows in ``Result.timeline()``.
+#:
+#: Function chains (inert zeros when the scenario has no ``chains=``
+#: knob; rates are over *completed* chains — those whose final stage
+#: was simulated):
+#:
+#: * ``n_chains``             — chain instances tracked;
+#: * ``chain_latency_mean_s`` / ``chain_p95_s`` — end-to-end
+#:   chain-complete latency stats, seconds;
+#: * ``deadline_miss_pct``    — completed chains late at their final
+#:   stage (or with any dropped stage), percent — the SLO headline.
 SUMMARY_KEYS = (
     "cold_start_pct", "drop_pct", "hit_rate",
     "small_cold_start_pct", "large_cold_start_pct",
@@ -72,6 +83,8 @@ SUMMARY_KEYS = (
     "n_epochs", "frac_final_mean", "frac_min", "frac_max",
     "downtime_pct", "n_invalidated", "n_active_final", "n_active_min",
     "n_windows",
+    "n_chains", "chain_latency_mean_s", "chain_p95_s",
+    "deadline_miss_pct",
 )
 
 
@@ -112,6 +125,9 @@ class Result:
     #: the windowed time series (``None`` unless the scenario set
     #: ``telemetry=``); see :class:`repro.sim.telemetry.TelemetrySeries`
     telemetry: TelemetrySeries | None = None
+    #: per-chain accounting (``None`` unless the scenario set
+    #: ``chains=``); see :class:`repro.sim.chains.ChainMetrics`
+    chains: ChainMetrics | None = None
     #: how this run was executed — engine, mode, chunking, rng seed, and
     #: the trace fingerprint — filled in by ``simulate``/``sweep`` and
     #: folded into :meth:`manifest`
@@ -234,6 +250,34 @@ class Result:
                 "(or telemetry=N) and re-run")
         return self.telemetry
 
+    # -- chain views (repro.sim.chains) ------------------------------------
+    def chain_metrics(self) -> ChainMetrics:
+        """The per-chain accounting this run accumulated in-scan.
+
+        Raises ``ValueError`` unless the scenario enabled it —
+        ``Scenario(..., chains=Chains(deadline_s=...))`` — and the trace
+        carried chain metadata."""
+        if self.chains is None:
+            raise ValueError(
+                "this run tracked no chains — set "
+                "Scenario(..., chains=Chains(...)) on a chained trace "
+                "(Trace.has_chains) and re-run")
+        return self.chains
+
+    @property
+    def chain_latency(self) -> np.ndarray:
+        """f32[done] end-to-end latencies of the completed chains."""
+        return self.chain_metrics().chain_latency
+
+    @property
+    def chain_p95_s(self) -> float:
+        return self.chain_metrics().chain_p95_s
+
+    @property
+    def deadline_miss_pct(self) -> float:
+        """Percent of completed chains that missed their deadline."""
+        return self.chain_metrics().deadline_miss_pct
+
     def to_trace_events(self, path: str | None = None) -> dict:
         """Chrome trace-event / Perfetto JSON for this run: counter
         tracks per telemetry window plus outage/autoscale timeline
@@ -276,6 +320,14 @@ class Result:
             "n_active_min": int(self.n_active.min()),
             "n_windows": (len(self.telemetry)
                           if self.telemetry is not None else 0),
+            "n_chains": (self.chains.n_chains
+                         if self.chains is not None else 0),
+            "chain_latency_mean_s": (self.chains.chain_latency_mean_s
+                                     if self.chains is not None else 0.0),
+            "chain_p95_s": (self.chains.chain_p95_s
+                            if self.chains is not None else 0.0),
+            "deadline_miss_pct": (self.chains.deadline_miss_pct
+                                  if self.chains is not None else 0.0),
         })
         # the key contract must hold even under `python -O` (a bare assert
         # would let key drift ship silently into results/BENCH_*.json)

@@ -29,6 +29,7 @@ import numpy as np
 
 from ..core.continuum import Autoscale, ClusterConfig, Failures
 from ..core.registry import REPLACEMENT, ROUTING
+from .chains import Chains
 from .telemetry import Telemetry
 
 
@@ -80,6 +81,13 @@ class Scenario:
     length in events, or a kwargs dict; ``None`` = off) makes both
     engines accumulate the windowed time series inside the scan —
     ``Result.timeline()`` / ``Result.to_trace_events()`` then expose it.
+
+    ``chains`` (a :class:`repro.sim.chains.Chains`, or a kwargs dict;
+    ``None`` = off) makes both engines track function chains end to end
+    against per-chain deadlines: ``simulate`` requires a chained trace
+    (``Trace.has_chains``), ``Result.chains`` exposes the per-chain
+    metrics, and routing policies see each event's remaining slack via
+    ``RouteCtx.chain_slack``.
     """
 
     node_mb: tuple[float, ...]
@@ -93,6 +101,7 @@ class Scenario:
     autoscale: Autoscale | None = None
     failures: Failures | None = None
     telemetry: Telemetry | None = None
+    chains: Chains | None = None
     name: str = ""
 
     def __post_init__(self):
@@ -167,6 +176,15 @@ class Scenario:
                     "telemetry must be a Telemetry, a window length in "
                     f"events, a kwargs dict, or None, got {t!r}")
             object.__setattr__(self, "telemetry", t)
+        if self.chains is not None:
+            c = self.chains
+            if isinstance(c, dict):
+                c = Chains(**c)
+            if not isinstance(c, Chains):
+                raise ValueError(
+                    "chains must be a Chains, a kwargs dict, or None, "
+                    f"got {c!r}")
+            object.__setattr__(self, "chains", c)
         # canonicalize policies to registered names (raises on unknown)
         object.__setattr__(
             self, "replacement",
@@ -225,8 +243,9 @@ class Scenario:
                 else "kiss" if self.n_nodes == 1 else "cluster")
         asc = "-autoscaled" if self.autoscale is not None else ""
         fail = "-failures" if self.failures is not None else ""
+        ch = "-chains" if self.chains is not None else ""
         return (f"{kind}-{self.n_nodes}n-{self.routing}"
-                f"-{self.replacement}{asc}{fail}")
+                f"-{self.replacement}{asc}{fail}{ch}")
 
     def to_cluster_config(self) -> ClusterConfig:
         """The engine-level config both engines consume."""

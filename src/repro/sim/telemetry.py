@@ -106,6 +106,10 @@ class TelemetrySeries:
     #: i64[W] autoscaler-active node count at window end (N when node
     #: scaling is off)
     nodes_active: np.ndarray
+    #: i64[W] chain deadline misses judged during the window (a chain is
+    #: judged exactly once, at its final stage) — sums to the run's
+    #: missed-chain count; all zeros when chains are off
+    chain_miss: np.ndarray
     #: f32[W] event time of the first / last event in each window
     t_start: np.ndarray
     t_end: np.ndarray
@@ -164,7 +168,8 @@ class TelemetrySeries:
                  "drops": int(self.drops[w]),
                  "invalidated": int(self.invalidated[w]),
                  "nodes_up": int(self.nodes_up[w]),
-                 "nodes_active": int(self.nodes_active[w])}
+                 "nodes_active": int(self.nodes_active[w]),
+                 "chain_miss": int(self.chain_miss[w])}
                 for w in range(len(self))]
 
 
@@ -185,6 +190,8 @@ def series_from_arrays(arrays: dict, trace, window_events: int
         invalidated=np.asarray(arrays["invalidated"], np.int64),
         nodes_up=np.asarray(arrays["nodes_up"], np.int64),
         nodes_active=np.asarray(arrays["nodes_active"], np.int64),
+        chain_miss=np.asarray(
+            arrays.get("chain_miss", np.zeros(w, np.int64)), np.int64),
         t_start=t[starts] if w else np.zeros(0, np.float32),
         t_end=t[ends] if w else np.zeros(0, np.float32),
         event_start=starts)
@@ -255,6 +262,12 @@ def trace_events(result, path: str | None = None) -> dict:
             events.append(_counter("occupancy", ts, {
                 f"node{j}": int(tel.occupancy[w, j])
                 for j in range(tel.n_nodes)}))
+            # chains off ⇒ no track (the counter set of chainless runs
+            # is pinned by tests/test_telemetry.py)
+            if scn.chains is not None:
+                events.append(_counter(
+                    "chain_misses", ts,
+                    {"missed": int(tel.chain_miss[w])}))
 
     if scn.failures is not None:
         for t_down, t_up, node in scn.failures.windows:
@@ -310,6 +323,11 @@ def trace_fingerprint(trace) -> str:
     identically on every engine."""
     h = hashlib.blake2s()
     for name, arr in zip(trace._fields, trace):
+        if arr is None:
+            # optional fields (chain metadata on chainless traces):
+            # skipping them keeps chainless fingerprints identical to
+            # the pre-chain era, so pinned baselines stay valid
+            continue
         a = np.ascontiguousarray(arr)
         h.update(name.encode())
         h.update(str(a.dtype).encode())
@@ -339,6 +357,7 @@ def run_manifest(result) -> dict:
     info = dict(result.run_info or {})
     asc = scn.autoscale
     tel = scn.telemetry
+    ch = scn.chains
     return {
         "schema": RUN_MANIFEST_SCHEMA,
         "scenario": {
@@ -357,6 +376,7 @@ def run_manifest(result) -> dict:
             "failures": ([list(w) for w in scn.failures.windows]
                          if scn.failures else None),
             "telemetry_window_events": tel.window_events if tel else None,
+            "chains": dataclasses.asdict(ch) if ch else None,
         },
         "trace": {"fingerprint": info.pop("trace_fingerprint", None),
                   "n_events": len(result)},

@@ -35,8 +35,16 @@ class ChainConfig:
     seed: int = 0
 
 
-def chained_trace(cfg: ChainConfig) -> tuple[Trace, np.ndarray]:
-    """Returns (trace, chain_id per event)."""
+def chained_trace(cfg: ChainConfig) -> Trace:
+    """Chained trace with first-class chain metadata.
+
+    ``chain_id`` is the per-*instance* id (one per head arrival, in head
+    order — NOT the template id: two arrivals of the same template are
+    distinct chains with their own deadlines), ``stage`` the 0-based
+    position within the chain and ``chain_len`` the instance's total
+    stage count, so ``Trace.has_chains`` is True and the engines can
+    account end-to-end latency per chain instance.
+    """
     rng = np.random.default_rng(cfg.seed)
     # chain templates: member function ids, sizes, classes
     sizes, clss = [], []
@@ -58,8 +66,9 @@ def chained_trace(cfg: ChainConfig) -> tuple[Trace, np.ndarray]:
     heads = np.sort(rng.uniform(0, cfg.duration_s, n_arr))
     chain_ids = rng.integers(0, cfg.n_chains, n_arr)
 
-    ts, fids, szs, cls_, warms, colds, cids = [], [], [], [], [], [], []
-    for t0, c in zip(heads, chain_ids):
+    ts, fids, szs, cls_, warms, colds = [], [], [], [], [], []
+    cids, stages = [], []
+    for inst, (t0, c) in enumerate(zip(heads, chain_ids)):
         t = t0
         for m in range(cfg.chain_len):
             fid = int(c * cfg.chain_len + m)
@@ -70,17 +79,18 @@ def chained_trace(cfg: ChainConfig) -> tuple[Trace, np.ndarray]:
                               1 / 64)
             ts.append(_quant(t)); fids.append(fid)
             szs.append(sizes[fid]); cls_.append(clss[fid])
-            warms.append(warm); colds.append(cold); cids.append(
-                len(cids) and 0 or 0)
-            cids[-1] = int(c)
+            warms.append(warm); colds.append(cold)
+            cids.append(inst); stages.append(m)
             t += warm  # next stage fires after this one's warm runtime
     order = np.argsort(np.asarray(ts), kind="stable")
-    tr = Trace(
+    return Trace(
         t=np.asarray(ts, np.float32)[order],
         func_id=np.asarray(fids, np.int32)[order],
         size_mb=np.asarray(szs, np.float32)[order],
         cls=np.asarray(cls_, np.int32)[order],
         warm_dur=np.asarray(warms, np.float32)[order],
         cold_dur=np.asarray(colds, np.float32)[order],
+        chain_id=np.asarray(cids, np.int32)[order],
+        stage=np.asarray(stages, np.int32)[order],
+        chain_len=np.full(len(ts), cfg.chain_len, np.int32),
     )
-    return tr, np.asarray(cids, np.int32)[order]

@@ -79,7 +79,7 @@ def test_partial_epoch_padding_does_not_bias_final_frac():
     toward the small pool."""
     e = 128
     tr = quantized_trace(np.random.default_rng(0), 4 * e + 1)
-    prefix = Trace(*(a[:4 * e] for a in tr))
+    prefix = tr.head(4 * e)
     f_full = simulate(kiss1(e=e), tr).fracs
     f_prefix = simulate(kiss1(e=e), prefix).fracs
     assert f_full.shape == (5, 1) and f_prefix.shape == (4, 1)

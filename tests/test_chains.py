@@ -1,0 +1,245 @@
+"""Chain-aware SLO subsystem tests (PR 7).
+
+Pins the design contract of ``repro.sim.chains``:
+
+* per-chain accounting is **bit-identical** JAX vs the numpy oracle for
+  every registered routing, both scan-step modes, and static / failure /
+  autoscaled scenarios;
+* chunked scans reproduce the monolithic chain accounting for chunk
+  sizes that do and don't divide the trace;
+* vmapped sweeps match solo runs lane for lane, including mixed
+  chains-on/off grids (deadlines ride as data);
+* deadline semantics: judged exactly once at the final stage, a dropped
+  stage always misses, window-cut chains are never judged;
+* chain metadata is first-class on ``Trace`` and survives every slicer.
+"""
+import numpy as np
+import pytest
+
+from repro.core.types import Trace
+from repro.sim import (Chains, Result, Scenario, routing_policies,
+                       simulate, sweep)
+from repro.workloads.chains import ChainConfig, chained_trace
+
+CLUSTER = (2000.0, 1000.0, 3000.0)
+
+
+@pytest.fixture(scope="module")
+def ctr():
+    return chained_trace(ChainConfig(duration_s=200.0, seed=3))
+
+
+def _scenario(kind: str, routing: str) -> Scenario:
+    kw = dict(routing=routing, chains=Chains(slack=2.0), telemetry=128)
+    if kind == "failures":
+        kw["failures"] = ((40.0, 120.0, 1),)
+    elif kind == "autoscale":
+        kw["autoscale"] = {"epoch_events": 128}
+    return Scenario.cluster(CLUSTER, **kw)
+
+
+def _assert_chains_equal(a: Result, b: Result):
+    ca, cb = a.chain_metrics(), b.chain_metrics()
+    for f in ("latency", "dropped", "done", "missed", "deadline"):
+        np.testing.assert_array_equal(getattr(ca, f), getattr(cb, f),
+                                      err_msg=f)
+    np.testing.assert_array_equal(a.telemetry.chain_miss,
+                                  b.telemetry.chain_miss)
+
+
+# --------------------------------------------------------------------------
+# JAX == oracle, for every routing x mode x scenario kind
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["static", "failures", "autoscale"])
+@pytest.mark.parametrize("routing", routing_policies())
+def test_engines_agree(ctr, routing, kind):
+    scn = _scenario(kind, routing)
+    ref = simulate(scn, ctr, engine="ref")
+    for mode in ("gather", "vmap"):
+        jx = simulate(scn, ctr, mode=mode)
+        _assert_chains_equal(jx, ref)
+        np.testing.assert_array_equal(jx.outcome, ref.outcome)
+
+
+# --------------------------------------------------------------------------
+# chunked == monolithic
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", [97, 128])
+def test_chunked_equals_monolithic(ctr, chunk):
+    for kind in ("static", "failures"):
+        scn = _scenario(kind, "slack_aware")
+        _assert_chains_equal(simulate(scn, ctr),
+                             simulate(scn, ctr, chunk_events=chunk))
+
+
+# --------------------------------------------------------------------------
+# sweep == solo (mixed chains-on/off lanes; deadlines are per-lane data)
+# --------------------------------------------------------------------------
+
+def test_sweep_matches_solo(ctr):
+    scns = [Scenario.cluster(CLUSTER, routing="sticky",
+                             chains=Chains(deadline_s=6.0)),
+            Scenario.cluster(CLUSTER, routing="sticky"),
+            Scenario.cluster(CLUSTER, routing="slack_aware",
+                             chains=Chains(slack=3.0)),
+            Scenario.cluster(CLUSTER, routing="slack_aware", chains=Chains(),
+                             failures=((40.0, 120.0, 1),)),
+            Scenario.cluster(CLUSTER, routing="least_loaded",
+                             chains=Chains(slack=1.5),
+                             autoscale={"epoch_events": 128})]
+    for swept, solo in zip(sweep(ctr, scns),
+                           [simulate(s, ctr) for s in scns]):
+        assert swept.summary() == solo.summary()
+        if solo.chains is None:
+            assert swept.chains is None
+        else:
+            for f in ("latency", "dropped", "done", "missed"):
+                np.testing.assert_array_equal(getattr(swept.chains, f),
+                                              getattr(solo.chains, f),
+                                              err_msg=f)
+
+
+def test_chunked_sweep_matches_solo(ctr):
+    scns = [Scenario.cluster(CLUSTER, routing="slack_aware",
+                             chains=Chains(slack=s)) for s in (1.5, 3.0)]
+    for swept, solo in zip(sweep(ctr, scns, chunk_events=97),
+                           [simulate(s, ctr) for s in scns]):
+        np.testing.assert_array_equal(swept.chains.latency,
+                                      solo.chains.latency)
+        np.testing.assert_array_equal(swept.chains.missed,
+                                      solo.chains.missed)
+
+
+# --------------------------------------------------------------------------
+# deadline semantics on a hand-built trace
+# --------------------------------------------------------------------------
+
+def _tiny_trace():
+    """Three 2-stage chains on one 500 MB node:
+
+    * chain 0 — both stages fit: completes warm/cold, judged;
+    * chain 1 — stage 1 can never fit (800 MB): drops, so it must miss
+      even with no deadline;
+    * chain 2 — its final stage is cut off by ``head``: never judged.
+    """
+    f32, i32 = np.float32, np.int32
+    return Trace(
+        t=np.asarray([0.0, 1.0, 2.0, 3.0, 4.0, 5.0], f32),
+        func_id=np.asarray([0, 1, 2, 3, 4, 5], i32),
+        size_mb=np.asarray([100.0, 100.0, 100.0, 800.0, 100.0, 100.0], f32),
+        cls=np.zeros(6, i32),
+        warm_dur=np.full(6, 0.5, f32),
+        cold_dur=np.full(6, 2.0, f32),
+        chain_id=np.asarray([0, 1, 0, 1, 2, 2], i32),
+        stage=np.asarray([0, 0, 1, 1, 0, 1], i32),
+        chain_len=np.full(6, 2, i32),
+    )
+
+
+@pytest.mark.parametrize("engine", ["jax", "ref"])
+def test_deadline_semantics(engine):
+    tr = _tiny_trace()
+    scn = Scenario.kiss(500.0, chains=Chains())       # +inf deadlines
+    cm = simulate(scn, tr, engine=engine).chain_metrics()
+    assert cm.n_chains == 3
+    # chain 0: two cold starts (first touch of each function), no drop
+    np.testing.assert_allclose(cm.latency[0], 4.0)
+    assert not cm.dropped[0] and cm.done[0] and not cm.missed[0]
+    # chain 1: stage 1 can never fit -> dropped -> missed despite +inf
+    assert cm.dropped[1] and cm.done[1] and cm.missed[1]
+    # all three fit in the trace, so all judged
+    assert cm.done.all()
+
+    # a tight absolute deadline flips the completing chains to missed
+    # (two first-touch cold starts: 4.0 > 3.0)
+    tight = simulate(Scenario.kiss(500.0, chains=Chains(deadline_s=3.0)),
+                     tr, engine=engine).chain_metrics()
+    assert tight.missed.all()
+    assert tight.deadline_miss_pct == 100.0
+
+    # cutting chain 2's final stage off leaves it un-judged
+    cut = simulate(scn, tr.head(5), engine=engine).chain_metrics()
+    assert not cut.done[2] and not cut.missed[2]
+    assert cut.latency[2] > 0.0          # observed stages still priced
+    assert cut.n_done == 2
+
+
+def test_slack_deadlines_scale_with_warm_path():
+    tr = _tiny_trace()
+    cm = simulate(Scenario.kiss(500.0, chains=Chains(slack=3.0)),
+                  tr).chain_metrics()
+    # per-chain deadline = slack * summed warm durations = 3 * 1.0
+    np.testing.assert_allclose(cm.deadline, 3.0)
+
+
+def test_summary_and_telemetry_totals(ctr):
+    scn = _scenario("static", "sticky")
+    res = simulate(scn, ctr)
+    cm = res.chain_metrics()
+    s = res.summary()
+    assert s["n_chains"] == cm.n_chains
+    assert s["deadline_miss_pct"] == cm.deadline_miss_pct
+    assert s["chain_p95_s"] == cm.chain_p95_s
+    assert int(res.telemetry.chain_miss.sum()) == int(cm.missed.sum())
+    # chains off -> inert zeros, same keys
+    off = simulate(Scenario.cluster(CLUSTER), ctr).summary()
+    assert off["n_chains"] == 0 and off["deadline_miss_pct"] == 0.0
+
+
+def test_chains_require_chained_trace():
+    from repro.workloads import edge_trace
+    tr = edge_trace(seed=0, duration_s=60)
+    with pytest.raises(ValueError, match="chained trace"):
+        simulate(Scenario.kiss(1024.0, chains=Chains()), tr)
+
+
+def test_chains_knob_validation():
+    with pytest.raises(ValueError, match="not both"):
+        Chains(deadline_s=1.0, slack=2.0)
+    with pytest.raises(ValueError, match="positive"):
+        Chains(deadline_s=-1.0)
+    with pytest.raises(ValueError, match="positive"):
+        Chains(slack=0.0)
+    # dict sugar on the Scenario knob
+    scn = Scenario.kiss(1024.0, chains={"slack": 2.0})
+    assert scn.chains == Chains(slack=2.0)
+
+
+# --------------------------------------------------------------------------
+# Trace chain metadata: first-class, preserved by every slicer
+# --------------------------------------------------------------------------
+
+def test_trace_slicers_preserve_chain_fields(ctr):
+    assert ctr.has_chains
+    h = ctr.head(100)
+    assert h.has_chains
+    np.testing.assert_array_equal(h.chain_id, ctr.chain_id[:100])
+    np.testing.assert_array_equal(h.stage, ctr.stage[:100])
+    np.testing.assert_array_equal(h.chain_len, ctr.chain_len[:100])
+
+    w = ctr.window(50.0, 150.0)
+    m = (np.asarray(ctr.t) >= 50.0) & (np.asarray(ctr.t) < 150.0)
+    np.testing.assert_array_equal(w.chain_id, ctr.chain_id[m])
+
+    s = ctr.shifted()
+    np.testing.assert_array_equal(s.chain_id, ctr.chain_id)
+    assert float(s.t[0]) == 0.0
+
+    r = ctr.sorted_by_time().select(np.arange(len(ctr)) % 2 == 0)
+    assert r.has_chains and len(r.chain_id) == len(r)
+
+    swapped = ctr.replace(chain_id=ctr.chain_id[::-1].copy())
+    assert swapped.has_chains
+    np.testing.assert_array_equal(swapped.chain_id, ctr.chain_id[::-1])
+
+
+def test_chain_fields_all_or_none():
+    tr = _tiny_trace()
+    broken = tr.replace(chain_len=None)
+    with pytest.raises(ValueError, match="all-or-none"):
+        broken.has_chains
+    plain = tr.replace(chain_id=None, stage=None, chain_len=None)
+    assert not plain.has_chains
+    assert not plain.head(3).has_chains      # slicers pass None through

@@ -44,17 +44,24 @@ def test_offload_priced_not_free(trace):
 
 
 def test_chained_trace_structure():
-    ctr, cids = chained_trace(ChainConfig(duration_s=600, seed=1))
-    assert len(ctr) == len(cids)
+    ctr = chained_trace(ChainConfig(duration_s=600, seed=1))
+    assert ctr.has_chains
+    assert len(ctr.chain_id) == len(ctr)
     assert (np.diff(np.asarray(ctr.t)) >= 0).all()
     # every chain instance contributes chain_len events
     assert len(ctr) % 4 == 0
     # members of one chain template share function ids across arrivals
     assert len(np.unique(ctr.func_id)) <= 40 * 4
+    # chain ids are per-instance: each id appears exactly chain_len times,
+    # with stages 0..chain_len-1 each exactly once
+    ids, counts = np.unique(ctr.chain_id, return_counts=True)
+    assert (counts == 4).all()
+    for c in ids[:5]:
+        assert sorted(ctr.stage[ctr.chain_id == c]) == [0, 1, 2, 3]
 
 
 def test_kiss_helps_chained_workloads():
-    ctr, _ = chained_trace(ChainConfig(duration_s=1800, seed=0))
+    ctr = chained_trace(ChainConfig(duration_s=1800, seed=0))
     from repro.core import (KissConfig, Policy, simulate_baseline_jax,
                             simulate_kiss_jax)
     b = simulate_baseline_jax(3 * 1024.0, ctr, Policy.LRU, 512)
