@@ -1,0 +1,99 @@
+"""Pool-step backend microbench: the fused Pallas kernel vs the lax
+argsort composite, plus replay events/s in all three step modes.
+
+Two levels, matching the step-backend seam:
+
+* ``pool_step_backend_{lax,fused}`` — the evict-and-place decision alone
+  on a stacked ``[pools, slots]`` batch (the exact arrays the engine
+  hands a backend), jitted and timed per call.  On CPU the fused row
+  measures the *interpreted* Pallas kernel — the apples-to-apples
+  compiled comparison needs a TPU, but the row keeps the trajectory
+  honest on the reference machine either way.
+* ``pool_step_mode_{gather,vmap,fused}`` — end-to-end replay events/s of
+  ``simulate`` on a cluster trace, one row per step mode.  This is the
+  number ROADMAP's "raw speed" item moves: the gather/vmap rows are the
+  pre-backend engine, the fused row is the kernel path.
+
+Returns ``(csv_lines, payload)`` so ``benchmarks/baselines/
+BENCH_pool_step.json`` pins the fused-vs-composite trajectory (wall +
+events/s + compile/execute split via ``benchmarks.run``).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pool_jax import get_step_backend
+from repro.sim import Scenario, simulate
+
+from .common import csv_line, paper_trace, timed
+
+P, S = 32, 128          # stacked pools x slots for the backend microbench
+REPS = 30
+NODE_MB = (1024.0, 1024.0, 2048.0, 4096.0)
+MAX_SLOTS = 64
+
+
+def _backend_args(rng):
+    """A realistic mid-pressure batch: ~80% occupied, ~70% idle, heavy
+    priority ties so the (priority, seq) tie-break actually runs."""
+    pri = rng.integers(0, 8, (P, S)).astype(np.float32)
+    seq = rng.permutation(np.arange(1.0, P * S + 1,
+                                    dtype=np.float32)).reshape(P, S)
+    size = rng.integers(16, 256, (P, S)).astype(np.float32)
+    valid = rng.random((P, S)) < 0.8
+    idle = valid & (rng.random((P, S)) < 0.7)
+    pri = np.where(idle, pri, np.inf).astype(np.float32)
+    deficit = rng.integers(0, 2048, (P,)).astype(np.float32)
+    return tuple(jnp.asarray(x)
+                 for x in (pri, seq, size, idle, valid, deficit))
+
+
+def _time_backend(name: str, args) -> tuple[float, object]:
+    fn = jax.jit(get_step_backend(name))
+    out = jax.block_until_ready(fn(*args))        # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(REPS):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / REPS, out
+
+
+def run():
+    out, payload = [], {}
+    rng = np.random.default_rng(0)
+    args = _backend_args(rng)
+    per = {}
+    for name in ("lax", "fused"):
+        dt, res = _time_backend(name, args)
+        per[name] = dt
+        out.append(csv_line(
+            f"pool_step_backend_{name}", dt * 1e6,
+            f"[{P}x{S}] evict+place, {int(np.asarray(res[0]).sum())} "
+            f"evictions/batch, {REPS} reps"))
+    ratio = per["lax"] / per["fused"]
+    out.append(csv_line(
+        "pool_step_fused_vs_lax", 0.0,
+        f"fused is {ratio:.2f}x the composite at [{P}x{S}] "
+        f"({jax.default_backend()} backend)"))
+    payload["backend_us"] = {k: v * 1e6 for k, v in per.items()}
+    payload["fused_vs_lax_ratio"] = ratio
+
+    # ---- end-to-end: replay events/s per step mode --------------------
+    tr = paper_trace(duration_s=900.0)
+    scn = Scenario.cluster(NODE_MB, routing="size_aware",
+                           max_slots=MAX_SLOTS)
+    eps = {}
+    for mode in ("gather", "vmap", "fused"):
+        simulate(scn, tr, mode=mode)              # compile + warm
+        res, dt = timed(simulate, scn, tr, mode=mode)
+        eps[mode] = len(tr) / dt
+        out.append(csv_line(
+            f"pool_step_mode_{mode}", dt * 1e6 / len(tr),
+            f"{eps[mode]:,.0f} events/s ({len(tr)} events, "
+            f"{len(NODE_MB)} nodes, {MAX_SLOTS} slots)"))
+        payload.setdefault("summary", res.summary())
+    payload["events_per_sec"] = eps
+    return out, payload

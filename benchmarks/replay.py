@@ -17,7 +17,10 @@ to end) through the chunked-scan execution mode:
 * ``replay_prefix_exact`` — sanity pin: the chunked run's first 100k
   outcomes equal the monolithic scan of the 100k-event prefix (the
   acceptance contract; the full bit-equivalence matrix lives in
-  tests/test_replay.py).
+  tests/test_replay.py);
+* ``replay_mode_{gather,vmap,fused}`` — events/s of each scan-step
+  formulation on a 50k-event chunked prefix, summary-asserted identical
+  (the fused row tracks the Pallas pool-step kernel).
 
 Returns ``(csv_lines, payload)`` with stable-keyed summaries so the
 baseline in ``benchmarks/baselines/BENCH_replay.json`` pins the replay
@@ -35,6 +38,7 @@ from .common import csv_line, timed
 
 CHUNK = 65536
 PREFIX = 100_000
+MODE_PREFIX = 50_000     # step-mode comparison prefix (vmap is O(N*slots))
 NODE_MB = (2048.0, 2048.0, 4096.0, 8192.0)
 
 # ~1M invocations: 600 functions over a simulated day at ~700/min
@@ -92,4 +96,25 @@ def run():
     if not exact:
         raise AssertionError(
             "chunked replay diverged from the monolithic scan")
+
+    # step-mode comparison on a chunked prefix: the events/s each scan
+    # formulation sustains on the replay workload (the fused row is the
+    # number the Pallas kernel exists to move; identical summaries are
+    # asserted so a silently-diverging mode can't pin a baseline)
+    mtr = tr.head(MODE_PREFIX)
+    eps_modes, sums = {}, {}
+    for mode in ("gather", "vmap", "fused"):
+        simulate(kiss, mtr.head(CHUNK), mode=mode,
+                 chunk_events=CHUNK)                 # compile + warm
+        r_m, dt_m = timed(simulate, kiss, mtr, mode=mode,
+                          chunk_events=CHUNK)
+        eps_modes[mode] = len(mtr) / dt_m
+        sums[mode] = r_m.summary()
+        out.append(csv_line(
+            f"replay_mode_{mode}", dt_m * 1e6 / len(mtr),
+            f"{eps_modes[mode]:,.0f} events/s ({len(mtr)} events, "
+            f"chunk={CHUNK})"))
+    if not (sums["gather"] == sums["vmap"] == sums["fused"]):
+        raise AssertionError(f"step modes diverged on replay: {sums}")
+    payload["replay_mode_events_per_sec"] = eps_modes
     return out, payload

@@ -13,11 +13,19 @@ dry-run reports PER-DEVICE HLO (post-SPMD), so chips divides only the
 hardware constants, not the totals again.
 
 MODEL_FLOPS = 6*N*T (train) or 2*N*T (inference), N = active params.
+
+Additionally prices the pool-step evict-and-place decision per backend
+(``roofline_pool_step_{fused,lax}``) from an analytic op model — these
+rows need no dry-run artifact, so the fused-kernel-vs-composite picture
+is always in the suite (the *measured* twin is ``benchmarks/
+pool_step.py``).
 """
 from __future__ import annotations
 
 import json
 import os
+
+import numpy as np
 
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 
@@ -69,13 +77,54 @@ def load(path: str = RESULTS) -> list[dict]:
         return json.load(f)
 
 
+# pool-step batch shape the backends are priced at (matches the measured
+# microbench in benchmarks/pool_step.py)
+POOL_P, POOL_S = 32, 128
+
+
+def pool_step_pricing(p: int = POOL_P, s: int = POOL_S) -> list[str]:
+    """Analytic roofline terms for one evict-and-place batch [p, s].
+
+    * fused Pallas kernel — the [s, s] rank-by-counting matrix lives in
+      VMEM, so HBM sees only the six input rows and the outputs; compute
+      is ~3 ops per matrix cell (two lex compares + masked add) plus the
+      row reductions.
+    * lax composite — ~2 bitonic argsorts (log2(s)^2 compare-exchange
+      stages) plus cumsum/gather/scatter; each of the ~10 constituent
+      HLO ops materializes a [p, s] f32 round trip through HBM, which is
+      what the fusion deletes.
+
+    Estimates, not measurements (f32 through the bf16 peak constant) —
+    the point is the *shape* of the comparison: both are memory-bound at
+    pool-sized batches, and fusion wins by deleting ~2/3 of the HBM
+    round trips, not by trading flops.
+    """
+    rows = []
+    n_cells = p * s * s
+    for name, flops, byts in (
+            ("fused", 3 * n_cells + 4 * p * s, (6 * p * s + p * s + 4 * p)
+             * 4),
+            ("lax", 2 * p * s * max(np.log2(s), 1.0) ** 2 + 8 * p * s,
+             2 * 10 * p * s * 4)):
+        compute = flops / PEAK_FLOPS_BF16
+        memory = byts / HBM_BW
+        dom = "compute" if compute >= memory else "memory"
+        rows.append(csv_line(
+            f"roofline_pool_step_{name}",
+            max(compute, memory) * 1e6,
+            f"[{p}x{s}] compute={compute:.2e}s memory={memory:.2e}s "
+            f"dom={dom}"))
+    return rows
+
+
 def run() -> list[str]:
     recs = [r for r in load() if r.get("mesh") == "16x16"
             and "error" not in r]
-    out = []
+    out = pool_step_pricing()
     if not recs:
-        return [csv_line("roofline_missing", 0.0,
-                         "run launch/dryrun.py --all --roofline first")]
+        return out + [csv_line("roofline_missing", 0.0,
+                               "run launch/dryrun.py --all --roofline "
+                               "first")]
     for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
         t = terms(r)
         if t is None:

@@ -77,8 +77,8 @@ def main() -> None:
     from repro.sim.telemetry import BENCH_MANIFEST_SCHEMA, versions
 
     from . import (chains, cold_start, continuum_bench, drops, failures,
-                   fairness, policy_independence, replay, roofline,
-                   serving_bench, stress, sweep_speed, telemetry,
+                   fairness, policy_independence, pool_step, replay,
+                   roofline, serving_bench, stress, sweep_speed, telemetry,
                    workload_analysis)
 
     _install_compile_listener()
@@ -95,6 +95,7 @@ def main() -> None:
         ("chains_slo(beyond-paper)", chains.run),
         ("failures(beyond-paper)", failures.run),
         ("telemetry(beyond-paper)", telemetry.run),
+        ("pool_step(beyond-paper)", pool_step.run),
         ("replay(azure-2019)", replay.run),
         ("roofline(dry-run)", roofline.run),
     ]

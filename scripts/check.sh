@@ -43,6 +43,14 @@ assert fail.node_up.shape == (n, 2) and not fail.node_up.all()
 assert (fail.node[~fail.node_up[:, 0]] == 1).all()   # re-steered
 assert fail.n_invalidated > 0                        # recovery re-warms
 assert fail.summary()["downtime_pct"] > 0.0
+# fused-mode smoke: the Pallas step backend must match vmap on the
+# failure scenario, summary-identically (full matrix: test_pool_kernel)
+fused = simulate(Scenario.cluster((256.0, 256.0), max_slots=16,
+                                  routing="least_loaded",
+                                  failures=((20.0, 50.0, 0),)), tr,
+                 mode="fused")
+assert fused.summary() == fail.summary()
+assert (fused.outcome == fail.outcome).all()
 rp = trace_from_tables(synthesize_azure_schema(
     SchemaConfig(n_funcs=24, n_minutes=10, rpm_total=60, seed=0)))
 assert len(rp) and len(rp.head(50)) == 50
@@ -96,4 +104,5 @@ exec python -m pytest -q -m "not slow" \
     tests/test_replay.py \
     tests/test_telemetry.py \
     tests/test_chains.py \
+    tests/test_pool_kernel.py \
     "$@"

@@ -43,15 +43,15 @@ from ..core.continuum import (Autoscale, ClusterConfig, Failures,
                               RoutingPolicy, cloud_cold_draws,
                               cluster_outcomes_ref, continuum_latencies,
                               route_hashes)
-from .engine import (ClusterEvent, check_step_mode, cluster_events,
-                     init_cluster, simulate_cluster_jax,
+from .engine import (STEP_MODES, ClusterEvent, check_step_mode,
+                     cluster_events, init_cluster, simulate_cluster_jax,
                      simulate_cluster_ref, sweep_cluster)
 from .metrics import ClusterResult, build_result
 from .presets import het16_cluster
 
 __all__ = [
     "Autoscale", "ClusterConfig", "Failures", "RoutingPolicy",
-    "ClusterEvent", "ClusterResult",
+    "ClusterEvent", "ClusterResult", "STEP_MODES",
     "build_result", "check_step_mode", "cloud_cold_draws",
     "cluster_events", "cluster_outcomes_ref", "continuum_latencies",
     "het16_cluster", "init_cluster", "route_hashes",

@@ -18,8 +18,9 @@ Cloud pricing (``cloud_rtt_s``, ``cloud_cold_prob``) rides along as f32
 data so cost-model-style policies can read it inside the scan and sweeps
 can vmap over it.
 
-Two step modes, numerically identical (property-tested against each other
-and against the numpy oracle in ``core/continuum.py``):
+Three step modes (``STEP_MODES``), numerically identical
+(property-tested against each other and against the numpy oracle in
+``core/continuum.py``):
 
 * ``"gather"`` (default) — dynamic-slice the selected pool out of the
   stack, step it, scatter it back: O(slots) work per event regardless of
@@ -28,6 +29,13 @@ and against the numpy oracle in ``core/continuum.py``):
   event and a select mask keeps only the routed pool's new state: the
   fully batched formulation, O(N * slots) per event, useful as a
   cross-check and on accelerators where the batched sort amortizes.
+* ``"fused"`` — the same all-pools formulation, but the miss-path
+  evict-and-place decision runs through the step-backend seam
+  (``core.pool_jax.pool_step_batch`` + ``register_step_backend``) as ONE
+  fused Pallas kernel (``repro.kernels.pool_step``): rank-by-counting
+  instead of argsort, prefix-sum eviction, and slot placement in a
+  single pass over the stacked ``[pools, slots]`` axes.  Compiled on
+  TPU, interpreted (bit-identically) on CPU.
 
 Autoscaled scenarios (``Scenario(..., autoscale=Autoscale(...))``) run the
 same per-event step inside an outer scan over fixed-length epochs
@@ -61,18 +69,25 @@ from ..core.compat import deprecated
 from ..core.continuum import (Autoscale, ChainPlan, ClusterConfig, Failures,
                               cloud_cold_draws, cluster_outcomes_ref,
                               route_hashes)
-from ..core.pool_jax import (Event, PoolState, init_pool, pool_resize,
-                             pool_step)
+from ..core.pool_jax import (Event, PoolState, get_step_backend, init_pool,
+                             pool_resize, pool_step, pool_step_batch)
 from ..core.registry import ROUTING, RouteCtx
 from ..core.types import DROP, HIT, MISS, PoolConfig, Trace
 from .metrics import ClusterResult, build_result
+
+#: The scan-step formulations, in documentation order.  The single source
+#: every mode list derives from: the validator below, its error message,
+#: and the ``repro.sim`` docstrings (``api.py`` splices this tuple in) —
+#: adding a mode here is the whole registration.
+STEP_MODES = ("gather", "vmap", "fused")
 
 
 def check_step_mode(mode: str) -> None:
     """Validate a scan step mode — the one place the rule lives (used by
     the cluster entrypoints and the ``repro.sim`` front door alike)."""
-    if mode not in ("gather", "vmap"):
-        raise ValueError(f"mode must be 'gather' or 'vmap', got {mode!r}")
+    if mode not in STEP_MODES:
+        raise ValueError(
+            f"mode must be one of {STEP_MODES}, got {mode!r}")
 
 
 def check_chunk_events(chunk_events) -> int | None:
@@ -431,6 +446,10 @@ def _make_step(routing: jax.Array, unified: jax.Array, cloud: jax.Array,
     tree = jax.tree_util.tree_map
     all_up = jnp.ones((n,), bool)
     no_slack, no_stage = jnp.float32(jnp.inf), jnp.int32(-1)
+    # any mode beyond the two built-in formulations is a step backend
+    # (resolved once, at step-build time — unknown names fail fast here)
+    backend = (get_step_backend(mode)
+               if mode not in ("gather", "vmap") else None)
 
     def step(pools, ev, up_n=None, cslack=None, cstage=None):
         free2 = pools.free.reshape(n, 2)
@@ -451,9 +470,16 @@ def _make_step(routing: jax.Array, unified: jax.Array, cloud: jax.Array,
                 new_one = tree(lambda nw, old: jnp.where(ok, nw, old),
                                new_one, one)
             pools = tree(lambda a, b: a.at[p].set(b), pools, new_one)
-        else:  # "vmap": step every pool, keep only the routed one
-            stepped, outs = jax.vmap(pool_step, in_axes=(0, None))(
-                pools, core_ev)
+        else:
+            # step every pool, keep only the routed one: "vmap" batches
+            # the per-pool step, any other mode is a registered step
+            # backend driving the batched pool_step_batch (the "fused"
+            # Pallas kernel being the first)
+            if mode == "vmap":
+                stepped, outs = jax.vmap(pool_step, in_axes=(0, None))(
+                    pools, core_ev)
+            else:
+                stepped, outs = pool_step_batch(pools, core_ev, backend)
             sel = (jnp.arange(2 * n) == p) & ok
             pools = tree(
                 lambda a, b: jnp.where(

@@ -144,11 +144,13 @@ def pool_step(p: PoolState, ev: Event) -> tuple[PoolState, jax.Array]:
 
     ins = jnp.argmax(~valid_after)                  # first empty slot
     is_gd = p.policy == int(Policy.GREEDY_DUAL)
+    # with no eviction the inner max is -inf and maximum() degrades to
+    # p.clock, so no extra any(evict) guard is needed (regression-pinned
+    # by test_pool_kernel.test_gd_clock_no_eviction)
     new_clock = jnp.where(
         is_gd,
         jnp.maximum(p.clock, jnp.max(jnp.where(evict, p.gd_pri, -_INF))),
         p.clock)
-    new_clock = jnp.where(jnp.any(evict) & is_gd, new_clock, p.clock)
     miss_state = p._replace(
         func_id=p.func_id.at[ins].set(ev.func_id),
         size=p.size.at[ins].set(ev.size),
@@ -170,6 +172,161 @@ def pool_step(p: PoolState, ev: Event) -> tuple[PoolState, jax.Array]:
         return jax.tree_util.tree_map(
             lambda a, b, c: jnp.where(
                 outcome == HIT, a, jnp.where(outcome == MISS, b, c)),
+            h, m, d)
+
+    new_state = pick(hit_state, miss_state, p)
+    return new_state, outcome
+
+
+# ---------------------------------------------------------------------------
+# Step backends: pluggable implementations of the miss-path
+# evict-and-place decision over the stacked [pools, slots] axes.
+#
+# The contract (all arrays batched over a leading pool axis P):
+#
+#   backend(pri f32[P,S], seq f32[P,S], size f32[P,S], idle bool[P,S],
+#           valid bool[P,S], deficit f32[P])
+#       -> (evict bool[P,S], freed f32[P], ins i32[P],
+#           avail f32[P], empty_exists bool[P])
+#
+# where ``pri`` is already masked to +inf on non-idle slots, ``deficit``
+# is the bytes that must be freed (may be <= 0), ``evict`` is the minimal
+# (priority, seq)-ordered idle prefix covering the deficit (identical
+# order to ``_evict_prefix``), ``freed``/``avail`` are evicted / total
+# evictable bytes, and ``ins``/``empty_exists`` locate the first slot
+# that is empty after eviction.  Every backend must be *bitwise*
+# equivalent to ``_evict_prefix`` — the numpy oracle stays the
+# semantics-of-record and the equivalence tests compare exactly.
+_STEP_BACKENDS: dict = {}
+
+
+def register_step_backend(name: str):
+    """Register a miss-path evict-and-place backend (see the contract
+    above).  Mirrors the policy registries: registering drops JIT caches
+    so already-compiled engines pick the new backend table up."""
+    def deco(fn):
+        if name in _STEP_BACKENDS:
+            raise ValueError(f"step backend {name!r} already registered")
+        _STEP_BACKENDS[name] = fn
+        jax.clear_caches()
+        return fn
+    return deco
+
+
+def step_backends() -> tuple[str, ...]:
+    """Names of the registered step backends (import-order stable)."""
+    get_step_backend("fused")   # make sure the lazy default is in
+    return tuple(_STEP_BACKENDS)
+
+
+def get_step_backend(name: str):
+    """Resolve a backend by name; ``"fused"`` lazily imports the Pallas
+    kernel module (kernels -> core is the only import direction)."""
+    if name not in _STEP_BACKENDS and name == "fused":
+        from ..kernels import pool_step as _  # noqa: F401  (registers)
+    try:
+        return _STEP_BACKENDS[name]
+    except KeyError:
+        raise ValueError(f"unknown step backend {name!r}; registered: "
+                         f"{tuple(_STEP_BACKENDS)}") from None
+
+
+@register_step_backend("lax")
+def _evict_place_lax(pri, seq, size, idle, valid, deficit):
+    """Reference backend: the exact ``_evict_prefix`` argsort composite,
+    vmapped over the pool axis.  This is the jaxpr the fused kernel is
+    priced against in ``benchmarks/pool_step.py``."""
+    def one(pri, seq, size, idle, valid, deficit):
+        by_seq = jnp.argsort(seq, stable=True)
+        order = by_seq[jnp.argsort(pri[by_seq], stable=True)]
+        sz_ord = jnp.where(idle[order], size[order], 0.0)
+        freed_before = jnp.cumsum(sz_ord) - sz_ord
+        evict_ord = idle[order] & (freed_before < deficit - 1e-9)
+        evict = jnp.zeros_like(valid).at[order].set(evict_ord)
+        freed = jnp.sum(jnp.where(evict, size, 0.0))
+        avail = jnp.sum(jnp.where(idle, size, 0.0))
+        valid_after = valid & ~evict
+        return (evict, freed, jnp.argmax(~valid_after), avail,
+                jnp.any(~valid_after))
+
+    return jax.vmap(one)(pri, seq, size, idle, valid, deficit)
+
+
+def pool_step_batch(p: PoolState, ev: Event, evict_place):
+    """Process one invocation against *all* stacked pools at once.
+
+    The batched twin of ``pool_step``: ``p`` carries a leading pool axis
+    ``P`` on every field and the hit/miss/drop decision is computed for
+    every pool against the same event; the caller keeps only the routed
+    pool's new state (exactly like the ``"vmap"`` step mode).  The miss
+    path's evict-and-place decision is delegated to ``evict_place`` (a
+    registered step backend) — everything else is plain batched jnp, so a
+    backend swap cannot perturb the hit path.  Bitwise-identical to
+    ``jax.vmap(pool_step)`` when the backend honours its contract.
+    """
+    P = p.func_id.shape[0]
+    rows = jnp.arange(P)
+    idle = p.valid & (p.busy_until <= ev.t)          # [P, S]
+    match = idle & (p.func_id == ev.func_id)
+    any_hit = jnp.any(match, axis=-1)                # [P]
+    cold_cost = ev.cold - ev.warm
+
+    # ---- HIT branch: touch the matching idle container with lowest seq ----
+    hit_slot = jnp.argmin(jnp.where(match, p.seq, _INF), axis=-1)
+    new_freq = p.freq[rows, hit_slot] + 1.0
+    hit_state = p._replace(
+        last_use=p.last_use.at[rows, hit_slot].set(ev.t),
+        freq=p.freq.at[rows, hit_slot].set(new_freq),
+        gd_pri=p.gd_pri.at[rows, hit_slot].set(
+            _gd(p.clock, new_freq, cold_cost, p.size[rows, hit_slot])),
+        busy_until=p.busy_until.at[rows, hit_slot].set(ev.t + ev.warm),
+    )
+
+    # ---- MISS branch: backend evicts the (priority, seq)-prefix --------
+    deficit = ev.size - p.free                       # [P]
+    stats = SlotStats(last_use=p.last_use, freq=p.freq, gd_pri=p.gd_pri,
+                      size=p.size, busy_until=p.busy_until)
+    pri = jnp.where(idle,
+                    replacement_priority(jnp, p.policy[:, None], stats),
+                    _INF)
+    evict, freed, ins, avail, empty_exists = evict_place(
+        pri, p.seq, p.size, idle, p.valid, deficit)
+
+    can_place = ((ev.size <= p.capacity + 1e-9)
+                 & (avail >= deficit - 1e-9)
+                 & empty_exists)
+    is_gd = p.policy == int(Policy.GREEDY_DUAL)
+    new_clock = jnp.where(
+        is_gd,
+        jnp.maximum(p.clock,
+                    jnp.max(jnp.where(evict, p.gd_pri, -_INF), axis=-1)),
+        p.clock)
+    valid_after = p.valid & ~evict
+    miss_state = p._replace(
+        func_id=p.func_id.at[rows, ins].set(ev.func_id),
+        size=p.size.at[rows, ins].set(ev.size),
+        last_use=p.last_use.at[rows, ins].set(ev.t),
+        freq=p.freq.at[rows, ins].set(1.0),
+        gd_pri=p.gd_pri.at[rows, ins].set(
+            _gd(new_clock, 1.0, cold_cost, ev.size)),
+        busy_until=p.busy_until.at[rows, ins].set(ev.t + ev.cold),
+        seq=p.seq.at[rows, ins].set(p.next_seq),
+        valid=valid_after.at[rows, ins].set(True),
+        free=p.free + freed - ev.size,
+        clock=new_clock,
+        next_seq=p.next_seq + 1.0,
+    )
+
+    # ---- select ----
+    outcome = jnp.where(any_hit, HIT,
+                        jnp.where(can_place, MISS, DROP))   # [P]
+
+    def pick(h, m, d):
+        return jax.tree_util.tree_map(
+            lambda a, b, c: jnp.where(
+                outcome.reshape((-1,) + (1,) * (a.ndim - 1)) == HIT, a,
+                jnp.where(outcome.reshape(
+                    (-1,) + (1,) * (a.ndim - 1)) == MISS, b, c)),
             h, m, d)
 
     new_state = pick(hit_state, miss_state, p)

@@ -1,0 +1,103 @@
+"""Fused Pallas pool-step kernel: the ``"fused"`` step backend.
+
+One Pallas pass over the stacked ``[pools, slots]`` axes fuses the three
+pieces of the miss path that ``core.pool_jax._evict_prefix`` expresses as
+an argsort composite:
+
+1. **(priority, seq) ranking by counting** — instead of the double
+   stable ``argsort``, each slot counts the evictable bytes of every
+   slot strictly before it in the eviction order::
+
+       before_i = sum_j [ (pri_j, seq_j) <lex (pri_i, seq_i) ] * sz_j
+
+   with ``sz_j = idle_j ? size_j : 0``.  This is *bitwise* identical to
+   the sort + prefix-sum: among idle slots ``(pri, seq)`` is a strict
+   total order (``seq`` strictly increases per insert), non-idle slots
+   contribute zero bytes so their position is irrelevant, and traces are
+   quantized (integer MB, 1/64 s grid) so the f32 sums are exact in any
+   reduction order.
+2. **prefix-sum eviction** — ``evict_i = idle_i & (before_i < deficit -
+   1e-9)``, the identical epsilon as ``_evict_prefix``.
+3. **slot placement** — first slot empty after eviction, plus the
+   ``empty_exists`` admission bit.
+
+The grid is one program per pool; each program sees one ``(1, S)`` block
+so the ``[S, S]`` rank matrix stays in VMEM.  ``interpret=True`` (the
+default off-TPU) keeps the whole path runnable — and equivalence-tested
+bit-exactly against the numpy oracle — on CPU CI.
+
+Boolean masks cross the kernel boundary as int32 (TPU-friendly); the
+wrapper restores the ``core.pool_jax`` step-backend contract.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core.pool_jax import register_step_backend
+
+
+def _evict_place_kernel(pri_ref, seq_ref, size_ref, idle_ref, valid_ref,
+                        deficit_ref, evict_ref, freed_ref, ins_ref,
+                        avail_ref, empty_ref, *, s: int):
+    pri = pri_ref[...]                     # [1, S] (+inf on non-idle)
+    seq = seq_ref[...]                     # [1, S]
+    size = size_ref[...]                   # [1, S]
+    idle = idle_ref[...] != 0              # [1, S]
+    valid = valid_ref[...] != 0            # [1, S]
+    deficit = deficit_ref[0, 0]
+
+    sz = jnp.where(idle, size, 0.0)        # evictable bytes per slot
+    # rank by counting: less[i, j] == slot j evicts strictly before i
+    pri_i, seq_i = pri.reshape(s, 1), seq.reshape(s, 1)
+    less = (pri < pri_i) | ((pri == pri_i) & (seq < seq_i))   # [S, S]
+    before = jnp.sum(jnp.where(less, sz, 0.0), axis=1)        # [S]
+    evict = idle & (before.reshape(1, s) < deficit - 1e-9)
+
+    valid_after = valid & ~evict
+    empty = ~valid_after
+    evict_ref[...] = evict.astype(jnp.int32)
+    freed_ref[0, 0] = jnp.sum(jnp.where(evict, size, 0.0))
+    ins_ref[0, 0] = jnp.argmax(empty).astype(jnp.int32)
+    avail_ref[0, 0] = jnp.sum(sz)
+    empty_ref[0, 0] = jnp.any(empty).astype(jnp.int32)
+
+
+def fused_evict_place_impl(pri, seq, size, idle, valid, deficit, *,
+                           interpret: bool):
+    """The raw ``pallas_call`` (explicit ``interpret``) — the registered
+    backend resolves ``interpret`` from the platform; benchmarks and the
+    interpret-mode unit tests call this directly."""
+    p, s = pri.shape
+    row = pl.BlockSpec((1, s), lambda i: (i, 0))
+    cell = pl.BlockSpec((1, 1), lambda i: (i, 0))
+    evict, freed, ins, avail, empty = pl.pallas_call(
+        functools.partial(_evict_place_kernel, s=s),
+        grid=(p,),
+        in_specs=[row, row, row, row, row, cell],
+        out_specs=[row, cell, cell, cell, cell],
+        out_shape=[
+            jax.ShapeDtypeStruct((p, s), jnp.int32),
+            jax.ShapeDtypeStruct((p, 1), jnp.float32),
+            jax.ShapeDtypeStruct((p, 1), jnp.int32),
+            jax.ShapeDtypeStruct((p, 1), jnp.float32),
+            jax.ShapeDtypeStruct((p, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(pri, seq, size, idle.astype(jnp.int32), valid.astype(jnp.int32),
+      deficit.reshape(p, 1))
+    return (evict != 0, freed[:, 0], ins[:, 0], avail[:, 0],
+            empty[:, 0] != 0)
+
+
+@register_step_backend("fused")
+def fused_evict_place(pri, seq, size, idle, valid, deficit):
+    """Step-backend entry: compiled Pallas on TPU, interpret elsewhere
+    (resolved at trace time, so jitted programs bake the right lowering
+    in and CPU CI exercises the same kernel body bit-for-bit)."""
+    return fused_evict_place_impl(
+        pri, seq, size, idle, valid, deficit,
+        interpret=jax.default_backend() != "tpu")

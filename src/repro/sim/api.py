@@ -13,11 +13,11 @@ both engines:
 """
 from __future__ import annotations
 
-from typing import Iterable
+from typing import Iterable, Sequence
 
 import numpy as np
 
-from ..cluster.engine import (_simulate_cluster_autoscale_jax,
+from ..cluster.engine import (STEP_MODES, _simulate_cluster_autoscale_jax,
                               _simulate_cluster_autoscale_ref,
                               _simulate_cluster_chunked_jax,
                               _simulate_cluster_failures_jax,
@@ -102,8 +102,11 @@ def simulate(scenario: Scenario, trace: Trace, *, engine: str = "jax",
     """Run one scenario over ``trace`` and return the unified
     :class:`Result`.
 
-    ``mode`` selects the JAX scan-step formulation (``"gather"`` |
-    ``"vmap"``); it is ignored by the reference engine.  ``rng_seed``
+    ``mode`` selects the JAX scan-step formulation (|STEP_MODES|, see
+    ``repro.cluster.engine.STEP_MODES``; ``"fused"`` runs the Pallas
+    evict-and-place kernel from ``repro.kernels.pool_step`` — compiled on
+    TPU, interpreted bit-identically elsewhere); it is ignored by the
+    reference engine.  ``rng_seed``
     fixes the cloud cold-start draws (common random numbers: both engines
     and every scenario of a sweep price offloads identically).
 
@@ -175,10 +178,15 @@ def simulate(scenario: Scenario, trace: Trace, *, engine: str = "jax",
 
 
 def sweep(trace: Trace, scenarios: Iterable[Scenario], *,
-          engine: str = "jax", mode: str = "gather",
+          engine: str = "jax", mode: str | Sequence[str] = "gather",
           rng_seed: int = 0,
           chunk_events: int | None = None) -> list[Result]:
     """Evaluate many scenarios on one trace; results in input order.
+
+    ``mode`` (|STEP_MODES|) is one step formulation for every lane, or a
+    per-scenario sequence — lanes bucket by mode like any other static
+    shape, so a sweep mixing ``"fused"`` and ``"vmap"`` lanes simply
+    compiles one program per mode group.
 
     Scenarios sharing stacked shapes (``n_nodes``, ``max_slots``, and —
     for autoscaled scenarios — the epoch length) are batched into ONE
@@ -198,10 +206,19 @@ def sweep(trace: Trace, scenarios: Iterable[Scenario], *,
     Autoscaled scenarios do not compose with it (yet) and raise.
     """
     _check_engine(engine)
-    check_step_mode(mode)
     scenarios = list(scenarios)
     if not scenarios:
         raise ValueError("sweep: scenarios must be non-empty")
+    if isinstance(mode, str):
+        modes = [mode] * len(scenarios)
+    else:
+        modes = list(mode)
+        if len(modes) != len(scenarios):
+            raise ValueError(
+                f"sweep: per-scenario mode needs {len(scenarios)} "
+                f"entries, got {len(modes)}")
+    for m in modes:
+        check_step_mode(m)
     chunk = None
     for s in scenarios:
         chunk = _check_chunkable(s, chunk_events)
@@ -209,7 +226,7 @@ def sweep(trace: Trace, scenarios: Iterable[Scenario], *,
         return [simulate(s, trace, engine="ref", rng_seed=rng_seed)
                 for s in scenarios]
     plans = [_chain_plan(s, trace) for s in scenarios]
-    groups: dict[tuple[int, int, int | None, bool, int | None, bool],
+    groups: dict[tuple[int, int, int | None, bool, int | None, bool, str],
                  list[int]] = {}
     for i, s in enumerate(scenarios):
         epoch = s.autoscale.epoch_events if s.autoscale else None
@@ -218,27 +235,30 @@ def sweep(trace: Trace, scenarios: Iterable[Scenario], *,
         # vmap their schedules as data; telemetry lanes bucket by window
         # length (the stacked accumulator shape); chain lanes bucket by
         # chains on/off only — deadlines are per-lane *data*, so
-        # {no-deadline, tight, loose} variants share one program
+        # {no-deadline, tight, loose} variants share one program; the
+        # step mode is a static formulation choice, so mixed-mode sweeps
+        # bucket by it too
         failing = s.failures is not None
         groups.setdefault(
             (s.n_nodes, s.max_slots, epoch, failing, _telw(s),
-             plans[i] is not None),
+             plans[i] is not None, modes[i]),
             []).append(i)
     results: list[Result | None] = [None] * len(scenarios)
-    info = {"engine": engine, "mode": mode, "chunk_events": chunk,
-            "rng_seed": rng_seed,
-            "trace_fingerprint": trace_fingerprint(trace)}
-    for (_, _, epoch, failing, telw, chained), idxs in groups.items():
+    base_info = {"engine": engine, "chunk_events": chunk,
+                 "rng_seed": rng_seed,
+                 "trace_fingerprint": trace_fingerprint(trace)}
+    for (_, _, epoch, failing, telw, chained, gmode), idxs in groups.items():
         cfgs = [scenarios[i].to_cluster_config() for i in idxs]
         chs = [plans[i] for i in idxs] if chained else None
+        info = {**base_info, "mode": gmode}
         if epoch is None and not failing:
             if chunk is not None:
                 outs = _sweep_cluster_chunked(trace, cfgs, rng_seed=rng_seed,
-                                              mode=mode, chunk_events=chunk,
+                                              mode=gmode, chunk_events=chunk,
                                               telemetry=telw, chains=chs)
             else:
                 outs = _sweep_cluster(trace, cfgs, rng_seed=rng_seed,
-                                      mode=mode, telemetry=telw, chains=chs)
+                                      mode=gmode, telemetry=telw, chains=chs)
             for i, out in zip(idxs, outs):
                 raw, extras = (out, {}) if telw is None and not chained \
                     else out
@@ -248,12 +268,12 @@ def sweep(trace: Trace, scenarios: Iterable[Scenario], *,
             fails = [scenarios[i].failures for i in idxs]
             if chunk is not None:
                 pairs = _sweep_cluster_chunked(
-                    trace, cfgs, rng_seed=rng_seed, mode=mode,
+                    trace, cfgs, rng_seed=rng_seed, mode=gmode,
                     chunk_events=chunk, failures=fails, telemetry=telw,
                     chains=chs)
             else:
                 pairs = _sweep_cluster_failures(
-                    trace, cfgs, fails, rng_seed=rng_seed, mode=mode,
+                    trace, cfgs, fails, rng_seed=rng_seed, mode=gmode,
                     telemetry=telw, chains=chs)
             for i, (raw, extras) in zip(idxs, pairs):
                 results[i] = _wrap(scenarios[i], trace, raw, extras, None,
@@ -262,8 +282,15 @@ def sweep(trace: Trace, scenarios: Iterable[Scenario], *,
             triples = _sweep_cluster_autoscale(
                 trace, cfgs, [scenarios[i].autoscale for i in idxs],
                 [scenarios[i].failures for i in idxs],
-                rng_seed=rng_seed, mode=mode, telemetry=telw, chains=chs)
+                rng_seed=rng_seed, mode=gmode, telemetry=telw, chains=chs)
             for i, (raw, fracs, extras) in zip(idxs, triples):
                 results[i] = _wrap(scenarios[i], trace, raw, extras, fracs,
                                    telw, info, plans[i])
     return results
+
+
+# the mode lists in the docstrings derive from the engine's STEP_MODES
+# tuple (f-string docstrings are not recognized by CPython, so splice)
+_MODES_DOC = " | ".join(f'``"{m}"``' for m in STEP_MODES)
+simulate.__doc__ = simulate.__doc__.replace("|STEP_MODES|", _MODES_DOC)
+sweep.__doc__ = sweep.__doc__.replace("|STEP_MODES|", _MODES_DOC)

@@ -27,6 +27,7 @@ from typing import Sequence
 
 import numpy as np
 
+from ..cluster.engine import STEP_MODES
 from ..core.continuum import Autoscale, ClusterConfig, Failures
 from ..core.registry import REPLACEMENT, ROUTING
 from .chains import Chains
@@ -88,6 +89,11 @@ class Scenario:
     (``Trace.has_chains``), ``Result.chains`` exposes the per-chain
     metrics, and routing policies see each event's remaining slack via
     ``RouteCtx.chain_slack``.
+
+    The JAX scan-step formulation (|STEP_MODES|) is deliberately *not*
+    part of the scenario — all modes are numerically identical, so it is
+    an execution knob on :func:`repro.sim.simulate` / ``sweep``, not a
+    configuration.
     """
 
     node_mb: tuple[float, ...]
@@ -257,3 +263,9 @@ class Scenario:
             cloud_rtt_s=self.cloud_rtt_s,
             cloud_cold_prob=self.cloud_cold_prob,
             max_slots=self.max_slots)
+
+
+# the mode list derives from the engine's STEP_MODES tuple (docstrings
+# cannot be f-strings, so splice)
+Scenario.__doc__ = Scenario.__doc__.replace(
+    "|STEP_MODES|", " | ".join(f'``"{m}"``' for m in STEP_MODES))
