@@ -1,0 +1,134 @@
+"""Beyond-paper: device-mesh sharded giga-sweeps.
+
+The capacity-planning workload the ROADMAP targets: one ``sweep()`` call
+over a ~10k-scenario cross product (routing policy x split x node memory),
+sharded across a host-device mesh with ``devices=``.  Because the lane
+axis is embarrassingly parallel (no cross-lane reductions anywhere in the
+scan), lanes/s should scale near-linearly with device count on a
+multi-core CPU — and results stay bit-identical to the single-device run,
+which this suite re-verifies on every invocation.
+
+Multi-device CPU execution needs ``--xla_force_host_platform_device_count``
+set before the first jax import, so the measured sweeps run in a fresh
+worker subprocess (this module run with ``--worker``); the parent driver
+process keeps its single default device.
+
+``GIGA_SWEEP_LANES`` scales the grid (default 10240 lanes; CI bench-smoke
+sets a small count), ``GIGA_SWEEP_DEVICES`` the device counts swept
+(default ``1,2,4,8``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from .common import csv_line
+
+DEFAULT_LANES = 10240
+DEFAULT_DEVICES = "1,2,4,8"
+
+
+def _grid(lanes: int):
+    """A lane grid crossing routing x split x node memory, one shape
+    bucket (n_nodes=2) so the whole sweep shards as a single program."""
+    from repro.sim import Scenario, routing_policies
+
+    from .common import GB, MEMORY_GB, SPLITS
+    # slack_aware needs chain data; every other registered policy sweeps
+    routings = sorted(r for r in routing_policies() if r != "slack_aware")
+    grid = []
+    i = 0
+    while len(grid) < lanes:
+        gb = MEMORY_GB[i % len(MEMORY_GB)]
+        fr = SPLITS[(i // len(MEMORY_GB)) % len(SPLITS)]
+        ro = routings[(i // (len(MEMORY_GB) * len(SPLITS))) % len(routings)]
+        # nudge the split per repeat so every lane is a distinct scenario
+        f = min(0.95, fr + 1e-4 * (i // (len(MEMORY_GB) * len(SPLITS)
+                                         * len(routings))))
+        grid.append(Scenario(node_mb=(gb * GB / 2, gb * GB / 2),
+                             small_frac=f, routing=ro, max_slots=64))
+        i += 1
+    return grid
+
+
+def _worker() -> None:
+    """Runs in a subprocess with the forced host-device mesh."""
+    import time
+
+    import numpy as np
+
+    lanes = int(os.environ.get("GIGA_SWEEP_LANES", DEFAULT_LANES))
+    counts = [int(d) for d in os.environ.get(
+        "GIGA_SWEEP_DEVICES", DEFAULT_DEVICES).split(",")]
+    from repro.sim import sweep
+    from repro.workloads import edge_trace
+
+    tr = edge_trace(seed=0, duration_s=600.0)
+    grid = _grid(lanes)
+
+    base = sweep(tr, grid)          # unsharded reference (and warm-up)
+    times = {}
+    match = True
+    for d in counts:
+        rs = sweep(tr, grid, devices=d)           # compile
+        t0 = time.perf_counter()
+        rs = sweep(tr, grid, devices=d)           # measure
+        times[str(d)] = time.perf_counter() - t0
+        match = match and all(
+            a.summary() == b.summary()
+            and np.array_equal(a.node, b.node)
+            and np.array_equal(a.outcome, b.outcome)
+            for a, b in zip(base, rs))
+    print(json.dumps({"lanes": lanes, "events": len(tr),
+                      "device_counts": counts, "times": times,
+                      "match": match, "host_cores": os.cpu_count()}))
+
+
+def run():
+    lanes = int(os.environ.get("GIGA_SWEEP_LANES", DEFAULT_LANES))
+    counts = os.environ.get("GIGA_SWEEP_DEVICES", DEFAULT_DEVICES)
+    max_dev = max(int(d) for d in counts.split(","))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count={max_dev}"
+                        ).strip()
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.giga_sweep", "--worker"],
+        env=env, capture_output=True, text=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"giga_sweep worker failed:\n{proc.stdout}\n{proc.stderr}")
+    doc = json.loads(proc.stdout.strip().splitlines()[-1])
+    if not doc["match"]:
+        raise RuntimeError("sharded sweep diverged from unsharded — "
+                           "bitwise identity violated")
+    t1 = doc["times"]["1"]
+    lines = []
+    for d in doc["device_counts"]:
+        t = doc["times"][str(d)]
+        lines.append(csv_line(
+            f"giga_sweep_d{d}", t * 1e6 / doc["lanes"],
+            f"{doc['lanes'] / t:.0f} lanes/s ({doc['lanes']} lanes x "
+            f"{doc['events']} events, {d} host device(s))"))
+    dmax = doc["device_counts"][-1]
+    lines.append(csv_line(
+        f"giga_sweep_speedup_d{dmax}", doc["times"][str(dmax)] * 1e6,
+        f"{t1 / max(doc['times'][str(dmax)], 1e-9):.2f}x vs 1 device "
+        f"({doc['host_cores']} host core(s) — near-linear expected only "
+        f"when cores >= devices)"))
+    lines.append(csv_line(
+        "giga_sweep_bitwise", 0.0,
+        "sharded == unsharded verified at every device count"))
+    return lines, {"giga_sweep": doc}
+
+
+if __name__ == "__main__":
+    if "--worker" in sys.argv:
+        _worker()
+    else:
+        for line in run()[0]:
+            print(line)

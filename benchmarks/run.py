@@ -77,9 +77,9 @@ def main() -> None:
     from repro.sim.telemetry import BENCH_MANIFEST_SCHEMA, versions
 
     from . import (chains, cold_start, continuum_bench, drops, failures,
-                   fairness, policy_independence, pool_step, replay,
-                   roofline, serving_bench, stress, sweep_speed, telemetry,
-                   workload_analysis)
+                   fairness, giga_sweep, policy_independence, pool_step,
+                   replay, roofline, serving_bench, stress, sweep_speed,
+                   telemetry, workload_analysis)
 
     _install_compile_listener()
     suites = [
@@ -91,6 +91,7 @@ def main() -> None:
         ("stress(sec6.5)", stress.run),
         ("serving_integration", serving_bench.run),
         ("sweep_speed(beyond-paper)", sweep_speed.run),
+        ("giga_sweep(beyond-paper)", giga_sweep.run),
         ("continuum+cluster+chains(beyond-paper)", continuum_bench.run),
         ("chains_slo(beyond-paper)", chains.run),
         ("failures(beyond-paper)", failures.run),

@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
 # Fast signal before the full suite: an API-surface smoke check, the core
-# simulator equivalence (deterministic), the repro.sim front-door +
-# registry tests, the cluster subsystem incl. the JAX<->oracle
-# equivalence tests, the continuum layer, and workload calibration.
+# simulator equivalence (deterministic), a sharded-sweep smoke on a
+# forced 4-device host mesh, the repro.sim front-door + registry tests,
+# the cluster subsystem incl. the JAX<->oracle equivalence tests, the
+# continuum layer, and workload calibration.
 # Target: < 2 minutes on the CPU container.
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -92,6 +93,48 @@ for r in (st, sa):
 assert sa.deadline_miss_pct < st.deadline_miss_pct, \
     (sa.deadline_miss_pct, st.deadline_miss_pct)
 EOF
+# sharded-sweep smoke: a fresh process (XLA_FLAGS must precede the first
+# jax import) forces a 4-device host mesh and pins sharded == unsharded
+# bitwise on a non-dividing lane count (pad-lane path) plus the devices
+# validation errors
+python - <<'EOF'
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=4")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import numpy as np
+import jax
+assert jax.device_count() == 4, jax.device_count()
+from repro.core.types import Trace
+from repro.sim import Scenario, sweep
+n = 96
+tr = Trace(t=np.arange(n, dtype=np.float32),
+           func_id=np.arange(n, dtype=np.int32) % 7,
+           size_mb=np.full(n, 64, np.float32),
+           cls=(np.arange(n, dtype=np.int32) % 3 == 0).astype(np.int32),
+           warm_dur=np.ones(n, np.float32), cold_dur=np.full(n, 3, np.float32))
+grid = [Scenario.cluster((256.0, 512.0), small_frac=f, max_slots=16)
+        for f in (0.3, 0.4, 0.5, 0.6, 0.7)]      # 5 lanes: pads on 4 devs
+base = sweep(tr, grid)
+shard = sweep(tr, grid, devices=4)
+for a, b in zip(base, shard):
+    assert a.summary() == b.summary()
+    assert (a.node == b.node).all() and (a.outcome == b.outcome).all()
+assert shard[0].run_info["devices"] == 4
+assert sweep(tr, grid, devices="all")[0].run_info["devices"] == 4
+try:
+    sweep(tr, grid, devices=5)
+except ValueError as e:
+    assert "exceeds" in str(e), e
+else:
+    raise AssertionError("devices > device_count must raise")
+try:
+    sweep(tr, grid, devices=0)
+except ValueError as e:
+    assert "positive int" in str(e), e
+else:
+    raise AssertionError("devices=0 must raise")
+EOF
 exec python -m pytest -q -m "not slow" \
     tests/test_simulator.py \
     tests/test_sim_api.py \
@@ -105,4 +148,5 @@ exec python -m pytest -q -m "not slow" \
     tests/test_telemetry.py \
     tests/test_chains.py \
     tests/test_pool_kernel.py \
+    tests/test_sharded_sweep.py \
     "$@"

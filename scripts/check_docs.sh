@@ -2,8 +2,9 @@
 # Docs gate, run by the CI `docs` job (and `make docs-check`):
 #   1. every relative markdown link in *.md resolves to a real file;
 #   2. every ```python block in docs/scenarios.md, docs/observability.md,
-#      docs/chains.md and docs/kernels.md actually runs (each block is
-#      self-contained by convention — see the files' preambles).
+#      docs/chains.md, docs/kernels.md and docs/sweeps.md actually runs
+#      (each block is self-contained by convention — see the files'
+#      preambles).
 # External http(s) links are NOT fetched (CI must not depend on the
 # network); they are only checked for obvious malformations like the
 # doubled-host typos this script was born from (e.g. user@host@host).
@@ -54,7 +55,7 @@ import re
 import sys
 
 for doc in ("docs/scenarios.md", "docs/observability.md",
-            "docs/chains.md", "docs/kernels.md"):
+            "docs/chains.md", "docs/kernels.md", "docs/sweeps.md"):
     src = pathlib.Path(doc).read_text()
     blocks = re.findall(r"```python\n(.*?)```", src, re.DOTALL)
     if not blocks:

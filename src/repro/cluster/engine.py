@@ -64,6 +64,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec
 
 from ..core.compat import deprecated
 from ..core.continuum import (Autoscale, ChainPlan, ClusterConfig, Failures,
@@ -103,6 +105,40 @@ def check_chunk_events(chunk_events) -> int | None:
         raise ValueError("chunk_events must be a positive integer or None, "
                          f"got {chunk_events!r}")
     return int(chunk_events)
+
+
+def check_devices(devices) -> int | None:
+    """Validate (and resolve) a sweep ``devices`` argument — shared by the
+    cluster sweep entrypoints and the ``repro.sim`` front door.  ``None``
+    keeps the single-device programs (byte-identical to the pre-sharding
+    ones), ``"all"`` means every ``jax.devices()`` entry, a positive int
+    means the first that many.  Raises ``ValueError`` *before* any mesh is
+    built, so a bad count fails with a clear message instead of a
+    shard_map mesh-shape error deep inside jit."""
+    if devices is None:
+        return None
+    avail = jax.device_count()
+    if isinstance(devices, str):
+        if devices != "all":
+            raise ValueError("devices must be a positive int, 'all' or "
+                             f"None, got {devices!r}")
+        return avail
+    try:
+        ok = (not isinstance(devices, bool) and int(devices) == devices
+              and devices >= 1)
+    except (TypeError, ValueError):
+        ok = False
+    if not ok:
+        raise ValueError("devices must be a positive int, 'all' or None, "
+                         f"got {devices!r}")
+    n = int(devices)
+    if n > avail:
+        raise ValueError(
+            f"devices={n} exceeds the {avail} available JAX device(s) — "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{n} before the first jax import to turn CPU cores into a "
+            "host-device mesh, or pass a smaller count")
+    return n
 
 
 class ClusterEvent(NamedTuple):
@@ -790,44 +826,135 @@ def _chain_axes(tel: bool, chain: bool) -> tuple:
     return axes
 
 
+# --------------------------------------------------------------------------
+# device-mesh sharded sweeps: lanes split across jax.devices()
+# --------------------------------------------------------------------------
+# ``sweep(..., devices=k)`` splits the stacked lane axis of each shape
+# bucket across a 1-D device mesh with shard_map: every device runs the
+# SAME vmapped scan on its shard of lanes, so per-lane arithmetic — and
+# hence every per-lane output — is bit-identical to the unsharded run (no
+# cross-lane reductions exist anywhere in the sweep path).  The in_specs
+# mirror the runner's vmap in_axes one-for-one (lane-stacked args split,
+# shared args replicate; both use the same pytree-prefix rule), and a
+# non-dividing lane count is padded with duplicates of lane 0 — the lane
+# analogue of the guaranteed-drop no-op pad events in ``_epoch_grid``:
+# the pad lanes run real (discarded) work and are sliced off before
+# ``Result`` assembly.  ``devices=None`` skips shard_map entirely, so the
+# single-device runners stay byte-identical to the pre-sharding programs.
+
+def _lane_mesh(devices: int) -> Mesh:
+    """A 1-D mesh over the first ``devices`` JAX devices; on CPU,
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set before
+    the first jax import) turns cores into mesh devices."""
+    return Mesh(np.asarray(jax.devices()[:devices]), ("lanes",))
+
+
+def _lane_specs(axes: tuple) -> tuple:
+    """shard_map in_specs mirroring a vmap in_axes tuple: lane-stacked
+    args (axis 0) split across the mesh, shared args replicate.  Entries
+    are pytree prefixes, exactly like the in_axes they mirror."""
+    return tuple(PartitionSpec("lanes") if a == 0 else PartitionSpec()
+                 for a in axes)
+
+
+def _shard_lanes(fn, axes: tuple, devices: int | None):
+    """Wrap a vmapped sweep impl in shard_map over the lane axis (every
+    output of every runner is lane-stacked, hence the blanket out_specs).
+    A no-op when ``devices`` is None.  ``check_rep=False`` because
+    pallas_call (``mode="fused"``) has no replication rule — harmless
+    here since no output is replicated."""
+    if devices is None:
+        return fn
+    return shard_map(fn, mesh=_lane_mesh(devices),
+                     in_specs=_lane_specs(axes),
+                     out_specs=PartitionSpec("lanes"),
+                     check_rep=False)
+
+
+def _lane_pad(lanes: int, devices: int | None) -> int:
+    """Pad lanes needed to make ``lanes`` divisible by the mesh size."""
+    return 0 if devices is None else (-lanes) % devices
+
+
+def _pad_tree(tree, pad: int):
+    """Append ``pad`` copies of lane 0 along the leading axis of every
+    leaf (zeros stay zeros for accumulators; real configs just duplicate
+    — their outputs are never read)."""
+    if not pad:
+        return tree
+    return jax.tree_util.tree_map(
+        lambda a: jnp.concatenate(
+            [jnp.asarray(a), jnp.repeat(jnp.asarray(a)[:1], pad, axis=0)]),
+        tree)
+
+
+def _pad_lanes(args: tuple, axes: tuple, pad: int) -> tuple:
+    """Pad every lane-stacked runner arg (vmap in_axes 0 — same
+    pytree-prefix rule) with lane-0 duplicates; shared args and ``None``
+    placeholders pass through untouched."""
+    if not pad:
+        return args
+    return tuple(_pad_tree(arg, pad) if ax == 0 else arg
+                 for arg, ax in zip(args, axes))
+
+
+def _sweep_axes(tel: bool, chain: bool) -> tuple:
+    return (0, None, 0, 0, 0) + _chain_axes(tel, chain)
+
+
+def _sweep_failures_axes(tel: bool, chain: bool) -> tuple:
+    return (0, None, 0, 0, 0, 0, 0) + _chain_axes(tel, chain)
+
+
+def _sweep_autoscale_axes(masked: bool, tel: bool, chain: bool) -> tuple:
+    return ((0, None, None, 0 if masked else None,
+             0 if masked else None, 0, 0, 0, 0, 0, 0, 0)
+            + _chain_axes(tel, chain))
+
+
 @functools.lru_cache(maxsize=None)
 def _sweep_runner(n_nodes: int, mode: str, tel: bool = False,
-                  chain: bool = False):
+                  chain: bool = False, devices: int | None = None):
     """Cached jitted vmap of the scan, keyed on the static shape args, so
     repeated sweep calls hit the compile cache like ``_run_cluster``
     does.  ``tel`` lanes share the window-index data and stack their
     accumulators; ``chain`` lanes share the chain event data and stack
-    their accumulators, cold draws and deadlines."""
-    return jax.jit(jax.vmap(
+    their accumulators, cold draws and deadlines.  ``devices`` shards the
+    lane axis across a device mesh (None = the exact single-device
+    program)."""
+    axes = _sweep_axes(tel, chain)
+    return jax.jit(_shard_lanes(jax.vmap(
         functools.partial(_run_cluster_impl, n_nodes=n_nodes, mode=mode),
-        in_axes=(0, None, 0, 0, 0) + _chain_axes(tel, chain)))
+        in_axes=axes), axes, devices))
 
 
 @functools.lru_cache(maxsize=None)
 def _sweep_failures_runner(n_nodes: int, mode: str, tel: bool = False,
-                           chain: bool = False):
+                           chain: bool = False,
+                           devices: int | None = None):
     """Failure analogue of ``_sweep_runner``: every lane carries its own
     compiled up/recover masks as data (same [T, N] shape — lanes bucket by
     mask shape), so mixed failure schedules sweep in one program."""
-    return jax.jit(jax.vmap(
+    axes = _sweep_failures_axes(tel, chain)
+    return jax.jit(_shard_lanes(jax.vmap(
         functools.partial(_run_failures_impl, n_nodes=n_nodes, mode=mode),
-        in_axes=(0, None, 0, 0, 0, 0, 0) + _chain_axes(tel, chain)))
+        in_axes=axes), axes, devices))
 
 
 @functools.lru_cache(maxsize=None)
 def _sweep_autoscale_runner(n_nodes: int, mode: str, masked: bool,
-                            tel: bool = False, chain: bool = False):
+                            tel: bool = False, chain: bool = False,
+                            devices: int | None = None):
     """Autoscale analogue of ``_sweep_runner``: configs (pools, masks,
     routing, unified, cloud, frac, node_mb, asc thresholds, active0) vmap
     as data; the epoch grid and validity mask are shared across lanes.
     ``masked`` lanes carry per-lane failure masks; unmasked lanes pass
     ``None`` masks and compile the cheap no-invalidation program."""
-    return jax.jit(jax.vmap(
+    axes = _sweep_autoscale_axes(masked, tel, chain)
+    return jax.jit(_shard_lanes(jax.vmap(
         functools.partial(_run_autoscale_impl, n_nodes=n_nodes, mode=mode,
                           masked=masked),
-        in_axes=(0, None, None, 0 if masked else None,
-                 0 if masked else None, 0, 0, 0, 0, 0, 0, 0)
-        + _chain_axes(tel, chain)))
+        in_axes=axes), axes, devices))
 
 
 def _epoch_grid(events: ClusterEvent, n_events: int, epoch_events: int,
@@ -1009,11 +1136,14 @@ def _sweep_chain_data(chains, configs, t_len: int, rng_seed: int):
 
 def _sweep_cluster(trace: Trace, configs, rng_seed: int = 0,
                    mode: str = "gather", telemetry: int | None = None,
-                   chains=None):
+                   chains=None, devices: int | None = None):
     """Returns one ``ClusterResult`` per config — or, with ``telemetry``
     and/or ``chains`` (one compiled ``ChainPlan`` per config), one
-    ``(result, extras)`` pair per config."""
+    ``(result, extras)`` pair per config.  ``devices`` shards the lane
+    axis across a device mesh (results stay bit-identical; pad lanes are
+    sliced off here by never reading their rows)."""
     check_step_mode(mode)
+    devices = check_devices(devices)
     configs, n, pools, routing, unified, cloud = _stack_configs(
         configs, "sweep_cluster")
     events = cluster_events(trace, n)
@@ -1028,7 +1158,10 @@ def _sweep_cluster(trace: Trace, configs, rng_seed: int = 0,
         plan, clouds, chain_args = _sweep_chain_data(
             chains, configs, len(trace), rng_seed)
         args = args + chain_args
-    outs = _sweep_runner(n, mode, tel=tel_on, chain=ch_on)(*args)
+    args = _pad_lanes(args, _sweep_axes(tel_on, ch_on),
+                      _lane_pad(len(configs), devices))
+    outs = _sweep_runner(n, mode, tel=tel_on, chain=ch_on,
+                         devices=devices)(*args)
     nodes, outcomes = np.asarray(outs[0]), np.asarray(outs[1])
     out = []
     for g, c in enumerate(configs):
@@ -1105,11 +1238,13 @@ def _simulate_cluster_failures_ref(
 def _sweep_cluster_failures(
         trace: Trace, configs, failures, rng_seed: int = 0,
         mode: str = "gather", telemetry: int | None = None,
-        chains=None) -> list[tuple[ClusterResult, dict]]:
+        chains=None, devices: int | None = None
+        ) -> list[tuple[ClusterResult, dict]]:
     """Vmapped sweep over failure-injected configs: each lane's compiled
     up/recover masks ride as data (lanes bucket by mask shape, which the
     shared trace and ``n_nodes`` pin)."""
     check_step_mode(mode)
+    devices = check_devices(devices)
     failures = list(failures)
     configs, n, pools, routing, unified, cloud = _stack_configs(
         configs, "failure sweep")
@@ -1130,7 +1265,10 @@ def _sweep_cluster_failures(
         plan, clouds, chain_args = _sweep_chain_data(
             chains, configs, len(trace), rng_seed)
         args = args + chain_args
-    outs = _sweep_failures_runner(n, mode, tel=tel_on, chain=ch_on)(*args)
+    args = _pad_lanes(args, _sweep_failures_axes(tel_on, ch_on),
+                      _lane_pad(len(configs), devices))
+    outs = _sweep_failures_runner(n, mode, tel=tel_on, chain=ch_on,
+                                  devices=devices)(*args)
     nodes, outcomes = np.asarray(outs[0]), np.asarray(outs[1])
     invals = np.asarray(outs[2], np.int64)
     out = []
@@ -1279,28 +1417,41 @@ def _chunk_chain_axes(tel: bool, chain: bool) -> tuple:
     return axes
 
 
+def _sweep_chunk_axes(tel: bool, chain: bool) -> tuple:
+    return (0, None, 0, 0, 0) + _chunk_chain_axes(tel, chain)
+
+
+def _sweep_failures_chunk_axes(tel: bool, chain: bool) -> tuple:
+    return (0, None, 0, 0, 0, 0, 0) + _chunk_chain_axes(tel, chain)
+
+
 @functools.lru_cache(maxsize=None)
 def _sweep_chunk_runner(n_nodes: int, mode: str, tel: bool = False,
-                        chain: bool = False):
+                        chain: bool = False, devices: int | None = None):
     """Vmapped chunk step for sweeps: lanes stack on the carry/config axes,
     the chunk's events are shared, and the stacked carry is donated.
     The leading ``0`` is a pytree prefix, so it maps every carry leaf —
     plain pools, ``(pools, TelAcc)`` or ``(pools[, TelAcc], ChainAcc)``
-    alike."""
-    return jax.jit(jax.vmap(
+    alike.  ``devices`` shards the lane axis; the donated carry then
+    lives sharded across the mesh and is reused shard-in-place chunk
+    over chunk."""
+    axes = _sweep_chunk_axes(tel, chain)
+    return jax.jit(_shard_lanes(jax.vmap(
         functools.partial(_run_cluster_chunk_impl, n_nodes=n_nodes,
                           mode=mode),
-        in_axes=(0, None, 0, 0, 0) + _chunk_chain_axes(tel, chain)),
+        in_axes=axes), axes, devices),
         donate_argnums=(0,))
 
 
 @functools.lru_cache(maxsize=None)
 def _sweep_failures_chunk_runner(n_nodes: int, mode: str,
-                                 tel: bool = False, chain: bool = False):
-    return jax.jit(jax.vmap(
+                                 tel: bool = False, chain: bool = False,
+                                 devices: int | None = None):
+    axes = _sweep_failures_chunk_axes(tel, chain)
+    return jax.jit(_shard_lanes(jax.vmap(
         functools.partial(_run_failures_chunk_impl, n_nodes=n_nodes,
                           mode=mode),
-        in_axes=(0, None, 0, 0, 0, 0, 0) + _chunk_chain_axes(tel, chain)),
+        in_axes=axes), axes, devices),
         donate_argnums=(0,))
 
 
@@ -1426,20 +1577,27 @@ def _sweep_cluster_chunked(trace: Trace, configs, rng_seed: int = 0,
                            mode: str = "gather",
                            chunk_events: int = 65536,
                            failures=None, telemetry: int | None = None,
-                           chains=None):
+                           chains=None, devices: int | None = None):
     """Chunked twin of ``_sweep_cluster`` / ``_sweep_cluster_failures``:
     the chunk loop threads one *stacked* donated carry across all lanes.
     With ``failures`` (one ``Failures``/None per config), ``telemetry``
     or ``chains`` returns ``(result, extras)`` pairs, else plain
-    results."""
+    results.  ``devices`` shards the lane axis (pad lanes included in the
+    donated carry, sliced off per chunk below)."""
     check_step_mode(mode)
     chunk = check_chunk_events(chunk_events)
+    devices = check_devices(devices)
     failing = failures is not None
     telw = telemetry
     tel_on, ch_on = telw is not None, chains is not None
     configs, n, pools, routing, unified, cloud = _stack_configs(
         configs, "chunked sweep")
     t_len, lanes = len(trace), len(configs)
+    pad = _lane_pad(lanes, devices)
+    lanes_p = lanes + pad
+    pools = _pad_tree(pools, pad)
+    routing, unified, cloud = (_pad_tree(a, pad)
+                               for a in (routing, unified, cloud))
     ev_np = _host_events(trace, n)
     drop = max(_drop_size(c) for c in configs)
     n_w = None if telw is None else _n_windows(t_len, telw)
@@ -1448,7 +1606,9 @@ def _sweep_cluster_chunked(trace: Trace, configs, rng_seed: int = 0,
         plan, clouds, _ = _sweep_chain_data(chains, configs, t_len,
                                             rng_seed)
         cxs_np = _chain_xs_np(plan)
-        cdl = jnp.asarray(np.stack([p.deadline for p in list(chains)]))
+        cdl = _pad_tree(
+            jnp.asarray(np.stack([p.deadline for p in list(chains)])), pad)
+        clouds_p = clouds + clouds[:1] * pad
     nodes_out = np.empty((lanes, t_len), np.int32)
     outcomes_out = np.empty((lanes, t_len), np.int32)
     if failing:
@@ -1459,19 +1619,27 @@ def _sweep_cluster_chunked(trace: Trace, configs, rng_seed: int = 0,
         masks = [_failure_masks(f, trace, n) for f in failures]
         up_full = np.stack([m[0] for m in masks])       # [L, T, N]
         rec_full = np.stack([m[1] for m in masks])
+        if pad:
+            up_p = np.concatenate([up_full,
+                                   np.repeat(up_full[:1], pad, axis=0)])
+            rec_p = np.concatenate([rec_full,
+                                    np.repeat(rec_full[:1], pad, axis=0)])
+        else:
+            up_p, rec_p = up_full, rec_full
         run = _sweep_failures_chunk_runner(n, mode, tel=tel_on,
-                                           chain=ch_on)
-        carry = (pools, jnp.zeros((lanes, n), jnp.int32))
+                                           chain=ch_on, devices=devices)
+        carry = (pools, jnp.zeros((lanes_p, n), jnp.int32))
         if tel_on:
-            carry = carry + (_stack_tel(n_w, n, lanes),)
+            carry = carry + (_stack_tel(n_w, n, lanes_p),)
         if ch_on:
-            carry = carry + (_stack_chain(plan.n_chains, lanes),)
+            carry = carry + (_stack_chain(plan.n_chains, lanes_p),)
     else:
-        run = _sweep_chunk_runner(n, mode, tel=tel_on, chain=ch_on)
+        run = _sweep_chunk_runner(n, mode, tel=tel_on, chain=ch_on,
+                                  devices=devices)
         if tel_on or ch_on:
             carry = ((pools,)
-                     + ((_stack_tel(n_w, n, lanes),) if tel_on else ())
-                     + ((_stack_chain(plan.n_chains, lanes),)
+                     + ((_stack_tel(n_w, n, lanes_p),) if tel_on else ())
+                     + ((_stack_chain(plan.n_chains, lanes_p),)
                         if ch_on else ()))
         else:
             carry = pools
@@ -1485,19 +1653,19 @@ def _sweep_cluster_chunked(trace: Trace, configs, rng_seed: int = 0,
         if ch_on:
             wx += (_chunk_chain(cxs_np, plan.n_chains, s, e, chunk),
                    jnp.stack([_chunk_pad(cc, s, e, chunk, False)
-                              for cc in clouds]), cdl)
+                              for cc in clouds_p]), cdl)
         if failing:
             carry, nodes, outcomes = run(
                 carry, ev,
-                jnp.asarray(_chunk_mask(up_full, s, e, chunk, True, axis=1)),
-                jnp.asarray(_chunk_mask(rec_full, s, e, chunk, False,
+                jnp.asarray(_chunk_mask(up_p, s, e, chunk, True, axis=1)),
+                jnp.asarray(_chunk_mask(rec_p, s, e, chunk, False,
                                         axis=1)),
                 routing, unified, cloud, *wx)
         else:
             carry, nodes, outcomes = run(carry, ev, routing, unified,
                                          cloud, *wx)
-        nodes_out[:, s:e] = np.asarray(nodes[:, :e - s])
-        outcomes_out[:, s:e] = np.asarray(outcomes[:, :e - s])
+        nodes_out[:, s:e] = np.asarray(nodes)[:lanes, :e - s]
+        outcomes_out[:, s:e] = np.asarray(outcomes)[:lanes, :e - s]
     out = []
     invals = (np.asarray(carry[1], np.int64) if failing else None)
     tels = None
@@ -1594,7 +1762,8 @@ def _simulate_cluster_autoscale_ref(
 
 def _sweep_cluster_autoscale(
         trace: Trace, configs, autoscales, failures=None, rng_seed: int = 0,
-        mode: str = "gather", telemetry: int | None = None, chains=None
+        mode: str = "gather", telemetry: int | None = None, chains=None,
+        devices: int | None = None
         ) -> list[tuple[ClusterResult, np.ndarray, dict]]:
     """Vmapped sweep over autoscaled configs.  All configs must share
     ``n_nodes``/``max_slots`` AND all autoscales ``epoch_events`` (the
@@ -1602,6 +1771,7 @@ def _sweep_cluster_autoscale(
     membership, fracs, capacities, and per-lane failure masks vary as
     data."""
     check_step_mode(mode)
+    devices = check_devices(devices)
     autoscales = list(autoscales)
     configs, n, pools, routing, unified, cloud = _stack_configs(
         configs, "autoscale sweep")
@@ -1657,11 +1827,16 @@ def _sweep_cluster_autoscale(
                                   for cc in clouds]),
                        jnp.asarray(np.stack([p.deadline for p in chains])),
                        _stack_chain(plan.n_chains, len(configs)))
+    args = _pad_lanes(args, _sweep_autoscale_axes(masked, tel_on, ch_on),
+                      _lane_pad(len(configs), devices))
     outs = _sweep_autoscale_runner(n, mode, masked, tel=tel_on,
-                                   chain=ch_on)(*args)
+                                   chain=ch_on, devices=devices)(*args)
     nodes, outcomes, fracs, actives, invals = outs[:5]
-    nodes = np.asarray(nodes).reshape(len(configs), -1)[:, :n_events]
-    outcomes = np.asarray(outcomes).reshape(len(configs), -1)[:, :n_events]
+    # pad lanes (if any) are dropped here: only real lane rows are read
+    nodes = (np.asarray(nodes)[:len(configs)]
+             .reshape(len(configs), -1)[:, :n_events])
+    outcomes = (np.asarray(outcomes)[:len(configs)]
+                .reshape(len(configs), -1)[:, :n_events])
     fracs = np.asarray(fracs)
     out = []
     for g, c in enumerate(configs):

@@ -26,7 +26,7 @@ from ..cluster.engine import (STEP_MODES, _simulate_cluster_autoscale_jax,
                               _sweep_cluster, _sweep_cluster_autoscale,
                               _sweep_cluster_chunked,
                               _sweep_cluster_failures, check_chunk_events,
-                              check_step_mode)
+                              check_devices, check_step_mode)
 from ..core.types import Trace
 from .chains import metrics_from_arrays
 from .result import Result
@@ -140,6 +140,7 @@ def simulate(scenario: Scenario, trace: Trace, *, engine: str = "jax",
     info = {"engine": engine,
             "mode": mode if engine == "jax" else None,
             "chunk_events": chunk if engine == "jax" else None,
+            "devices": None,   # single runs are never sharded
             "rng_seed": rng_seed,
             "trace_fingerprint": trace_fingerprint(trace)}
     fracs = None
@@ -179,8 +180,8 @@ def simulate(scenario: Scenario, trace: Trace, *, engine: str = "jax",
 
 def sweep(trace: Trace, scenarios: Iterable[Scenario], *,
           engine: str = "jax", mode: str | Sequence[str] = "gather",
-          rng_seed: int = 0,
-          chunk_events: int | None = None) -> list[Result]:
+          rng_seed: int = 0, chunk_events: int | None = None,
+          devices: int | str | None = None) -> list[Result]:
     """Evaluate many scenarios on one trace; results in input order.
 
     ``mode`` (|STEP_MODES|) is one step formulation for every lane, or a
@@ -204,6 +205,18 @@ def sweep(trace: Trace, scenarios: Iterable[Scenario], *,
     stacked donated carry across all of its lanes, so replay-scale
     traces sweep with the same bounded footprint as a single run.
     Autoscaled scenarios do not compose with it (yet) and raise.
+
+    ``devices`` shards each group's stacked lane axis across that many
+    JAX devices with ``shard_map`` (``"all"`` = every visible device,
+    ``None`` = the exact pre-sharding single-device programs).  Each
+    device runs its shard of the already-vmapped scan, so results are
+    **bit-identical** to the unsharded sweep for any device count; lane
+    counts that don't divide are padded with no-op duplicate lanes that
+    are sliced off before ``Result`` assembly.  On CPU, set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before the
+    first jax import* to turn host cores into a device mesh (see
+    ``docs/sweeps.md``).  The reference engine validates and then
+    ignores it, like ``chunk_events``.
     """
     _check_engine(engine)
     scenarios = list(scenarios)
@@ -222,7 +235,10 @@ def sweep(trace: Trace, scenarios: Iterable[Scenario], *,
     chunk = None
     for s in scenarios:
         chunk = _check_chunkable(s, chunk_events)
+    dev = check_devices(devices)
     if engine == "ref":
+        # validated above, then ignored — the oracle is sequential
+        # anyway (the chunk_events precedent)
         return [simulate(s, trace, engine="ref", rng_seed=rng_seed)
                 for s in scenarios]
     plans = [_chain_plan(s, trace) for s in scenarios]
@@ -245,7 +261,7 @@ def sweep(trace: Trace, scenarios: Iterable[Scenario], *,
             []).append(i)
     results: list[Result | None] = [None] * len(scenarios)
     base_info = {"engine": engine, "chunk_events": chunk,
-                 "rng_seed": rng_seed,
+                 "devices": dev, "rng_seed": rng_seed,
                  "trace_fingerprint": trace_fingerprint(trace)}
     for (_, _, epoch, failing, telw, chained, gmode), idxs in groups.items():
         cfgs = [scenarios[i].to_cluster_config() for i in idxs]
@@ -255,10 +271,12 @@ def sweep(trace: Trace, scenarios: Iterable[Scenario], *,
             if chunk is not None:
                 outs = _sweep_cluster_chunked(trace, cfgs, rng_seed=rng_seed,
                                               mode=gmode, chunk_events=chunk,
-                                              telemetry=telw, chains=chs)
+                                              telemetry=telw, chains=chs,
+                                              devices=dev)
             else:
                 outs = _sweep_cluster(trace, cfgs, rng_seed=rng_seed,
-                                      mode=gmode, telemetry=telw, chains=chs)
+                                      mode=gmode, telemetry=telw, chains=chs,
+                                      devices=dev)
             for i, out in zip(idxs, outs):
                 raw, extras = (out, {}) if telw is None and not chained \
                     else out
@@ -270,11 +288,11 @@ def sweep(trace: Trace, scenarios: Iterable[Scenario], *,
                 pairs = _sweep_cluster_chunked(
                     trace, cfgs, rng_seed=rng_seed, mode=gmode,
                     chunk_events=chunk, failures=fails, telemetry=telw,
-                    chains=chs)
+                    chains=chs, devices=dev)
             else:
                 pairs = _sweep_cluster_failures(
                     trace, cfgs, fails, rng_seed=rng_seed, mode=gmode,
-                    telemetry=telw, chains=chs)
+                    telemetry=telw, chains=chs, devices=dev)
             for i, (raw, extras) in zip(idxs, pairs):
                 results[i] = _wrap(scenarios[i], trace, raw, extras, None,
                                    telw, info, plans[i])
@@ -282,7 +300,8 @@ def sweep(trace: Trace, scenarios: Iterable[Scenario], *,
             triples = _sweep_cluster_autoscale(
                 trace, cfgs, [scenarios[i].autoscale for i in idxs],
                 [scenarios[i].failures for i in idxs],
-                rng_seed=rng_seed, mode=gmode, telemetry=telw, chains=chs)
+                rng_seed=rng_seed, mode=gmode, telemetry=telw, chains=chs,
+                devices=dev)
             for i, (raw, fracs, extras) in zip(idxs, triples):
                 results[i] = _wrap(scenarios[i], trace, raw, extras, fracs,
                                    telw, info, plans[i])

@@ -304,7 +304,8 @@ def test_run_manifest_identity():
     assert man["trace"]["fingerprint"] == trace_fingerprint(tr)
     assert man["trace"]["n_events"] == len(tr)
     assert man["run"] == {"engine": "jax", "mode": "gather",
-                          "chunk_events": 128, "rng_seed": 0}
+                          "chunk_events": 128, "devices": None,
+                          "rng_seed": 0}
     assert man["summary"] == res.summary()
     assert {"python", "jax", "numpy", "platform"} <= set(man["versions"])
     # the manifest is JSON-serializable as-is
