@@ -79,7 +79,7 @@ def main() -> None:
     from . import (chains, cold_start, continuum_bench, drops, failures,
                    fairness, giga_sweep, policy_independence, pool_step,
                    replay, roofline, serving_bench, stress, sweep_speed,
-                   telemetry, workload_analysis)
+                   telemetry, vertical, workload_analysis)
 
     _install_compile_listener()
     suites = [
@@ -98,6 +98,7 @@ def main() -> None:
         ("telemetry(beyond-paper)", telemetry.run),
         ("pool_step(beyond-paper)", pool_step.run),
         ("replay(azure-2019)", replay.run),
+        ("vertical(beyond-paper)", vertical.run),
         ("roofline(dry-run)", roofline.run),
     ]
     filters = sys.argv[1:]

@@ -1,0 +1,108 @@
+"""Vertical scaling on the replayed Azure mix (beyond the paper).
+
+KiSS sizes containers *statically* — a container holds its declared
+memory for life.  The vertical-scaling axis (``Scenario(..., resize=)``,
+``repro.core.registry.RESIZE``) instead shrinks resident containers
+toward their observed usage under pressure, evicting only when shrinking
+cannot cover the deficit.  This suite pins the three-way trade-off on a
+schema-faithful Azure replay through deliberately tight nodes:
+
+* ``vertical_throughput``   — simulator events/sec of the hybrid lane via
+  the chunked scan (the resize lanes' extra accumulators ride the same
+  fused-step program, so this tracks their marginal cost vs replay);
+* ``vertical_static_noop``  — sanity pin: the ``"static"`` resize policy
+  serves the exact outcome mix of a no-resize run (its accumulators
+  observe, never shrink);
+* ``vertical_tradeoff``     — the headline: KiSS-static vs
+  vertical-dynamic (unified + ``fair_share``) vs hybrid (KiSS split +
+  ``fair_share``), all lanes swept on one trace — cold-start %, drop %,
+  utilization ratio, and bottleneck-event counts side by side.
+
+Returns ``(csv_lines, payload)`` with the stable-keyed summaries so
+``benchmarks/baselines/BENCH_vertical.json`` pins the trade-off across
+commits.
+"""
+from __future__ import annotations
+
+from repro.sim import Resize, Scenario, simulate, sweep
+from repro.workloads import SchemaConfig, synthesize_azure_schema, \
+    trace_from_tables
+
+from .common import csv_line, timed
+
+CHUNK = 65536
+# tight heterogeneous nodes: the replay mix must queue-pressure the warm
+# pools or no resize policy ever has a deficit to reclaim
+NODE_MB = (1024.0, 1024.0, 2048.0, 2048.0)
+MIN_MB = 32.0            # fair_share reclamation floor per container
+
+# ~170k invocations: 400 functions over four simulated hours
+SCHEMA = SchemaConfig(n_funcs=400, n_minutes=240, rpm_total=700.0, seed=0)
+
+
+def _lanes():
+    rz = Resize("fair_share", min_mb=MIN_MB)
+    kiss = Scenario.cluster(NODE_MB, routing="size_aware", max_slots=128,
+                            name="kiss_static")
+    vert = Scenario.cluster(NODE_MB, unified=True, routing="size_aware",
+                            max_slots=128, resize=rz,
+                            name="vertical_dynamic")
+    hybrid = Scenario.cluster(NODE_MB, routing="size_aware", max_slots=128,
+                              resize=rz, name="hybrid")
+    return kiss, vert, hybrid
+
+
+def run():
+    tables = synthesize_azure_schema(SCHEMA)
+    tr = trace_from_tables(tables)
+    t_len = len(tr)
+    kiss, vert, hybrid = _lanes()
+    out, payload = [], {"vertical_n_events": t_len}
+
+    # warm the compile cache, then measure steady-state chunked replay of
+    # the resize-enabled hybrid lane
+    simulate(hybrid, tr.head(CHUNK), chunk_events=CHUNK)
+    res_h, dt = timed(simulate, hybrid, tr, chunk_events=CHUNK)
+    eps = t_len / dt
+    out.append(csv_line(
+        "vertical_throughput", dt * 1e6 / t_len,
+        f"{eps:,.0f} events/s ({t_len} events, chunk={CHUNK}, "
+        f"resize=fair_share)"))
+    payload["vertical_events_per_sec"] = eps
+
+    # "static" resize must reproduce the no-resize outcome mix exactly —
+    # only the (new) utilization keys may differ from the plain lane
+    static = Scenario.cluster(NODE_MB, routing="size_aware", max_slots=128,
+                              resize="static", name="kiss_rz_static")
+    s_plain = simulate(kiss, tr, chunk_events=CHUNK).summary()
+    s_static = simulate(static, tr, chunk_events=CHUNK).summary()
+    drift = {k for k, v in s_plain.items()
+             if k not in ("utilization_ratio", "bottleneck_events")
+             and s_static[k] != v}
+    if drift:
+        raise AssertionError(
+            f"'static' resize changed outcome keys vs no-resize: {drift}")
+    out.append(csv_line(
+        "vertical_static_noop", 0.0,
+        f"static-resize outcome keys == no-resize: True "
+        f"(observed util={s_static['utilization_ratio']:.3f})"))
+    payload["vertical_static"] = s_static
+
+    # the headline three-way sweep (sim.sweep buckets the resize-off lane
+    # apart from the two resize-on lanes automatically)
+    lanes, dt3 = timed(sweep, tr, [kiss, vert, hybrid], chunk_events=CHUNK)
+    s_k, s_v, s_h = (r.summary() for r in lanes)
+    payload["vertical_kiss_static"] = s_k
+    payload["vertical_dynamic"] = s_v
+    payload["vertical_hybrid"] = s_h
+    out.append(csv_line(
+        "vertical_tradeoff", dt3 * 1e6 / (3 * t_len),
+        f"cold%={s_k['cold_start_pct']:.1f}/{s_v['cold_start_pct']:.1f}/"
+        f"{s_h['cold_start_pct']:.1f} "
+        f"drop%={s_k['drop_pct']:.1f}/{s_v['drop_pct']:.1f}/"
+        f"{s_h['drop_pct']:.1f} "
+        f"util={s_k['utilization_ratio']:.2f}/{s_v['utilization_ratio']:.2f}/"
+        f"{s_h['utilization_ratio']:.2f} "
+        f"bneck={s_k['bottleneck_events']}/{s_v['bottleneck_events']}/"
+        f"{s_h['bottleneck_events']} (kiss/dynamic/hybrid)"))
+    return out, payload

@@ -16,7 +16,9 @@ export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 # scan == monolithic scan, the telemetry smoke pins
 # windows-sum-to-totals + a valid trace-event export, and the chain
 # smoke pins per-chain accounting consistency + the slack_aware win
-# over sticky under a 2-node outage
+# over sticky under a 2-node outage, and the resize smoke pins vertical
+# scaling: "static" == resize-off outcomes, fair_share JAX == oracle
+# with a live utilization ratio
 python - <<'EOF'
 import numpy as np
 from repro.sim import (Autoscale, Chains, Failures, Scenario, simulate,
@@ -92,6 +94,21 @@ for r in (st, sa):
     assert int(r.timeline().chain_miss.sum()) == int(cm.missed.sum())
 assert sa.deadline_miss_pct < st.deadline_miss_pct, \
     (sa.deadline_miss_pct, st.deadline_miss_pct)
+# resize smoke: vertical scaling end to end — the observe-only "static"
+# policy must keep the resize-off outcome mix, and a fair_share run must
+# match the numpy oracle summary-identically with real utilization
+# accounting (full matrix: tests/test_invariants.py)
+from repro.sim import Resize, resize_policies
+assert {"static", "fair_share"} <= set(resize_policies())
+plain = simulate(Scenario.kiss(256.0, max_slots=16), tr)
+rz_st = simulate(Scenario.kiss(256.0, max_slots=16, resize="static"), tr)
+assert (rz_st.outcome == plain.outcome).all()
+assert plain.vertical is None and rz_st.utilization_ratio > 0.0
+fair = Scenario.kiss(256.0, max_slots=16,
+                     resize=Resize("fair_share", min_mb=16.0))
+rz_j, rz_r = simulate(fair, tr), simulate(fair, tr, engine="ref")
+assert rz_j.summary() == rz_r.summary()
+assert 0.0 < rz_j.summary()["utilization_ratio"] <= 1.0
 EOF
 # sharded-sweep smoke: a fresh process (XLA_FLAGS must precede the first
 # jax import) forces a 4-device host mesh and pins sharded == unsharded
@@ -149,4 +166,6 @@ exec python -m pytest -q -m "not slow" \
     tests/test_chains.py \
     tests/test_pool_kernel.py \
     tests/test_sharded_sweep.py \
+    tests/test_invariants.py \
+    tests/test_presets_apps.py \
     "$@"

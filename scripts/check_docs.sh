@@ -2,7 +2,8 @@
 # Docs gate, run by the CI `docs` job (and `make docs-check`):
 #   1. every relative markdown link in *.md resolves to a real file;
 #   2. every ```python block in docs/scenarios.md, docs/observability.md,
-#      docs/chains.md, docs/kernels.md and docs/sweeps.md actually runs
+#      docs/chains.md, docs/kernels.md, docs/sweeps.md and
+#      docs/vertical.md actually runs
 #      (each block is self-contained by convention — see the files'
 #      preambles).
 # External http(s) links are NOT fetched (CI must not depend on the
@@ -55,7 +56,8 @@ import re
 import sys
 
 for doc in ("docs/scenarios.md", "docs/observability.md",
-            "docs/chains.md", "docs/kernels.md", "docs/sweeps.md"):
+            "docs/chains.md", "docs/kernels.md", "docs/sweeps.md",
+            "docs/vertical.md"):
     src = pathlib.Path(doc).read_text()
     blocks = re.findall(r"```python\n(.*?)```", src, re.DOTALL)
     if not blocks:

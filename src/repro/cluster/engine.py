@@ -73,7 +73,7 @@ from ..core.continuum import (Autoscale, ChainPlan, ClusterConfig, Failures,
                               route_hashes)
 from ..core.pool_jax import (Event, PoolState, get_step_backend, init_pool,
                              pool_resize, pool_step, pool_step_batch)
-from ..core.registry import ROUTING, RouteCtx
+from ..core.registry import ROUTING, RouteCtx, observed_usage
 from ..core.types import DROP, HIT, MISS, PoolConfig, Trace
 from .metrics import ClusterResult, build_result
 
@@ -142,7 +142,13 @@ def check_devices(devices) -> int | None:
 
 
 class ClusterEvent(NamedTuple):
-    """One invocation + its precomputed node hashes."""
+    """One invocation + its precomputed node hashes.
+
+    ``used`` is the deterministic observed memory usage the vertical-
+    scaling (resize) path records on a cold start — precomputed host-side
+    by ``observed_usage`` and ``None`` (vanishing from the pytree, so
+    resize-off programs are byte-identical to pre-resize ones) whenever
+    the scenario has no resize policy."""
 
     t: jax.Array
     func_id: jax.Array
@@ -152,9 +158,11 @@ class ClusterEvent(NamedTuple):
     cold: jax.Array
     h1: jax.Array     # sticky hash: func_id % n_nodes
     h2: jax.Array     # second (Knuth multiplicative) hash
+    used: jax.Array | None = None   # f32 observed usage (resize only)
 
 
-def cluster_events(trace: Trace, n_nodes: int) -> ClusterEvent:
+def cluster_events(trace: Trace, n_nodes: int, *,
+                   resize: bool = False) -> ClusterEvent:
     h1, h2 = route_hashes(trace.func_id, n_nodes)
     return ClusterEvent(
         t=jnp.asarray(trace.t, jnp.float32),
@@ -165,13 +173,19 @@ def cluster_events(trace: Trace, n_nodes: int) -> ClusterEvent:
         cold=jnp.asarray(trace.cold_dur, jnp.float32),
         h1=jnp.asarray(h1, jnp.int32),
         h2=jnp.asarray(h2, jnp.int32),
+        used=(jnp.asarray(observed_usage(
+            np, np.asarray(trace.func_id, np.int32),
+            np.asarray(trace.size_mb, np.float32)))
+            if resize else None),
     )
 
 
 def init_cluster(cfg: ClusterConfig) -> PoolState:
     """Stack all 2N pools of the cluster on a leading axis."""
     caps = cfg.pool_caps()
-    states = [init_pool(PoolConfig(caps[n, k], cfg.policy, cfg.max_slots))
+    states = [init_pool(PoolConfig(caps[n, k], cfg.policy, cfg.max_slots,
+                                   resize_policy=cfg.resize_policy,
+                                   resize_min_mb=cfg.resize_min_mb))
               for n in range(cfg.n_nodes) for k in range(2)]
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
 
@@ -202,11 +216,19 @@ def _invalidate_nodes(pools: PoolState, mask_n: jax.Array, n_nodes: int):
     cnt2 = jnp.sum(pools.valid, axis=-1).astype(jnp.int32)       # i32[2N]
     cnt = jnp.where(mask_n, cnt2.reshape(n_nodes, 2).sum(axis=1), 0)
     m2 = jnp.repeat(mask_n, 2)                                   # bool[2N]
+    extra = {}
+    if pools.alloc is not None:
+        # the residents' limits/usage die with them; the run-total
+        # accumulators (acc_used/acc_alloc/bneck) persist, like the
+        # oracle's ``WarmPool.invalidate``
+        extra = dict(
+            alloc=jnp.where(m2[:, None], jnp.float32(0.0), pools.alloc),
+            used=jnp.where(m2[:, None], jnp.float32(0.0), pools.used))
     pools = pools._replace(
         valid=jnp.where(m2[:, None], False, pools.valid),
         func_id=jnp.where(m2[:, None], jnp.int32(-1), pools.func_id),
         free=jnp.where(m2, pools.capacity, pools.free),
-        clock=jnp.where(m2, jnp.float32(0.0), pools.clock))
+        clock=jnp.where(m2, jnp.float32(0.0), pools.clock), **extra)
     return cnt, pools
 
 
@@ -498,7 +520,8 @@ def _make_step(routing: jax.Array, unified: jax.Array, cloud: jax.Array,
                       no_stage if cstage is None else cstage)
         ok = jnp.bool_(True) if up_n is None else up_n[node]
         p = node * 2 + tgt[node]
-        core_ev = Event(ev.t, ev.func_id, ev.size, ev.cls, ev.warm, ev.cold)
+        core_ev = Event(ev.t, ev.func_id, ev.size, ev.cls, ev.warm, ev.cold,
+                        ev.used)
         if mode == "gather":
             one = tree(lambda a: a[p], pools)
             new_one, outcome = pool_step(one, core_ev)
@@ -528,6 +551,26 @@ def _make_step(routing: jax.Array, unified: jax.Array, cloud: jax.Array,
     return step
 
 
+def _vert_of(pools: PoolState) -> tuple:
+    """The vertical-scaling run totals of a final pool state, as a
+    one-element tuple to splice onto a runner's outputs — empty when
+    resize is off, so resize-off output shapes stay byte-identical.
+    Always the LAST output element (after telemetry and chains)."""
+    if pools.alloc is None:
+        return ()
+    return ((pools.acc_used, pools.acc_alloc, pools.bneck),)
+
+
+def _vert_np(vert) -> dict:
+    """Host-side view of a ``_vert_of`` element: per-pool run totals in
+    the stacked node-major [2N] layout (or [L, 2N] sweep-lane slices) —
+    the JAX twin of the oracle's ``_vertical()`` extras."""
+    acc_used, acc_alloc, bneck = vert
+    return {"acc_used_mb": np.asarray(acc_used, np.float32),
+            "acc_alloc_mb": np.asarray(acc_alloc, np.float32),
+            "bottlenecks": np.asarray(bneck, np.int64)}
+
+
 def _run_cluster_impl(pools: PoolState, events: ClusterEvent,
                       routing: jax.Array, unified: jax.Array,
                       cloud: jax.Array, widx=None, tel=None, cxs=None,
@@ -542,8 +585,8 @@ def _run_cluster_impl(pools: PoolState, events: ClusterEvent,
     step = _make_step(routing, unified, cloud, n_nodes, mode)
     tel_on, ch_on = tel is not None, chain is not None
     if not tel_on and not ch_on:
-        _, (nodes, outcomes) = jax.lax.scan(step, pools, events)
-        return nodes, outcomes
+        c_end, (nodes, outcomes) = jax.lax.scan(step, pools, events)
+        return (nodes, outcomes) + _vert_of(c_end)
     n_up = jnp.int32(n_nodes)
 
     def s(carry, x):
@@ -578,7 +621,7 @@ def _run_cluster_impl(pools: PoolState, events: ClusterEvent,
         out = out + (c_end[1],)
     if ch_on:
         out = out + (c_end[-1],)
-    return out
+    return out + _vert_of(c_end[0])
 
 
 def _run_failures_impl(pools: PoolState, events: ClusterEvent,
@@ -634,7 +677,7 @@ def _run_failures_impl(pools: PoolState, events: ClusterEvent,
         out = out + (c_end[2],)
     if ch_on:
         out = out + (c_end[-1],)
-    return out
+    return out + _vert_of(c_end[0])
 
 
 def _run_autoscale_impl(pools: PoolState, events: ClusterEvent,
@@ -799,7 +842,7 @@ def _run_autoscale_impl(pools: PoolState, events: ClusterEvent,
         out = out + (c_end[4],)
     if ch_on:
         out = out + (c_end[-1],)
-    return out
+    return out + _vert_of(c_end[0])
 
 
 _run_cluster = jax.jit(_run_cluster_impl,
@@ -973,7 +1016,8 @@ def _epoch_grid(events: ClusterEvent, n_events: int, epoch_events: int,
         last_t = events.t[-1] if n_events else jnp.float32(0.0)
         fills = ClusterEvent(
             t=last_t, func_id=-2, size=drop_size, cls=0, warm=0.0, cold=0.0,
-            h1=0, h2=0)
+            h1=0, h2=0,
+            used=None if events.used is None else 0.0)
         events = jax.tree_util.tree_map(
             lambda a, f: jnp.concatenate(
                 [a, jnp.full((pad,), f, a.dtype)]), events, fills)
@@ -1044,7 +1088,8 @@ def _simulate_cluster_jax(cfg: ClusterConfig, trace: Trace,
     ``(result, extras)`` with ``"telemetry"`` window arrays /
     ``"chains"`` per-chain arrays."""
     check_step_mode(mode)
-    events = cluster_events(trace, cfg.n_nodes)
+    rz_on = cfg.resize_policy is not None
+    events = cluster_events(trace, cfg.n_nodes, resize=rz_on)
     cloud_cold = cloud_cold_draws(len(trace), cfg.cloud_cold_prob, rng_seed)
     args = (init_cluster(cfg), events, jnp.int32(int(cfg.routing)),
             jnp.asarray(cfg.unified, bool), _cloud_vec(cfg))
@@ -1061,13 +1106,16 @@ def _simulate_cluster_jax(cfg: ClusterConfig, trace: Trace,
     node, outcome = outs[0], outs[1]
     result = build_result(cfg, trace, np.asarray(node), np.asarray(outcome),
                           cloud_cold)
-    if telemetry is None and chains is None:
+    if telemetry is None and chains is None and not rz_on:
         return result
     extras = {}
     if telemetry is not None:
         extras["telemetry"] = _tel_np(outs[2], n_w)
     if chains is not None:
-        extras["chains"] = _chain_np(outs[-1], chains.n_chains)
+        extras["chains"] = _chain_np(outs[-2] if rz_on else outs[-1],
+                                     chains.n_chains)
+    if rz_on:
+        extras["vertical"] = _vert_np(outs[-1])
     return result, extras
 
 
@@ -1080,7 +1128,8 @@ def _simulate_cluster_ref(cfg: ClusterConfig, trace: Trace,
                                chains=chains,
                                chain_cold=(cloud_cold if chains is not None
                                            else None))
-    if telemetry is None and chains is None:
+    if (telemetry is None and chains is None
+            and cfg.resize_policy is None):
         node, outcome = out
         return build_result(cfg, trace, node, outcome, cloud_cold)
     node, outcome, extras = out
@@ -1098,6 +1147,13 @@ def _stack_configs(configs, what: str):
     if any(c.n_nodes != n or c.max_slots != slots for c in configs):
         raise ValueError(f"{what}: configs must share n_nodes and "
                          f"max_slots")
+    rz = configs[0].resize_policy is not None
+    if any((c.resize_policy is not None) != rz for c in configs):
+        # which policy runs is data (the code vmaps per lane); whether the
+        # resize fields exist at all changes the compiled pytree shapes
+        raise ValueError(f"{what}: configs must agree on vertical scaling "
+                         "on/off (repro.sim.sweep buckets mixed groups "
+                         "for you)")
     pools = jax.tree_util.tree_map(
         lambda *xs: jnp.stack(xs), *[init_cluster(c) for c in configs])
     routing = jnp.asarray([int(c.routing) for c in configs], jnp.int32)
@@ -1146,7 +1202,8 @@ def _sweep_cluster(trace: Trace, configs, rng_seed: int = 0,
     devices = check_devices(devices)
     configs, n, pools, routing, unified, cloud = _stack_configs(
         configs, "sweep_cluster")
-    events = cluster_events(trace, n)
+    rz_on = configs[0].resize_policy is not None
+    events = cluster_events(trace, n, resize=rz_on)
     tel_on, ch_on = telemetry is not None, chains is not None
     args = (pools, events, routing, unified, cloud)
     n_w = None if not tel_on else _n_windows(len(trace), telemetry)
@@ -1174,8 +1231,12 @@ def _sweep_cluster(trace: Trace, configs, rng_seed: int = 0,
             lane = jax.tree_util.tree_map(lambda a: a[g], outs[2])
             extras["telemetry"] = _tel_np(lane, n_w)
         if ch_on:
-            lane = jax.tree_util.tree_map(lambda a: a[g], outs[-1])
+            lane = jax.tree_util.tree_map(
+                lambda a: a[g], outs[-2] if rz_on else outs[-1])
             extras["chains"] = _chain_np(lane, plan.n_chains)
+        if rz_on:
+            extras["vertical"] = _vert_np(
+                tuple(np.asarray(a)[g] for a in outs[-1]))
         out.append((res, extras) if extras else res)
     return out
 
@@ -1196,10 +1257,12 @@ def _simulate_cluster_failures_jax(
     per-node ``invalidated`` resident counts (plus ``"telemetry"`` window
     arrays / ``"chains"`` per-chain arrays when requested)."""
     check_step_mode(mode)
+    rz_on = cfg.resize_policy is not None
     up, recover = _failure_masks(failures, trace, cfg.n_nodes)
     cloud_cold = cloud_cold_draws(len(trace), cfg.cloud_cold_prob, rng_seed)
     tel_on, ch_on = telemetry is not None, chains is not None
-    args = (init_cluster(cfg), cluster_events(trace, cfg.n_nodes),
+    args = (init_cluster(cfg),
+            cluster_events(trace, cfg.n_nodes, resize=rz_on),
             jnp.asarray(up), jnp.asarray(recover),
             jnp.int32(int(cfg.routing)), jnp.asarray(cfg.unified, bool),
             _cloud_vec(cfg))
@@ -1218,7 +1281,10 @@ def _simulate_cluster_failures_jax(
     if tel_on:
         extras["telemetry"] = _tel_np(outs[3], n_w)
     if ch_on:
-        extras["chains"] = _chain_np(outs[-1], chains.n_chains)
+        extras["chains"] = _chain_np(outs[-2] if rz_on else outs[-1],
+                                     chains.n_chains)
+    if rz_on:
+        extras["vertical"] = _vert_np(outs[-1])
     extras.update(invalidated=np.asarray(inval, np.int64), node_up=up)
     return (build_result(cfg, trace, np.asarray(node), np.asarray(outcome),
                          cloud_cold), extras)
@@ -1254,8 +1320,9 @@ def _sweep_cluster_failures(
     up = np.stack([m[0] for m in masks])
     recover = np.stack([m[1] for m in masks])
     tel_on, ch_on = telemetry is not None, chains is not None
-    args = (pools, cluster_events(trace, n), jnp.asarray(up),
-            jnp.asarray(recover), routing, unified, cloud)
+    rz_on = configs[0].resize_policy is not None
+    args = (pools, cluster_events(trace, n, resize=rz_on),
+            jnp.asarray(up), jnp.asarray(recover), routing, unified, cloud)
     n_w = None if not tel_on else _n_windows(len(trace), telemetry)
     if tel_on or ch_on:
         args = args + ((None, None) if not tel_on else
@@ -1278,8 +1345,12 @@ def _sweep_cluster_failures(
             lane = jax.tree_util.tree_map(lambda a: a[g], outs[3])
             extras["telemetry"] = _tel_np(lane, n_w)
         if ch_on:
-            lane = jax.tree_util.tree_map(lambda a: a[g], outs[-1])
+            lane = jax.tree_util.tree_map(
+                lambda a: a[g], outs[-2] if rz_on else outs[-1])
             extras["chains"] = _chain_np(lane, plan.n_chains)
+        if rz_on:
+            extras["vertical"] = _vert_np(
+                tuple(np.asarray(a)[g] for a in outs[-1]))
         cc = (clouds[g] if ch_on
               else cloud_cold_draws(len(trace), c.cloud_cold_prob,
                                     rng_seed))
@@ -1455,18 +1526,22 @@ def _sweep_failures_chunk_runner(n_nodes: int, mode: str,
         donate_argnums=(0,))
 
 
-def _host_events(trace: Trace, n_nodes: int) -> ClusterEvent:
+def _host_events(trace: Trace, n_nodes: int, *,
+                 resize: bool = False) -> ClusterEvent:
     """Numpy twin of :func:`cluster_events`: the whole trace stays host-
     side and chunked replay uploads one slice at a time."""
     h1, h2 = route_hashes(trace.func_id, n_nodes)
+    fid = np.asarray(trace.func_id, np.int32)
+    size = np.asarray(trace.size_mb, np.float32)
     return ClusterEvent(
         t=np.asarray(trace.t, np.float32),
-        func_id=np.asarray(trace.func_id, np.int32),
-        size=np.asarray(trace.size_mb, np.float32),
+        func_id=fid,
+        size=size,
         cls=np.asarray(trace.cls, np.int32),
         warm=np.asarray(trace.warm_dur, np.float32),
         cold=np.asarray(trace.cold_dur, np.float32),
-        h1=h1, h2=h2)
+        h1=h1, h2=h2,
+        used=observed_usage(np, fid, size) if resize else None)
 
 
 def _chunk_slice(ev: ClusterEvent, s: int, e: int, chunk: int,
@@ -1479,7 +1554,8 @@ def _chunk_slice(ev: ClusterEvent, s: int, e: int, chunk: int,
     if pad:
         last_t = sl.t[-1] if e > s else np.float32(0.0)
         fills = ClusterEvent(t=last_t, func_id=-2, size=drop_size, cls=0,
-                             warm=0.0, cold=0.0, h1=0, h2=0)
+                             warm=0.0, cold=0.0, h1=0, h2=0,
+                             used=None if ev.used is None else 0.0)
         sl = jax.tree_util.tree_map(
             lambda a, f: np.concatenate([a, np.full(pad, f, a.dtype)]),
             sl, fills)
@@ -1514,7 +1590,8 @@ def _simulate_cluster_chunked_jax(
     check_step_mode(mode)
     chunk = check_chunk_events(chunk_events)
     n, t_len = cfg.n_nodes, len(trace)
-    ev_np = _host_events(trace, n)
+    rz_on = cfg.resize_policy is not None
+    ev_np = _host_events(trace, n, resize=rz_on)
     routing = jnp.int32(int(cfg.routing))
     unified = jnp.asarray(cfg.unified, bool)
     cloud = _cloud_vec(cfg)
@@ -1566,6 +1643,11 @@ def _simulate_cluster_chunked_jax(
             carry[1 if failures is None else 2], n_w)
     if ch_on:
         extras["chains"] = _chain_np(carry[-1], chains.n_chains)
+    if rz_on:
+        # the accumulators ride the threaded carry's pool state, so the
+        # final chunk's pools already hold the whole-trace totals
+        p_end = carry if isinstance(carry, PoolState) else carry[0]
+        extras["vertical"] = _vert_np(_vert_of(p_end)[0])
     if failures is None:
         return result if not extras else (result, extras)
     extras.update(invalidated=np.asarray(carry[1], np.int64),
@@ -1592,13 +1674,14 @@ def _sweep_cluster_chunked(trace: Trace, configs, rng_seed: int = 0,
     tel_on, ch_on = telw is not None, chains is not None
     configs, n, pools, routing, unified, cloud = _stack_configs(
         configs, "chunked sweep")
+    rz_on = configs[0].resize_policy is not None
     t_len, lanes = len(trace), len(configs)
     pad = _lane_pad(lanes, devices)
     lanes_p = lanes + pad
     pools = _pad_tree(pools, pad)
     routing, unified, cloud = (_pad_tree(a, pad)
                                for a in (routing, unified, cloud))
-    ev_np = _host_events(trace, n)
+    ev_np = _host_events(trace, n, resize=rz_on)
     drop = max(_drop_size(c) for c in configs)
     n_w = None if telw is None else _n_windows(t_len, telw)
     clouds = plan = cxs_np = cdl = None
@@ -1672,6 +1755,7 @@ def _sweep_cluster_chunked(trace: Trace, configs, rng_seed: int = 0,
     if tel_on:
         tels = carry[2] if failing else carry[1]
     chs = carry[-1] if ch_on else None
+    p_end = carry if isinstance(carry, PoolState) else carry[0]
     for g, c in enumerate(configs):
         cc = (clouds[g] if ch_on
               else cloud_cold_draws(t_len, c.cloud_cold_prob, rng_seed))
@@ -1683,6 +1767,9 @@ def _sweep_cluster_chunked(trace: Trace, configs, rng_seed: int = 0,
         if ch_on:
             lane = jax.tree_util.tree_map(lambda a: a[g], chs)
             extras["chains"] = _chain_np(lane, plan.n_chains)
+        if rz_on:
+            extras["vertical"] = _vert_np(
+                tuple(np.asarray(a)[g] for a in _vert_of(p_end)[0]))
         if failing:
             extras.update(invalidated=invals[g], node_up=up_full[g])
         out.append((res, extras) if extras else res)
@@ -1709,8 +1796,10 @@ def _simulate_cluster_autoscale_jax(
     check_step_mode(mode)
     n_events = len(trace)
     e = asc.epoch_events
-    epochs, valid = _epoch_grid(cluster_events(trace, cfg.n_nodes),
-                                n_events, e, _drop_size(cfg))
+    rz_on = cfg.resize_policy is not None
+    epochs, valid = _epoch_grid(
+        cluster_events(trace, cfg.n_nodes, resize=rz_on),
+        n_events, e, _drop_size(cfg))
     masked = failures is not None
     tel_on, ch_on = telemetry is not None, chains is not None
     up = up_g = rec_g = None
@@ -1742,7 +1831,10 @@ def _simulate_cluster_autoscale_jax(
     if tel_on:
         extras["telemetry"] = _tel_np(outs[5], n_w)
     if ch_on:
-        extras["chains"] = _chain_np(outs[-1], chains.n_chains)
+        extras["chains"] = _chain_np(outs[-2] if rz_on else outs[-1],
+                                     chains.n_chains)
+    if rz_on:
+        extras["vertical"] = _vert_np(outs[-1])
     return (build_result(cfg, trace, node, outcome, cloud_cold),
             np.asarray(fracs), extras)
 
@@ -1790,9 +1882,10 @@ def _sweep_cluster_autoscale(
     frac0, node_mb, asc_vec, active0 = (jnp.stack([p[i] for p in per_cfg])
                                         for i in range(4))
     n_events = len(trace)
+    rz_on = configs[0].resize_policy is not None
     drop_size = max(_drop_size(c) for c in configs)
-    epochs, valid = _epoch_grid(cluster_events(trace, n), n_events, e,
-                                drop_size)
+    epochs, valid = _epoch_grid(cluster_events(trace, n, resize=rz_on),
+                                n_events, e, drop_size)
     # any lane with a schedule forces the masked program for the group
     # (lanes without one ride along on all-up masks — same arithmetic);
     # repro.sim.sweep buckets failure-free lanes separately
@@ -1846,8 +1939,12 @@ def _sweep_cluster_autoscale(
             lane = jax.tree_util.tree_map(lambda a: a[g], outs[5])
             extras["telemetry"] = _tel_np(lane, n_w)
         if ch_on:
-            lane = jax.tree_util.tree_map(lambda a: a[g], outs[-1])
+            lane = jax.tree_util.tree_map(
+                lambda a: a[g], outs[-2] if rz_on else outs[-1])
             extras["chains"] = _chain_np(lane, plan.n_chains)
+        if rz_on:
+            extras["vertical"] = _vert_np(
+                tuple(np.asarray(a)[g] for a in outs[-1]))
         cc = (clouds[g] if ch_on
               else cloud_cold_draws(n_events, c.cloud_cold_prob, rng_seed))
         out.append((build_result(c, trace, nodes[g], outcomes[g], cc),

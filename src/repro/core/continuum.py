@@ -38,7 +38,7 @@ import numpy as np
 
 from .compat import deprecated
 from .pool_ref import WarmPool
-from .registry import REPLACEMENT, ROUTING, RouteCtx
+from .registry import REPLACEMENT, RESIZE, ROUTING, RouteCtx
 from .types import (DROP, HIT, MISS, ClassMetrics, Policy, PoolConfig,
                     Trace)
 
@@ -233,6 +233,11 @@ class ClusterConfig:
     cloud_rtt_s: float = 0.25         # edge->cloud round trip
     cloud_cold_prob: float = 0.05     # cloud has big warm pools
     max_slots: int = 1024             # per-pool slot count, as PoolConfig
+    # vertical scaling: a registered resize policy (name | code) shrinks
+    # residents toward observed usage under pressure before evicting;
+    # None turns the feature off entirely (the pre-resize programs)
+    resize_policy: int | str | None = None
+    resize_min_mb: float = 0.0
 
     def __post_init__(self):
         n = len(self.node_mb)
@@ -247,6 +252,11 @@ class ClusterConfig:
         pcode = REPLACEMENT.resolve(self.policy)
         object.__setattr__(
             self, "policy", Policy(pcode) if pcode < len(Policy) else pcode)
+        if self.resize_policy is not None:
+            object.__setattr__(self, "resize_policy",
+                               RESIZE.resolve(self.resize_policy))
+        if self.resize_min_mb < 0.0:
+            raise ValueError("resize_min_mb must be >= 0")
 
     @property
     def n_nodes(self) -> int:
@@ -424,6 +434,12 @@ def cluster_outcomes_ref(cfg: ClusterConfig, trace: Trace,
     with chains returns ``(node, outcome, extras)``); with telemetry the
     window arrays additionally count per-window deadline misses.
 
+    With a configured ``cfg.resize_policy`` (vertical scaling) the run
+    always returns an extras dict carrying ``extras["vertical"]``:
+    per-pool ``acc_used_mb``/``acc_alloc_mb``/``bottlenecks`` totals in
+    the engine's stacked node-major ``[2N]`` pool layout, every f32
+    accumulation mirrored step for step.
+
     The routing decision calls the registered policy function with numpy
     float32 inputs — the same pure function the JAX engine compiles — so
     any policy added via ``@register_routing`` runs here unchanged.  With
@@ -436,9 +452,23 @@ def cluster_outcomes_ref(cfg: ClusterConfig, trace: Trace,
     """
     n = cfg.n_nodes
     caps = cfg.pool_caps()
-    pools = [[WarmPool(PoolConfig(caps[i, 0], cfg.policy, cfg.max_slots)),
-              WarmPool(PoolConfig(caps[i, 1], cfg.policy, cfg.max_slots))]
-             for i in range(n)]
+    rz_on = cfg.resize_policy is not None
+    pools = [[WarmPool(PoolConfig(caps[i, k], cfg.policy, cfg.max_slots,
+                                  resize_policy=cfg.resize_policy,
+                                  resize_min_mb=cfg.resize_min_mb))
+              for k in (0, 1)] for i in range(n)]
+
+    def _vertical() -> dict:
+        """Per-pool vertical-scaling totals in the engine's stacked
+        ``[2N]`` (node-major) pool layout — f32 values bit-identical to
+        the JAX carry's accumulators."""
+        flat = [pools[j][k] for j in range(n) for k in (0, 1)]
+        return {"acc_used_mb": np.array(
+                    [np.float32(p.acc_used) for p in flat], np.float32),
+                "acc_alloc_mb": np.array(
+                    [np.float32(p.acc_alloc) for p in flat], np.float32),
+                "bottlenecks": np.array(
+                    [p.bneck for p in flat], np.int64)}
     h1, h2 = route_hashes(trace.func_id, n)
     unified = np.asarray(cfg.unified, bool)
     cap_f32 = caps.astype(np.float32)
@@ -566,13 +596,16 @@ def cluster_outcomes_ref(cfg: ClusterConfig, trace: Trace,
             run_event(i, eu)
             if tel is not None:
                 tel_event(i, int(eu.sum()) if up_mask is not None else n, n)
-        if failures is None and tel is None and chains is None:
+        if failures is None and tel is None and chains is None \
+                and not rz_on:
             return node_out, outcome_out
         extras = {} if tel is None else {"telemetry": tel}
         if failures is not None:
             extras.update(invalidated=invalidated, node_up=up_mask)
         if chains is not None:
             extras["chains"] = chain_np()
+        if rz_on:
+            extras["vertical"] = _vertical()
         return node_out, outcome_out, extras
 
     # -- autoscaled path: epoch loop with float32-mirrored re-splitting ----
@@ -665,6 +698,8 @@ def cluster_outcomes_ref(cfg: ClusterConfig, trace: Trace,
         extras["telemetry"] = tel
     if chains is not None:
         extras["chains"] = chain_np()
+    if rz_on:
+        extras["vertical"] = _vertical()
     return node_out, outcome_out, fracs, extras
 
 

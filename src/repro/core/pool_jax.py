@@ -24,7 +24,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .registry import REPLACEMENT, ROUTING, SlotStats, replacement_priority
+from .registry import (REPLACEMENT, RESIZE, ROUTING, ResizeCtx, SlotStats,
+                       replacement_priority, shrink_amounts)
 from .types import DROP, HIT, MISS, Policy, PoolConfig
 
 _INF = jnp.float32(jnp.inf)
@@ -33,9 +34,20 @@ _INF = jnp.float32(jnp.inf)
 # compiled programs baked in the previous registry: drop the trace caches.
 ROUTING.on_register(jax.clear_caches)
 REPLACEMENT.on_register(jax.clear_caches)
+RESIZE.on_register(jax.clear_caches)
 
 
 class PoolState(NamedTuple):
+    """Warm-pool scan state.
+
+    The trailing fields are the vertical-scaling (resize) extension and
+    default to ``None``: ``None`` leaves vanish from the JAX pytree, so a
+    pool built without a resize policy flattens to the exact pre-resize
+    leaves and every engine compiles the exact pre-resize programs — the
+    ``resize=None`` fast path is not a runtime branch, it is the same
+    jaxpr.
+    """
+
     # per-slot arrays (S = max_slots)
     func_id: jax.Array    # i32[S], -1 = empty
     size: jax.Array       # f32[S] MB
@@ -51,6 +63,14 @@ class PoolState(NamedTuple):
     clock: jax.Array      # f32 GreedyDual inflation clock
     next_seq: jax.Array   # f32
     policy: jax.Array     # i32 (Policy enum value)
+    # vertical scaling (all None when resize is off)
+    alloc: jax.Array | None = None      # f32[S] current limit (MB)
+    used: jax.Array | None = None       # f32[S] observed usage (MB)
+    rz_policy: jax.Array | None = None  # i32 resize policy code
+    rz_min: jax.Array | None = None     # f32 limit floor (MB)
+    acc_used: jax.Array | None = None   # f32 sum of used over served events
+    acc_alloc: jax.Array | None = None  # f32 sum of alloc over served events
+    bneck: jax.Array | None = None      # i32 hits on shrunken residents
 
 
 class Event(NamedTuple):
@@ -60,10 +80,14 @@ class Event(NamedTuple):
     cls: jax.Array
     warm: jax.Array
     cold: jax.Array
+    # observed usage of the launched container (``observed_usage``);
+    # None when resize is off so chainless pytrees are unchanged
+    used: jax.Array | None = None
 
 
 def init_pool(cfg: PoolConfig) -> PoolState:
     s = cfg.max_slots
+    rz = cfg.resize_policy is not None
     return PoolState(
         func_id=jnp.full((s,), -1, jnp.int32),
         size=jnp.zeros((s,), jnp.float32),
@@ -78,6 +102,13 @@ def init_pool(cfg: PoolConfig) -> PoolState:
         clock=jnp.float32(0.0),
         next_seq=jnp.float32(1.0),
         policy=jnp.int32(int(cfg.policy)),
+        alloc=jnp.zeros((s,), jnp.float32) if rz else None,
+        used=jnp.zeros((s,), jnp.float32) if rz else None,
+        rz_policy=jnp.int32(int(cfg.resize_policy)) if rz else None,
+        rz_min=jnp.float32(cfg.resize_min_mb) if rz else None,
+        acc_used=jnp.float32(0.0) if rz else None,
+        acc_alloc=jnp.float32(0.0) if rz else None,
+        bneck=jnp.int32(0) if rz else None,
     )
 
 
@@ -93,28 +124,50 @@ def _gd(clock, freq, cold_cost, size):
     return clock + freq * cold_cost / jnp.maximum(size, 1e-6)
 
 
-def _evict_prefix(p: PoolState, idle: jax.Array, deficit: jax.Array):
+def _evict_prefix(p: PoolState, idle: jax.Array, deficit: jax.Array,
+                  bytes_per_slot: jax.Array | None = None):
     """The minimal ``(priority, seq)``-ordered prefix of idle slots whose
     eviction covers ``deficit``: greedy eviction == sort + prefix-sum over
     freed bytes.  Returns ``(evict bool[S], freed f32)``.  Shared by the
     miss path of ``pool_step`` and by ``pool_resize`` — JAX<->oracle
     bit-equivalence depends on both sites evicting in the identical
-    order."""
+    order.  ``bytes_per_slot`` is what an eviction actually frees (the
+    post-shrink ``alloc`` when resize is on; defaults to ``size``) — the
+    eviction *order* never depends on it."""
+    sz = p.size if bytes_per_slot is None else bytes_per_slot
     pri = jnp.where(idle, _priority(p), _INF)       # only idle are evictable
     # order slots by (priority, seq): stable argsort of priority over a
     # seq-sorted permutation.
     by_seq = jnp.argsort(p.seq, stable=True)
     order = by_seq[jnp.argsort(pri[by_seq], stable=True)]
-    sz_ord = jnp.where(idle[order], p.size[order], 0.0)
+    sz_ord = jnp.where(idle[order], sz[order], 0.0)
     freed_before = jnp.cumsum(sz_ord) - sz_ord
     evict_ord = idle[order] & (freed_before < deficit - 1e-9)
     evict = jnp.zeros_like(p.valid).at[order].set(evict_ord)
-    freed = jnp.sum(jnp.where(evict, p.size, 0.0))
+    freed = jnp.sum(jnp.where(evict, sz, 0.0))
     return evict, freed
+
+
+def _shrink_pass(p: PoolState, idle: jax.Array, want: jax.Array):
+    """Vertical-scaling shrink pass for the miss path: run the registered
+    resize policy over the pool's slots and return ``(alloc_after f32[S],
+    reclaimed f32)``.  Works on both the single-pool ``[S]`` layout and
+    the batched ``[P, S]`` layout (scalars become ``[P, 1]`` columns so
+    broadcasting and ``axis=-1`` reductions line up)."""
+    batched = p.alloc.ndim == 2
+    col = (lambda x: x[:, None]) if batched else (lambda x: x)
+    ctx = ResizeCtx(used=p.used, alloc=p.alloc, size=p.size, idle=idle,
+                    valid=p.valid, min_mb=col(p.rz_min),
+                    deficit=col(jnp.maximum(want, 0.0)),
+                    free=col(p.free), capacity=col(p.capacity))
+    shrink = shrink_amounts(jnp, col(p.rz_policy), ctx)
+    reclaimed = jnp.sum(shrink, axis=-1)
+    return p.alloc - shrink, reclaimed
 
 
 def pool_step(p: PoolState, ev: Event) -> tuple[PoolState, jax.Array]:
     """Process one invocation.  Returns (new_state, outcome code)."""
+    rz = p.alloc is not None                        # resize on (trace-time)
     idle = p.valid & (p.busy_until <= ev.t)
     match = idle & (p.func_id == ev.func_id)
     any_hit = jnp.any(match)
@@ -123,18 +176,33 @@ def pool_step(p: PoolState, ev: Event) -> tuple[PoolState, jax.Array]:
     # ---- HIT branch: touch the matching idle container with lowest seq ----
     hit_slot = jnp.argmin(jnp.where(match, p.seq, _INF))
     new_freq = p.freq[hit_slot] + 1.0
+    hit_extra = {} if not rz else dict(
+        acc_used=p.acc_used + p.used[hit_slot],
+        acc_alloc=p.acc_alloc + p.alloc[hit_slot],
+        # a resident serving from a shrunken limit is a bottleneck event
+        bneck=p.bneck + (p.alloc[hit_slot]
+                         < p.size[hit_slot]).astype(jnp.int32),
+    )
     hit_state = p._replace(
         last_use=p.last_use.at[hit_slot].set(ev.t),
         freq=p.freq.at[hit_slot].set(new_freq),
         gd_pri=p.gd_pri.at[hit_slot].set(
             _gd(p.clock, new_freq, cold_cost, p.size[hit_slot])),
         busy_until=p.busy_until.at[hit_slot].set(ev.t + ev.warm),
+        **hit_extra,
     )
 
-    # ---- MISS branch: evict minimal (priority, seq)-prefix, then insert ----
-    deficit = ev.size - p.free
-    evict, freed = _evict_prefix(p, idle, deficit)
-    total_evictable = jnp.sum(jnp.where(idle, p.size, 0.0))
+    # ---- MISS branch: shrink residents toward observed usage (resize
+    # only), then evict the minimal (priority, seq)-prefix, then insert ----
+    if rz:
+        alloc1, reclaimed = _shrink_pass(p, idle, ev.size - p.free)
+        free1 = p.free + reclaimed
+    else:
+        alloc1, free1 = None, p.free
+    deficit = ev.size - free1
+    evict, freed = _evict_prefix(p, idle, deficit, alloc1)
+    total_evictable = jnp.sum(
+        jnp.where(idle, p.size if alloc1 is None else alloc1, 0.0))
 
     valid_after = p.valid & ~evict
     empty_exists = jnp.any(~valid_after)
@@ -151,6 +219,12 @@ def pool_step(p: PoolState, ev: Event) -> tuple[PoolState, jax.Array]:
         is_gd,
         jnp.maximum(p.clock, jnp.max(jnp.where(evict, p.gd_pri, -_INF))),
         p.clock)
+    miss_extra = {} if not rz else dict(
+        alloc=jnp.where(evict, 0.0, alloc1).at[ins].set(ev.size),
+        used=jnp.where(evict, 0.0, p.used).at[ins].set(ev.used),
+        acc_used=p.acc_used + ev.used,
+        acc_alloc=p.acc_alloc + ev.size,
+    )
     miss_state = p._replace(
         func_id=p.func_id.at[ins].set(ev.func_id),
         size=p.size.at[ins].set(ev.size),
@@ -160,9 +234,10 @@ def pool_step(p: PoolState, ev: Event) -> tuple[PoolState, jax.Array]:
         busy_until=p.busy_until.at[ins].set(ev.t + ev.cold),
         seq=p.seq.at[ins].set(p.next_seq),
         valid=valid_after.at[ins].set(True),
-        free=p.free + freed - ev.size,
+        free=free1 + freed - ev.size,
         clock=new_clock,
         next_seq=p.next_seq + 1.0,
+        **miss_extra,
     )
 
     # ---- select ----
@@ -189,8 +264,11 @@ def pool_step(p: PoolState, ev: Event) -> tuple[PoolState, jax.Array]:
 #       -> (evict bool[P,S], freed f32[P], ins i32[P],
 #           avail f32[P], empty_exists bool[P])
 #
-# where ``pri`` is already masked to +inf on non-idle slots, ``deficit``
-# is the bytes that must be freed (may be <= 0), ``evict`` is the minimal
+# where ``pri`` is already masked to +inf on non-idle slots, ``size`` is
+# the bytes an eviction frees (the post-shrink per-slot ``alloc`` on
+# resize-enabled lanes — it feeds byte accounting only, never the
+# eviction order), ``deficit`` is the bytes that must be freed (may be
+# <= 0), ``evict`` is the minimal
 # (priority, seq)-ordered idle prefix covering the deficit (identical
 # order to ``_evict_prefix``), ``freed``/``avail`` are evicted / total
 # evictable bytes, and ``ins``/``empty_exists`` locate the first slot
@@ -264,6 +342,7 @@ def pool_step_batch(p: PoolState, ev: Event, evict_place):
     backend swap cannot perturb the hit path.  Bitwise-identical to
     ``jax.vmap(pool_step)`` when the backend honours its contract.
     """
+    rz = p.alloc is not None                         # resize on (trace-time)
     P = p.func_id.shape[0]
     rows = jnp.arange(P)
     idle = p.valid & (p.busy_until <= ev.t)          # [P, S]
@@ -274,23 +353,41 @@ def pool_step_batch(p: PoolState, ev: Event, evict_place):
     # ---- HIT branch: touch the matching idle container with lowest seq ----
     hit_slot = jnp.argmin(jnp.where(match, p.seq, _INF), axis=-1)
     new_freq = p.freq[rows, hit_slot] + 1.0
+    hit_extra = {} if not rz else dict(
+        acc_used=p.acc_used + p.used[rows, hit_slot],
+        acc_alloc=p.acc_alloc + p.alloc[rows, hit_slot],
+        bneck=p.bneck + (p.alloc[rows, hit_slot]
+                         < p.size[rows, hit_slot]).astype(jnp.int32),
+    )
     hit_state = p._replace(
         last_use=p.last_use.at[rows, hit_slot].set(ev.t),
         freq=p.freq.at[rows, hit_slot].set(new_freq),
         gd_pri=p.gd_pri.at[rows, hit_slot].set(
             _gd(p.clock, new_freq, cold_cost, p.size[rows, hit_slot])),
         busy_until=p.busy_until.at[rows, hit_slot].set(ev.t + ev.warm),
+        **hit_extra,
     )
 
-    # ---- MISS branch: backend evicts the (priority, seq)-prefix --------
-    deficit = ev.size - p.free                       # [P]
+    # ---- MISS branch: shrink pass (resize only), then the backend
+    # evicts the (priority, seq)-prefix.  The backend's ``size`` argument
+    # is the bytes an eviction frees — the post-shrink ``alloc`` when
+    # resize is on — and never feeds the eviction *order*, so every
+    # registered backend (incl. the fused Pallas kernel) serves
+    # resize-enabled lanes unchanged. --------------------------------------
+    if rz:
+        alloc1, reclaimed = _shrink_pass(p, idle, ev.size - p.free)
+        free1 = p.free + reclaimed
+    else:
+        alloc1, free1 = None, p.free
+    deficit = ev.size - free1                        # [P]
     stats = SlotStats(last_use=p.last_use, freq=p.freq, gd_pri=p.gd_pri,
                       size=p.size, busy_until=p.busy_until)
     pri = jnp.where(idle,
                     replacement_priority(jnp, p.policy[:, None], stats),
                     _INF)
     evict, freed, ins, avail, empty_exists = evict_place(
-        pri, p.seq, p.size, idle, p.valid, deficit)
+        pri, p.seq, p.size if alloc1 is None else alloc1, idle, p.valid,
+        deficit)
 
     can_place = ((ev.size <= p.capacity + 1e-9)
                  & (avail >= deficit - 1e-9)
@@ -302,6 +399,12 @@ def pool_step_batch(p: PoolState, ev: Event, evict_place):
                     jnp.max(jnp.where(evict, p.gd_pri, -_INF), axis=-1)),
         p.clock)
     valid_after = p.valid & ~evict
+    miss_extra = {} if not rz else dict(
+        alloc=jnp.where(evict, 0.0, alloc1).at[rows, ins].set(ev.size),
+        used=jnp.where(evict, 0.0, p.used).at[rows, ins].set(ev.used),
+        acc_used=p.acc_used + ev.used,
+        acc_alloc=p.acc_alloc + ev.size,
+    )
     miss_state = p._replace(
         func_id=p.func_id.at[rows, ins].set(ev.func_id),
         size=p.size.at[rows, ins].set(ev.size),
@@ -312,9 +415,10 @@ def pool_step_batch(p: PoolState, ev: Event, evict_place):
         busy_until=p.busy_until.at[rows, ins].set(ev.t + ev.cold),
         seq=p.seq.at[rows, ins].set(p.next_seq),
         valid=valid_after.at[rows, ins].set(True),
-        free=p.free + freed - ev.size,
+        free=free1 + freed - ev.size,
         clock=new_clock,
         next_seq=p.next_seq + 1.0,
+        **miss_extra,
     )
 
     # ---- select ----
@@ -346,12 +450,19 @@ def pool_resize(p: PoolState, now: jax.Array,
     the cluster engine vmaps it over the stacked ``[pools, slots]`` axes,
     and ``WarmPool.resize`` is its sequential float32-mirrored twin.
     """
-    used = jnp.sum(jnp.where(p.valid, p.size, 0.0))
+    rz = p.alloc is not None
+    bytes_ = p.size if not rz else p.alloc           # what eviction frees
+    used = jnp.sum(jnp.where(p.valid, bytes_, 0.0))
     deficit = used - new_capacity
     idle = p.valid & (p.busy_until <= now)
-    evict, freed = _evict_prefix(p, idle, deficit)
+    evict, freed = _evict_prefix(p, idle, deficit, None if not rz else bytes_)
+    extra = {} if not rz else dict(
+        alloc=jnp.where(evict, 0.0, p.alloc),
+        used=jnp.where(evict, 0.0, p.used),
+    )
     return p._replace(
         valid=p.valid & ~evict,
         capacity=new_capacity,
         free=new_capacity - (used - freed),
+        **extra,
     )

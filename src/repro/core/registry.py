@@ -80,6 +80,36 @@ class RouteCtx(NamedTuple):
     chain_stage: object = None  # i32  stage within chain, -1 off
 
 
+class ResizeCtx(NamedTuple):
+    """Inputs available to a vertical-scaling (resize) decision.
+
+    A resize policy sees one pool's per-slot state under memory pressure
+    and proposes new per-resident memory limits; the engine then clamps
+    the proposal (never below ``max(min_mb, used)``, never above the
+    current ``alloc``, busy or empty slots untouched) and quantizes the
+    shrink to whole MB so f32 byte accounting stays exact in any
+    reduction order (the same quantized-trace contract the fused kernel
+    relies on).
+
+    Per-slot arrays are f32[slots] (the oracle passes f32 numpy arrays
+    over its live containers; the JAX engine passes traced arrays, with
+    an extra leading ``[pools]`` axis in the batched step).  The scalars
+    ``min_mb``/``deficit``/``free``/``capacity`` broadcast against the
+    slot axis in both layouts, so reductions inside a policy must use
+    ``xp.sum(..., axis=-1, keepdims=True)``.
+    """
+
+    used: object      # f32[S]  observed usage per resident (MB)
+    alloc: object     # f32[S]  current memory limit per resident (MB)
+    size: object      # f32[S]  launch footprint per resident (MB)
+    idle: object      # bool[S] resident and not busy (shrinkable)
+    valid: object     # bool[S] slot holds a resident
+    min_mb: object    # f32     configured floor for any limit
+    deficit: object   # f32     bytes still needed after free (>= 0)
+    free: object      # f32     pool free MB before shrinking
+    capacity: object  # f32     pool capacity MB
+
+
 class SlotStats(NamedTuple):
     """Per-container statistics a replacement policy may rank by.
 
@@ -188,9 +218,11 @@ class PolicyRegistry:
 
 ROUTING = PolicyRegistry("routing")
 REPLACEMENT = PolicyRegistry("replacement")
+RESIZE = PolicyRegistry("resize")
 
 register_routing = ROUTING.register
 register_replacement = REPLACEMENT.register
+register_resize_policy = RESIZE.register
 
 
 def routing_policies() -> list[str]:
@@ -201,6 +233,11 @@ def routing_policies() -> list[str]:
 def replacement_policies() -> list[str]:
     """Names of all registered replacement policies, in code order."""
     return REPLACEMENT.names()
+
+
+def resize_policies() -> list[str]:
+    """Names of all registered resize (vertical-scaling) policies."""
+    return RESIZE.names()
 
 
 # --------------------------------------------------------------------------
@@ -305,3 +342,86 @@ def replacement_priority(xp, policy, stats: SlotStats):
     for spec in specs[1:]:
         out = xp.where(policy == spec.code, spec.fn(xp, stats), out)
     return out
+
+
+# --------------------------------------------------------------------------
+# built-in resize (vertical-scaling) policies
+# --------------------------------------------------------------------------
+# A resize policy returns *proposed* per-slot limits; the engines clamp to
+# [max(min_mb, used), alloc] and quantize the shrink to whole MB, so a
+# policy never needs to enforce its own floors.
+
+@register_resize_policy("static")
+def _static(xp, ctx: ResizeCtx):
+    """No-op: every resident keeps its current limit (the KiSS-static
+    behaviour, but with utilization metrics recorded)."""
+    return ctx.alloc
+
+
+@register_resize_policy("fair_share")
+def _fair_share(xp, ctx: ResizeCtx):
+    """LaSS-style proportional reclamation: every idle resident gives up
+    the same *fraction* of its reclaimable headroom ``alloc - max(min_mb,
+    used)``, scaled so the total reclaimed just covers the deficit (or
+    everything reclaimable, whichever is smaller)."""
+    floor = xp.maximum(ctx.min_mb, ctx.used)
+    headroom = xp.where(ctx.idle & ctx.valid,
+                        xp.maximum(ctx.alloc - floor, xp.float32(0.0)),
+                        xp.float32(0.0))
+    total = xp.sum(headroom, axis=-1, keepdims=True)
+    ratio = xp.minimum(ctx.deficit / xp.maximum(total, xp.float32(1e-6)),
+                       xp.float32(1.0))
+    return ctx.alloc - headroom * ratio
+
+
+def resize_limits(xp, policy, ctx: ResizeCtx):
+    """Proposed per-slot limits for ``policy`` carried as *data*.
+
+    The vertical-scaling twin of :func:`replacement_priority`: a
+    ``where``-chain over every registered resize policy, so resize
+    policies vmap as an int array across sweep lanes.  The oracle holds a
+    concrete code and dispatches the same functions directly.
+    """
+    specs = RESIZE.specs()
+    out = specs[0].fn(xp, ctx)
+    for spec in specs[1:]:
+        out = xp.where(policy == spec.code, spec.fn(xp, ctx), out)
+    return out
+
+
+def shrink_amounts(xp, policy, ctx: ResizeCtx):
+    """Per-slot shrink (MB) the engines actually apply for ``policy``.
+
+    Runs the registered policy chain, then enforces the engine contract:
+    a limit never drops below ``max(min_mb, used)``, never grows, only
+    idle residents shrink, and the shrink is floored to whole MB so f32
+    byte accounting stays exact in any reduction order.  Both engines
+    call this one function, so a third-party resize policy is
+    automatically bit-identical across them.
+    """
+    proposal = resize_limits(xp, policy, ctx)
+    floor = xp.maximum(ctx.min_mb, ctx.used)
+    headroom = xp.maximum(ctx.alloc - floor, xp.float32(0.0))
+    shrink = xp.clip(ctx.alloc - proposal, xp.float32(0.0), headroom)
+    return xp.where(ctx.idle & ctx.valid, xp.floor(shrink),
+                    xp.float32(0.0))
+
+
+def observed_usage(xp, func_id, size):
+    """Deterministic per-function observed memory usage (MB).
+
+    The simulator has no real memory telemetry, so both engines derive a
+    resident's observed usage from the same pure function of its identity
+    and footprint: a Knuth-hash fraction in [~0.55, ~0.95) of the launch
+    footprint, floored to whole MB (keeping f32 sums of usage exact in
+    any reduction order on quantized traces), and at least ``min(size,
+    1)`` so a resident never observes zero.
+    """
+    import numpy as _np
+    with _np.errstate(over="ignore"):   # uint32 hash wraps by design
+        h = ((func_id.astype(xp.uint32) * xp.uint32(2654435761))
+             >> xp.uint32(20))
+    num = (h % xp.uint32(103)).astype(xp.float32) + xp.float32(140.0)
+    u = xp.floor(size.astype(xp.float32) * num * xp.float32(1.0 / 256.0))
+    return xp.maximum(u, xp.minimum(size.astype(xp.float32),
+                                    xp.float32(1.0)))

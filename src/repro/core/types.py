@@ -142,11 +142,21 @@ class Trace(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class PoolConfig:
-    """One warm pool."""
+    """One warm pool.
+
+    ``resize_policy`` (a registered resize-policy *code*, or ``None``)
+    turns on vertical scaling: under memory pressure the miss path first
+    shrinks idle residents toward observed usage (never below
+    ``max(resize_min_mb, used)``) and only evicts when shrinking cannot
+    cover the deficit.  ``None`` disables the feature entirely and
+    compiles the exact pre-resize programs.
+    """
 
     capacity_mb: float
     policy: Policy = Policy.LRU
     max_slots: int = 1024  # fixed slot count for the JAX pool
+    resize_policy: int | None = None
+    resize_min_mb: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)

@@ -69,7 +69,10 @@ every registered policy automatically shows up in
 ``routing_policies()``-driven sweeps and benchmarks.
 
 Replacement policies work the same with ``@register_replacement`` over
-``SlotStats`` (lower priority = evicted first).
+``SlotStats`` (lower priority = evicted first), and vertical-scaling
+resize policies with ``@register_resize_policy`` over ``ResizeCtx``
+(per-slot observed usage in, new per-resident memory limits out) —
+enable one with ``Scenario(..., resize="fair_share")``.
 
 The historical entrypoints (``simulate_kiss_jax``, ``sweep_cluster``,
 ...) still work as deprecation shims and are equivalence-tested against
@@ -77,23 +80,25 @@ this API.  See also ``docs/architecture.md`` (engine layering, the
 f32-mirroring contract) and ``docs/scenarios.md`` (runnable cookbook).
 """
 from ..core.continuum import Autoscale, Failures
-from ..core.registry import (REPLACEMENT, ROUTING, PolicySpec, RouteCtx,
-                             SlotStats, register_replacement,
+from ..core.registry import (REPLACEMENT, RESIZE, ROUTING, PolicySpec,
+                             ResizeCtx, RouteCtx, SlotStats,
+                             register_replacement, register_resize_policy,
                              register_routing, replacement_policies,
-                             routing_policies)
+                             resize_policies, routing_policies)
 from .api import simulate, sweep
 from .chains import ChainMetrics, Chains
 from .result import SUMMARY_KEYS, Result
-from .scenario import Scenario
+from .scenario import Resize, Scenario
 from .telemetry import (Telemetry, TelemetrySeries, run_manifest,
                         trace_fingerprint, write_manifest)
 from . import policies  # registers cost_model, slack_aware  # noqa: F401
 
 __all__ = [
     "Autoscale", "ChainMetrics", "Chains", "Failures", "REPLACEMENT",
-    "ROUTING", "PolicySpec", "Result", "RouteCtx", "SUMMARY_KEYS",
-    "Scenario", "SlotStats", "Telemetry", "TelemetrySeries",
-    "register_replacement", "register_routing", "replacement_policies",
+    "RESIZE", "ROUTING", "PolicySpec", "Resize", "ResizeCtx", "Result",
+    "RouteCtx", "SUMMARY_KEYS", "Scenario", "SlotStats", "Telemetry",
+    "TelemetrySeries", "register_replacement", "register_resize_policy",
+    "register_routing", "replacement_policies", "resize_policies",
     "routing_policies", "run_manifest", "simulate", "sweep",
     "trace_fingerprint", "write_manifest",
 ]

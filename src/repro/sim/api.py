@@ -93,7 +93,8 @@ def _wrap(scenario: Scenario, trace: Trace, raw, extras: dict,
                   epoch_active=extras.get("active"),
                   node_up=extras.get("node_up"),
                   invalidated=extras.get("invalidated"),
-                  telemetry=tel, chains=ch, run_info=info, epoch_t=ep_t)
+                  telemetry=tel, chains=ch, run_info=info, epoch_t=ep_t,
+                  vertical=extras.get("vertical"))
 
 
 def simulate(scenario: Scenario, trace: Trace, *, engine: str = "jax",
@@ -144,7 +145,8 @@ def simulate(scenario: Scenario, trace: Trace, *, engine: str = "jax",
             "rng_seed": rng_seed,
             "trace_fingerprint": trace_fingerprint(trace)}
     fracs = None
-    bare = fails is None and telw is None and plan is None
+    rz_on = scenario.resize is not None
+    bare = fails is None and telw is None and plan is None and not rz_on
     if asc is None:
         if chunk is not None and engine == "jax":
             out = _simulate_cluster_chunked_jax(
@@ -159,7 +161,7 @@ def simulate(scenario: Scenario, trace: Trace, *, engine: str = "jax",
                 out = _simulate_cluster_ref(cfg, trace, rng_seed,
                                             telemetry=telw, chains=plan)
             raw, extras = (out, {}) if telw is None and plan is None \
-                else out
+                and not rz_on else out
         elif engine == "jax":
             raw, extras = _simulate_cluster_failures_jax(
                 cfg, fails, trace, rng_seed, mode, telemetry=telw,
@@ -242,8 +244,8 @@ def sweep(trace: Trace, scenarios: Iterable[Scenario], *,
         return [simulate(s, trace, engine="ref", rng_seed=rng_seed)
                 for s in scenarios]
     plans = [_chain_plan(s, trace) for s in scenarios]
-    groups: dict[tuple[int, int, int | None, bool, int | None, bool, str],
-                 list[int]] = {}
+    groups: dict[tuple[int, int, int | None, bool, int | None, bool, bool,
+                       str], list[int]] = {}
     for i, s in enumerate(scenarios):
         epoch = s.autoscale.epoch_events if s.autoscale else None
         # failure-free lanes keep the cheap unmasked programs (static and
@@ -251,19 +253,22 @@ def sweep(trace: Trace, scenarios: Iterable[Scenario], *,
         # vmap their schedules as data; telemetry lanes bucket by window
         # length (the stacked accumulator shape); chain lanes bucket by
         # chains on/off only — deadlines are per-lane *data*, so
-        # {no-deadline, tight, loose} variants share one program; the
-        # step mode is a static formulation choice, so mixed-mode sweeps
-        # bucket by it too
+        # {no-deadline, tight, loose} variants share one program; resize
+        # lanes bucket by on/off only — which policy and what floor are
+        # per-lane data, so a {static, fair_share} grid shares one
+        # program; the step mode is a static formulation choice, so
+        # mixed-mode sweeps bucket by it too
         failing = s.failures is not None
         groups.setdefault(
             (s.n_nodes, s.max_slots, epoch, failing, _telw(s),
-             plans[i] is not None, modes[i]),
+             plans[i] is not None, s.resize is not None, modes[i]),
             []).append(i)
     results: list[Result | None] = [None] * len(scenarios)
     base_info = {"engine": engine, "chunk_events": chunk,
                  "devices": dev, "rng_seed": rng_seed,
                  "trace_fingerprint": trace_fingerprint(trace)}
-    for (_, _, epoch, failing, telw, chained, gmode), idxs in groups.items():
+    for ((_, _, epoch, failing, telw, chained, rz, gmode),
+         idxs) in groups.items():
         cfgs = [scenarios[i].to_cluster_config() for i in idxs]
         chs = [plans[i] for i in idxs] if chained else None
         info = {**base_info, "mode": gmode}
@@ -279,7 +284,7 @@ def sweep(trace: Trace, scenarios: Iterable[Scenario], *,
                                       devices=dev)
             for i, out in zip(idxs, outs):
                 raw, extras = (out, {}) if telw is None and not chained \
-                    else out
+                    and not rz else out
                 results[i] = _wrap(scenarios[i], trace, raw, extras, None,
                                    telw, info, plans[i])
         elif epoch is None:

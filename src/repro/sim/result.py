@@ -73,6 +73,14 @@ from .telemetry import TelemetrySeries
 #:   chain-complete latency stats, seconds;
 #: * ``deadline_miss_pct``    — completed chains late at their final
 #:   stage (or with any dropped stage), percent — the SLO headline.
+#:
+#: Vertical scaling (inert zeros when the scenario has no ``resize=``
+#: knob):
+#:
+#: * ``utilization_ratio``    — sum(observed used) / sum(allocated) over
+#:   every served event, in [0, 1] — 1.0 means no stranded memory;
+#: * ``bottleneck_events``    — hits served by a container whose limit
+#:   was shrunk below its full footprint (the cost side of shrinking).
 SUMMARY_KEYS = (
     "cold_start_pct", "drop_pct", "hit_rate",
     "small_cold_start_pct", "large_cold_start_pct",
@@ -85,6 +93,7 @@ SUMMARY_KEYS = (
     "n_windows",
     "n_chains", "chain_latency_mean_s", "chain_p95_s",
     "deadline_miss_pct",
+    "utilization_ratio", "bottleneck_events",
 )
 
 
@@ -135,6 +144,10 @@ class Result:
     #: f32[E] event time at each epoch boundary (autoscaled runs only) —
     #: the time axis for the spawn/retire/re-split timeline tracks
     epoch_t: np.ndarray | None = None
+    #: vertical-scaling run totals (``None`` unless the scenario set
+    #: ``resize=``): ``{"acc_used_mb", "acc_alloc_mb", "bottlenecks"}``
+    #: per pool in the engines' stacked node-major [2N] layout
+    vertical: dict | None = None
 
     # -- per-event arrays --------------------------------------------------
     @property
@@ -278,6 +291,34 @@ class Result:
         """Percent of completed chains that missed their deadline."""
         return self.chain_metrics().deadline_miss_pct
 
+    # -- vertical-scaling views (Scenario resize=...) -----------------------
+    @property
+    def utilization_ratio(self) -> float:
+        """Observed-used over allocated memory, summed over every served
+        event: how much of what the pools *reserved* the functions
+        actually touched.  The resize policies' objective — shrinking
+        limits toward usage pushes this toward 1.0.  The per-pool f32
+        accumulators reduce host-side in f64 (deterministic regardless of
+        pool count), and scenarios without ``resize=`` report 0.0."""
+        if self.vertical is None:
+            return 0.0
+        alloc = float(np.sum(self.vertical["acc_alloc_mb"],
+                             dtype=np.float64))
+        if alloc <= 0.0:
+            return 0.0
+        used = float(np.sum(self.vertical["acc_used_mb"],
+                            dtype=np.float64))
+        return used / alloc
+
+    @property
+    def bottleneck_events(self) -> int:
+        """Hits served by a container whose memory limit had been shrunk
+        below its full footprint — each one is a potential performance
+        cliff the shrinking traded for density (0 without ``resize=``)."""
+        if self.vertical is None:
+            return 0
+        return int(np.sum(self.vertical["bottlenecks"], dtype=np.int64))
+
     def to_trace_events(self, path: str | None = None) -> dict:
         """Chrome trace-event / Perfetto JSON for this run: counter
         tracks per telemetry window plus outage/autoscale timeline
@@ -328,6 +369,8 @@ class Result:
                             if self.chains is not None else 0.0),
             "deadline_miss_pct": (self.chains.deadline_miss_pct
                                   if self.chains is not None else 0.0),
+            "utilization_ratio": self.utilization_ratio,
+            "bottleneck_events": self.bottleneck_events,
         })
         # the key contract must hold even under `python -O` (a bare assert
         # would let key drift ship silently into results/BENCH_*.json)

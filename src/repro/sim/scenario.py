@@ -29,9 +29,40 @@ import numpy as np
 
 from ..cluster.engine import STEP_MODES
 from ..core.continuum import Autoscale, ClusterConfig, Failures
-from ..core.registry import REPLACEMENT, ROUTING
+from ..core.registry import REPLACEMENT, RESIZE, ROUTING
 from .chains import Chains
 from .telemetry import Telemetry
+
+
+@dataclasses.dataclass(frozen=True)
+class Resize:
+    """Vertical scaling: per-container dynamic memory limits.
+
+    With a resize policy configured, both engines track each resident's
+    observed memory usage next to its allocated limit, and the miss path
+    under memory pressure first *shrinks* idle residents toward that
+    usage — per the registered policy, never below ``max(min_mb, used)``
+    — and only evicts when shrinking cannot cover the deficit.  A hit
+    served by a container whose limit was shrunk below its full footprint
+    counts as a *bottleneck event* (the vertical-scaling analogue of a
+    performance cliff), and ``Result.utilization_ratio`` /
+    ``Result.bottleneck_events`` expose the trade-off.
+
+    ``policy`` is a name registered via
+    ``repro.core.registry.register_resize_policy`` (built-ins:
+    ``"static"`` — propose-no-change control — and ``"fair_share"`` —
+    LaSS-style proportional reclamation of idle headroom).  ``min_mb``
+    is the per-container limit floor every proposal is clamped to.
+    """
+
+    policy: str = "fair_share"
+    min_mb: float = 0.0
+
+    def __post_init__(self):
+        object.__setattr__(self, "policy", RESIZE.spec(self.policy).name)
+        object.__setattr__(self, "min_mb", float(self.min_mb))
+        if self.min_mb < 0.0:
+            raise ValueError(f"min_mb must be >= 0, got {self.min_mb}")
 
 
 def _is_seq(x) -> bool:
@@ -90,6 +121,15 @@ class Scenario:
     metrics, and routing policies see each event's remaining slack via
     ``RouteCtx.chain_slack``.
 
+    ``resize`` (a :class:`Resize`, a registered resize-policy name, or a
+    kwargs dict; ``None`` = off) turns on vertical scaling — per-
+    container dynamic memory limits: under memory pressure both engines
+    first shrink idle residents toward observed usage and only evict
+    when shrinking cannot cover the deficit.
+    ``Result.utilization_ratio`` / ``Result.bottleneck_events`` expose
+    the resulting trade-off.  ``None`` compiles the exact pre-resize
+    programs.
+
     The JAX scan-step formulation (|STEP_MODES|) is deliberately *not*
     part of the scenario — all modes are numerically identical, so it is
     an execution knob on :func:`repro.sim.simulate` / ``sweep``, not a
@@ -108,6 +148,7 @@ class Scenario:
     failures: Failures | None = None
     telemetry: Telemetry | None = None
     chains: Chains | None = None
+    resize: Resize | None = None
     name: str = ""
 
     def __post_init__(self):
@@ -191,6 +232,17 @@ class Scenario:
                     "chains must be a Chains, a kwargs dict, or None, "
                     f"got {c!r}")
             object.__setattr__(self, "chains", c)
+        if self.resize is not None:
+            r = self.resize
+            if isinstance(r, str):
+                r = Resize(policy=r)
+            elif isinstance(r, dict):
+                r = Resize(**r)
+            if not isinstance(r, Resize):
+                raise ValueError(
+                    "resize must be a Resize, a registered resize-policy "
+                    f"name, a kwargs dict, or None, got {r!r}")
+            object.__setattr__(self, "resize", r)
         # canonicalize policies to registered names (raises on unknown)
         object.__setattr__(
             self, "replacement",
@@ -250,8 +302,9 @@ class Scenario:
         asc = "-autoscaled" if self.autoscale is not None else ""
         fail = "-failures" if self.failures is not None else ""
         ch = "-chains" if self.chains is not None else ""
+        rz = "-resize" if self.resize is not None else ""
         return (f"{kind}-{self.n_nodes}n-{self.routing}"
-                f"-{self.replacement}{asc}{fail}{ch}")
+                f"-{self.replacement}{asc}{fail}{ch}{rz}")
 
     def to_cluster_config(self) -> ClusterConfig:
         """The engine-level config both engines consume."""
@@ -262,7 +315,11 @@ class Scenario:
             routing=ROUTING.resolve(self.routing),
             cloud_rtt_s=self.cloud_rtt_s,
             cloud_cold_prob=self.cloud_cold_prob,
-            max_slots=self.max_slots)
+            max_slots=self.max_slots,
+            resize_policy=(None if self.resize is None
+                           else RESIZE.resolve(self.resize.policy)),
+            resize_min_mb=(0.0 if self.resize is None
+                           else self.resize.min_mb))
 
 
 # the mode list derives from the engine's STEP_MODES tuple (docstrings

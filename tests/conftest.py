@@ -7,6 +7,7 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import numpy as np
 import pytest
 
+from repro.core.registry import REPLACEMENT, RESIZE, ROUTING
 from repro.core.types import Trace
 
 
@@ -35,3 +36,22 @@ def quantized_trace(rng, n_events: int, n_small: int = 30, n_large: int = 8,
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True)
+def _isolated_registries():
+    """Policy registries are process-global; a test registering a policy
+    would otherwise leak it into every later test (and into their vmapped
+    switch tables).  Snapshot all three registries and roll back any
+    additions afterwards, firing the registries' invalidation hooks (JIT
+    cache clears) so no compiled switch still indexes a removed code."""
+    regs = (ROUTING, REPLACEMENT, RESIZE)
+    snap = [(list(r._specs), dict(r._by_name)) for r in regs]
+    yield
+    for r, (specs, by_name) in zip(regs, snap):
+        if len(r._specs) != len(specs):
+            r._specs[:] = specs
+            r._by_name.clear()
+            r._by_name.update(by_name)
+            for hook in r._hooks:
+                hook()

@@ -1,0 +1,238 @@
+"""Property-based invariant suite over both engines and all policy axes.
+
+Four invariants hold for EVERY (routing, replacement, resize) policy
+triple on every quantized trace, on both engines:
+
+* **conservation** — after every event, each pool's ``free`` plus the
+  occupied bytes of its valid slots equals its capacity, bitwise in f32
+  (quantized traces keep every quantity an exact small integer);
+* **slot bounds**   — with vertical scaling on, every valid slot keeps
+  ``used <= alloc <= size`` (a shrink can never cut below observed
+  usage, and a limit can never exceed the declared footprint);
+* **outcome counts** — one outcome per event, every outcome a known
+  code, and the summary's total equals the trace length;
+* **engine equality** — the jitted JAX scan and the sequential numpy
+  oracle produce identical ``summary()`` dicts (the 32-key stable
+  surface) for static, failure-injected, autoscaled, and resize-enabled
+  scenarios alike.
+
+The deterministic core always runs; when ``hypothesis`` is installed the
+same invariants are additionally fuzzed over random traces and random
+registered-policy triples (mirroring ``test_simulator_props.py``).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from conftest import quantized_trace
+from repro.cluster.engine import (_cloud_vec, _make_step, cluster_events,
+                                  init_cluster)
+from repro.core.continuum import Autoscale
+from repro.core.pool_ref import WarmPool, _f32
+from repro.core.types import DROP, HIT, MISS, ClassMetrics, PoolConfig
+from repro.sim import (Resize, Scenario, register_resize_policy,
+                       register_routing, resize_policies, routing_policies,
+                       simulate, sweep)
+
+MODES = ("gather", "vmap", "fused")
+RESIZES = (None, "static", Resize("fair_share", min_mb=0.0),
+           Resize("fair_share", min_mb=48.0))
+
+
+def _trace(n=400, seed=3):
+    return quantized_trace(np.random.default_rng(seed), n)
+
+
+def _scenario(kind, resize):
+    node_mb = (768.0, 1024.0)
+    kw = dict(routing="size_aware", max_slots=32, resize=resize, name=kind)
+    if kind == "static":
+        return Scenario.cluster(node_mb, **kw)
+    if kind == "failures":
+        return Scenario.cluster(node_mb, failures=((900.0, 1800.0, 1),),
+                                **kw)
+    if kind == "autoscale":
+        return Scenario.cluster(node_mb,
+                                autoscale=Autoscale(epoch_events=128,
+                                                    gain=0.1), **kw)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# conservation + slot bounds + outcome counts, JAX engine (all step modes)
+# ---------------------------------------------------------------------------
+
+def _scan_invariants(cfg, trace, mode):
+    """Scan the trace through the real cluster step, emitting per-event
+    (free + occupied) totals and a slot-bound violation count."""
+    n = cfg.n_nodes
+    events = cluster_events(trace, n, resize=cfg.resize_policy is not None)
+    pools0 = init_cluster(cfg)
+    step = _make_step(jnp.int32(int(cfg.routing)),
+                      jnp.asarray(cfg.unified, bool), _cloud_vec(cfg),
+                      n, mode)
+
+    def s(p, ev):
+        p1, (node, outcome) = step(p, ev)
+        occ = p1.size if p1.alloc is None else p1.alloc
+        occ_b = jnp.sum(jnp.where(p1.valid, occ, jnp.float32(0.0)),
+                        axis=-1)
+        bad = p1.free < jnp.float32(0.0)
+        if p1.alloc is not None:
+            bad = bad | jnp.any(
+                p1.valid & ((p1.used > p1.alloc) | (p1.alloc > p1.size)),
+                axis=-1)
+        return p1, (p1.free + occ_b, jnp.sum(bad.astype(jnp.int32)),
+                    outcome)
+
+    _, (tot, viol, outcome) = jax.lax.scan(s, pools0, events)
+    return (np.asarray(tot), np.asarray(viol), np.asarray(outcome),
+            np.asarray(pools0.capacity))
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("resize", RESIZES,
+                         ids=("off", "static", "fair", "fair48"))
+def test_jax_conservation_bounds_counts(mode, resize):
+    trace = _trace()
+    cfg = _scenario("static", resize).to_cluster_config()
+    tot, viol, outcome, cap = _scan_invariants(cfg, trace, mode)
+    # free + occupied == capacity after every event, bitwise in f32
+    assert np.array_equal(tot, np.broadcast_to(cap, tot.shape))
+    assert int(viol.sum()) == 0           # used <= alloc <= size, free >= 0
+    assert outcome.shape == (len(trace),)
+    assert np.isin(outcome, (HIT, MISS, DROP)).all()
+    assert int(np.bincount(outcome, minlength=3).sum()) == len(trace)
+
+
+# ---------------------------------------------------------------------------
+# conservation + slot bounds, numpy oracle (checked after every event)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("resize", RESIZES,
+                         ids=("off", "static", "fair", "fair48"))
+def test_oracle_conservation_bounds(resize, rng):
+    trace = quantized_trace(rng, 300)
+    rz = None if resize is None else Resize(resize) if isinstance(
+        resize, str) else resize
+    cfg = PoolConfig(
+        capacity_mb=512.0, max_slots=24,
+        resize_policy=(None if rz is None else rz.policy),
+        resize_min_mb=(0.0 if rz is None else rz.min_mb))
+    pool, metrics = WarmPool(cfg), ClassMetrics()
+    served = {"hit": 0, "miss": 0, "drop": 0}
+    for i in range(len(trace)):
+        out = pool.access(float(trace.t[i]), int(trace.func_id[i]),
+                          float(trace.size_mb[i]),
+                          float(trace.warm_dur[i]),
+                          float(trace.cold_dur[i]), metrics)
+        served[out] += 1
+        occ = sum((c.size_mb if rz is None else c.alloc_mb)
+                  for c in pool.containers)
+        assert _f32(_f32(pool.free_mb) + _f32(occ)) == cfg.capacity_mb
+        assert pool.free_mb >= 0.0 and pool.occupancy_ok()
+        if rz is not None:
+            assert all(c.used_mb <= c.alloc_mb <= c.size_mb
+                       for c in pool.containers)
+    assert sum(served.values()) == len(trace)
+    assert (metrics.hits, metrics.misses, metrics.drops) == (
+        served["hit"], served["miss"], served["drop"])
+
+
+# ---------------------------------------------------------------------------
+# JAX <-> oracle summary equality across every scenario family
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("kind", ("static", "failures", "autoscale"))
+@pytest.mark.parametrize("resize", (None, Resize("fair_share", 48.0)),
+                         ids=("off", "fair48"))
+def test_engine_summary_equality(kind, resize, mode):
+    trace = _trace()
+    sc = _scenario(kind, resize)
+    ref = simulate(sc, trace, engine="ref")
+    assert simulate(sc, trace, mode=mode).summary() == ref.summary()
+
+
+@pytest.mark.parametrize("kind", ("static", "failures"))
+def test_chunked_summary_equality(kind):
+    trace = _trace()
+    sc = _scenario(kind, Resize("fair_share", 32.0))
+    ref = simulate(sc, trace, engine="ref")
+    assert simulate(sc, trace, chunk_events=101).summary() == ref.summary()
+
+
+def test_sweep_matches_simulate_mixed_resize():
+    trace = _trace()
+    scs = [_scenario("static", None),
+           _scenario("static", "static"),
+           _scenario("static", Resize("fair_share", 0.0)),
+           _scenario("autoscale", Resize("fair_share", 48.0)),
+           _scenario("failures", None)]
+    for sc, res in zip(scs, sweep(trace, scs)):
+        assert res.summary() == simulate(sc, trace, engine="ref").summary()
+
+
+# ---------------------------------------------------------------------------
+# registry isolation (the conftest fixture rolls back test registrations)
+# ---------------------------------------------------------------------------
+
+def test_registry_isolation_registers_leakers():
+    @register_routing("leak_probe_routing", needs_free=False)
+    def leak_probe_routing(xp, ctx):
+        return xp.argmax(ctx.node_up)
+
+    @register_resize_policy("leak_probe_resize")
+    def leak_probe_resize(xp, ctx):
+        return ctx.alloc
+
+    assert "leak_probe_routing" in routing_policies()
+    assert "leak_probe_resize" in resize_policies()
+
+
+def test_registry_isolation_rolled_back():
+    # runs after the test above (pytest executes file order): the probe
+    # policies must be gone or test registrations leak process-globally
+    assert "leak_probe_routing" not in routing_policies()
+    assert "leak_probe_resize" not in resize_policies()
+
+
+# ---------------------------------------------------------------------------
+# hypothesis extras: the same invariants over random traces and random
+# registered-policy triples (optional, mirroring test_simulator_props.py)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    _policy_triples = st.tuples(
+        st.sampled_from(("sticky", "size_aware", "least_loaded",
+                         "power_of_two")),
+        st.sampled_from(("lru", "freq", "greedy_dual")),
+        st.sampled_from((None, "static", "fair_share")),
+        st.sampled_from((0.0, 32.0, 64.0)))
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**16), n_events=st.integers(50, 250),
+           triple=_policy_triples)
+    def test_random_policy_triples_hold_invariants(seed, n_events, triple):
+        routing, repl, rz, min_mb = triple
+        trace = quantized_trace(np.random.default_rng(seed), n_events)
+        resize = None if rz is None else Resize(rz, min_mb=min_mb)
+        sc = Scenario.cluster((768.0, 1024.0), routing=routing,
+                              replacement=repl, max_slots=32,
+                              resize=resize, name="fuzz")
+        cfg = sc.to_cluster_config()
+        tot, viol, outcome, cap = _scan_invariants(cfg, trace, "gather")
+        assert np.array_equal(tot, np.broadcast_to(cap, tot.shape))
+        assert int(viol.sum()) == 0
+        assert outcome.shape == (len(trace),)
+        assert (simulate(sc, trace).summary()
+                == simulate(sc, trace, engine="ref").summary())

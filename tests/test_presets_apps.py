@@ -1,0 +1,91 @@
+"""Coverage for the shared cluster presets and the app-population
+synthesizer — both previously exercised only indirectly via benchmarks.
+Preset shapes must validate through the ``Scenario`` front door (a drifted
+preset would poison every pinned benchmark claim built on it), and the
+synthetic app population must keep the paper's Eq.(1) structure honest."""
+import numpy as np
+import pytest
+
+from conftest import quantized_trace
+from repro.cluster.presets import het16_cluster
+from repro.sim import Scenario, simulate
+from repro.workloads.apps import AppPopulation, synthesize_apps
+
+
+def test_het16_shape_and_split():
+    cfg = het16_cluster("sticky")
+    assert cfg.n_nodes == 16
+    assert cfg.node_mb == (1024.0, 1024.0, 2048.0, 6144.0) * 4
+    assert cfg.small_frac == (0.8,) * 16
+    assert cfg.unified == (False,) * 16
+    assert cfg.max_slots == 256
+    big = het16_cluster("size_aware", big_mb=8192.0)
+    assert big.node_mb[3] == 8192.0 and big.node_mb.count(8192.0) == 4
+
+
+def test_het16_validates_through_scenario(rng):
+    """The preset lifts into a Scenario (so every field validator runs)
+    and the lifted scenario simulates — both engines, same summaries."""
+    sc = Scenario.from_cluster(het16_cluster("size_aware"), name="het16")
+    assert sc.to_cluster_config().n_nodes == 16
+    trace = quantized_trace(rng, 200)
+    assert (simulate(sc, trace).summary()
+            == simulate(sc, trace, engine="ref").summary())
+
+
+def test_het16_rejects_unknown_routing():
+    with pytest.raises((KeyError, ValueError)):
+        het16_cluster("no_such_policy")
+
+
+def test_apps_population_structure():
+    pop = synthesize_apps(n_apps=400, seed=1)
+    n_apps = len(pop.app_memory_mb)
+    assert n_apps == 400
+    # every function belongs to a real app; apps have 1..5 functions
+    counts = np.bincount(pop.func_app, minlength=n_apps)
+    assert pop.func_app.min() >= 0 and pop.func_app.max() < n_apps
+    assert counts.min() >= 1 and counts.max() <= 5
+    assert len(pop.func_duration) == len(pop.func_app) == counts.sum()
+    # app duration is exactly the sum of its functions' durations (f32)
+    app_dur = np.zeros(n_apps, np.float32)
+    np.add.at(app_dur, pop.func_app, pop.func_duration)
+    assert np.array_equal(app_dur, pop.app_duration)
+
+
+def test_apps_memory_is_bimodal_and_positive():
+    pop = synthesize_apps(n_apps=2000, seed=0, large_frac=0.15)
+    mem = pop.app_memory_mb
+    assert (mem > 0).all()
+    large = (mem >= 350.0).mean()
+    assert 0.10 < large < 0.22          # ~15% large apps
+    small = mem[mem < 350.0]
+    assert 80.0 < np.median(small) < 160.0   # lognormal median ~110-120
+
+
+def test_apps_eq1_function_memory():
+    """Eq.(1): FuncMemory = AppMemory * FuncDuration / AppDuration — so a
+    function's share is its time share, and an app's functions partition
+    its memory."""
+    pop = synthesize_apps(n_apps=300, seed=2)
+    fm = pop.function_memory()
+    assert fm.shape == pop.func_duration.shape
+    assert (fm > 0).all()
+    # no function estimate exceeds its app's memory
+    assert (fm <= pop.app_memory_mb[pop.func_app] * (1 + 1e-5)).all()
+    # per-app sums reconstruct the app memory (time shares sum to 1)
+    n_apps = len(pop.app_memory_mb)
+    per_app = np.zeros(n_apps, np.float64)
+    np.add.at(per_app, pop.func_app, fm.astype(np.float64))
+    np.testing.assert_allclose(per_app, pop.app_memory_mb, rtol=1e-4)
+
+
+def test_apps_single_function_app_gets_full_memory():
+    pop = synthesize_apps(n_apps=300, seed=2)
+    fm = pop.function_memory()
+    counts = np.bincount(pop.func_app, minlength=len(pop.app_memory_mb))
+    solo = counts[pop.func_app] == 1
+    assert solo.any()
+    np.testing.assert_allclose(fm[solo],
+                               pop.app_memory_mb[pop.func_app][solo],
+                               rtol=1e-5)
